@@ -1,0 +1,91 @@
+"""End-to-end throughput + memory — paper Fig.13/15/16 and Table 1 analogues.
+
+*tokens per GPU-second* (paper Eq.3) becomes *tokens per chip-second*:
+    perf = N_tokens / (N_chips · T_step_roofline)
+
+Per OPT model × batch size we compute, from the analytic decode-step
+roofline on TPU v5e (weights + KV-cache traffic dominate decode):
+
+  * dense deployment: minimum chips s.t. bf16 weights + KV cache fit HBM,
+    step time = memory term of (weights/chips + cache/chips + activations)
+  * Flash-LLM deployment: Tiled-CSL weights at 80% sparsity (measured
+    ~0.8/2 bytes-ratio incl. index overhead) — fewer chips, smaller traffic
+
+plus Table-1-style peak memory per config. This mirrors the paper's claim
+structure: same model, fewer chips, higher tokens/chip-s.
+
+CSV: name,us_per_call,derived.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro import configs
+from repro.core import roofline
+
+HBM_PER_CHIP = 16e9          # v5e
+SEQ_IN, SEQ_OUT = 64, 512    # the paper's workload (§6.3)
+
+
+def _kv_cache_bytes(cfg, batch: int, seq: int) -> float:
+    per_tok = 0
+    for i in range(cfg.n_layers):
+        if cfg.layer_kind(i) != "attn":
+            continue
+        if cfg.attn_kind == "mla":
+            per_tok += (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+        else:
+            eff_seq_frac = 1.0
+            per_tok += 2 * cfg.n_kv * cfg.head_dim * 2 * eff_seq_frac
+    return per_tok * batch * seq
+
+
+def _min_chips(total_bytes: float) -> int:
+    chips = 1
+    while total_bytes / chips > HBM_PER_CHIP * 0.9:  # 10% headroom
+        chips *= 2
+    return chips
+
+
+def decode_step_time(weight_bytes: float, cache_bytes: float, chips: int,
+                     flops: float) -> float:
+    terms = roofline.RooflineTerms(
+        flops=flops, hbm_bytes=weight_bytes + cache_bytes,
+        collective_bytes=0.0, chips=chips, model_flops=flops)
+    return terms.step_time_s
+
+
+def run(full: bool = False) -> List[str]:
+    rows: List[str] = []
+    sparsity = 0.8
+    bytes_ratio_sparse = 4 * (1 - sparsity) * 1.05 / 2  # words/dense-bf16
+    for model in ("opt_30b", "opt_66b", "opt_175b"):
+        cfg = configs.get(model)
+        n_params = cfg.param_count()
+        w_dense = n_params * 2.0
+        w_sparse = w_dense * bytes_ratio_sparse
+        for batch in (8, 16, 32, 64):
+            seq = SEQ_IN + SEQ_OUT
+            cache = _kv_cache_bytes(cfg, batch, seq)
+            act = batch * cfg.d_model * 4 * 8  # rough decode activations
+            flops = 2.0 * n_params * batch
+
+            chips_d = _min_chips(w_dense + cache + act)
+            chips_s = _min_chips(w_sparse + cache + act)
+            t_d = decode_step_time(w_dense, cache, chips_d, flops)
+            t_s = decode_step_time(w_sparse, cache, chips_s, flops)
+            # tokens per chip-second (Eq.3): batch tokens per step
+            tps_d = batch / (chips_d * t_d)
+            tps_s = batch / (chips_s * t_s)
+            name = f"e2e_{model}_bs{batch}"
+            rows.append(
+                f"{name}_dense,{t_d * 1e6:.1f},"
+                f"chips={chips_d};tok_per_chip_s={tps_d:.0f};"
+                f"mem_gb={(w_dense + cache + act) / 1e9:.1f}")
+            rows.append(
+                f"{name}_flashllm,{t_s * 1e6:.1f},"
+                f"chips={chips_s};tok_per_chip_s={tps_s:.0f};"
+                f"mem_gb={(w_sparse + cache + act) / 1e9:.1f};"
+                f"speedup_per_chip={tps_s / tps_d:.2f}")
+    return rows

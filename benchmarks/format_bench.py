@@ -1,0 +1,51 @@
+"""Tiled-CSL format benchmarks: encode throughput, compression ratio,
+padding overhead, and reorder conflict scores vs sparsity.
+
+Validates the format-level numbers everything else relies on:
+  * bytes ratio vs dense bf16 (the Load-as-Sparse win): 4B/nz words
+  * measured pad overhead (the IMBALANCE constant in launch/specs.py)
+  * sublane conflict score: reorder=none vs interleave vs greedy (Alg.3)
+
+CSV: name,us_per_call,derived.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import tiled_csl
+
+
+def run(full: bool = False) -> List[str]:
+    rows: List[str] = []
+    rng = np.random.default_rng(0)
+    m = k = 2048 if not full else 8192
+    for s in (0.5, 0.7, 0.8, 0.9, 0.95):
+        a = rng.standard_normal((m, k), dtype=np.float32)
+        a[rng.random((m, k)) < s] = 0.0
+        t0 = time.perf_counter()
+        t = tiled_csl.encode(a)
+        enc_us = (time.perf_counter() - t0) * 1e6
+        ratio = t.nbytes_sparse / t.nbytes_dense
+        w0 = np.asarray(t.words[0, 0])
+        nz0 = int(np.asarray(t.nnz[0, 0]))
+        score_i = tiled_csl.sublane_conflict_score(w0, nz0, t.k_tb)
+        t_none = tiled_csl.encode(a, reorder="none")
+        wn = np.asarray(t_none.words[0, 0])
+        score_n = tiled_csl.sublane_conflict_score(wn, nz0, t_none.k_tb)
+        rows.append(
+            f"tiledcsl_encode_{m}x{k}_s{int(s * 100)},{enc_us:.0f},"
+            f"bytes_ratio={ratio:.3f};pad_overhead={t.pad_overhead:.3f};"
+            f"conflict_interleave={score_i:.2f};conflict_none={score_n:.2f};"
+            f"mb_per_s={(m * k * 4 / 2 ** 20) / (enc_us / 1e6):.0f}")
+    # roundtrip sanity at 80%
+    a = rng.standard_normal((1024, 1024), dtype=np.float32)
+    a[rng.random(a.shape) < 0.8] = 0.0
+    t = tiled_csl.encode(a)
+    err = float(np.max(np.abs(tiled_csl.decode(t) - a)))
+    rel = err / float(np.max(np.abs(a)))
+    rows.append(f"tiledcsl_roundtrip_relerr,{rel * 1e6:.3f},bf16_rounding")
+    return rows

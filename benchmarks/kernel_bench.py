@@ -1,0 +1,127 @@
+"""Kernel benchmarks — paper Fig.3 / Fig.9 / Fig.12 analogues.
+
+Fig.9: SpMM throughput on the paper's OPT MatMul shapes × batch sizes ×
+sparsities {70%, 80%, 90%}, LSCD vs dense.
+
+This container is CPU-only, so two measurement modes are reported per shape:
+
+  * ``roofline`` — the TPU-v5e analytic terms (the paper's own Fig.5
+    methodology, Eq.1/Eq.2): memory-bound step time for dense vs LSCD,
+    using the *measured* encoding bytes (incl. real padding overhead) of an
+    actually-encoded random-sparse matrix — not just the formula.
+  * ``wall`` — measured CPU wall time of the XLA reference path (dense vs
+    decompress+matmul), reported for completeness; kernel-level wall truth
+    on TPU comes from the Pallas path which cannot lower here.
+
+CSV columns: name,us_per_call,derived.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import roofline, tiled_csl
+from repro.kernels import ops, ref
+
+# The paper's four decoder MatMuls (M, K as multiples of hidden h):
+#   QKV-proj: [3h, h]   O-proj: [h, h]   MLP1: [4h, h]   MLP2: [h, 4h]
+_OPT_HIDDEN = {"opt-30b": 7168, "opt-66b": 9216, "opt-175b": 12288}
+
+
+def paper_matmul_shapes(model: str) -> List[Tuple[str, int, int]]:
+    h = _OPT_HIDDEN[model]
+    return [("qkv", 3 * h, h), ("oproj", h, h),
+            ("mlp1", 4 * h, h), ("mlp2", h, 4 * h)]
+
+
+def _time_it(fn, *args, reps: int = 3) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+_ENCODE_CACHE = {}
+
+
+def _encoded(m: int, k: int, sparsity: float, rng):
+    """Encode a row-subsampled stand-in (per-tile stats are M-invariant);
+    cached by (m_enc, k, sparsity) — n and the full m reuse it."""
+    m_enc = min(m, 2048)
+    key = (m_enc, k, sparsity)
+    if key in _ENCODE_CACHE:
+        return _ENCODE_CACHE[key]
+    a = rng.standard_normal((m_enc, k), dtype=np.float32)
+    a[rng.random((m_enc, k)) < sparsity] = 0.0
+    mp = -(-m_enc // 128) * 128
+    kp = -(-k // 128) * 128
+    ap = np.zeros((mp, kp), np.float32)
+    ap[:m_enc, :k] = a
+    t = tiled_csl.encode(ap)
+    _ENCODE_CACHE[key] = (ap, t)
+    return ap, t
+
+
+def bench_shape(m: int, k: int, n: int, sparsity: float, *,
+                measure_wall: bool, rng) -> List[str]:
+    """One (shape, sparsity) cell -> CSV rows."""
+    rows = []
+    ap, t = _encoded(m, k, sparsity, rng)
+    pad = t.pad_overhead
+
+    dense = roofline.dense_gemm_terms(m, k, n)
+    lscd = roofline.lscd_kernel_terms(m, k, n, sparsity, pad_overhead=pad)
+    name = f"spmm_m{m}_k{k}_n{n}_s{int(sparsity * 100)}"
+    # memory-bound step times (the binding term for skinny N) and effective
+    # TFLOP/s — the paper's Fig.9 y-axis.
+    t_dense = dense.step_time_s
+    t_lscd = lscd.step_time_s
+    rows.append(f"{name}_roofline_dense,{t_dense * 1e6:.3f},"
+                f"tflops={2 * m * k * n / t_dense / 1e12:.2f}")
+    rows.append(f"{name}_roofline_lscd,{t_lscd * 1e6:.3f},"
+                f"tflops={2 * m * k * n / t_lscd / 1e12:.2f};"
+                f"speedup={t_dense / t_lscd:.2f};pad={pad:.3f};"
+                f"ci_dense={roofline.dense_gemm_ci(m, n):.1f};"
+                f"ci_lscd={roofline.lscd_ci(m, n, sparsity):.1f}")
+
+    if measure_wall:
+        kp = ap.shape[1]
+        b = jnp.asarray(rng.standard_normal((kp, n), dtype=np.float32))
+        ad = jnp.asarray(ap)
+        f_dense = jax.jit(lambda aa, bb: ref.spmm_dense_oracle(aa, bb))
+        f_sparse = jax.jit(lambda words, nnz, bb: ref.spmm_ref(
+            tiled_csl.TiledCSL(words, nnz, t.shape, t.m_tb, t.k_tb, t.dtype),
+            bb))
+        us_d = _time_it(f_dense, ad, b)
+        us_s = _time_it(f_sparse, t.words, t.nnz, b)
+        rows.append(f"{name}_wall_dense_xla,{us_d:.1f},cpu_ref")
+        rows.append(f"{name}_wall_sparse_xla,{us_s:.1f},cpu_ref")
+    return rows
+
+
+def run(full: bool = False) -> List[str]:
+    """Fig.9 grid (reduced by default: one model + the paper's sparsities)."""
+    rng = np.random.default_rng(0)
+    rows = []
+    models = list(_OPT_HIDDEN) if full else ["opt-30b"]
+    batches = (8, 16, 32, 64) if full else (8, 32)
+    for model in models:
+        for mm_name, m, k in paper_matmul_shapes(model):
+            for n in batches:
+                for s in (0.7, 0.8, 0.9):
+                    rows += bench_shape(m, k, n, s, measure_wall=False,
+                                        rng=rng)
+    # Fig.12 analogue: sparsity fixed 80%, sweep N to find the crossover.
+    h = _OPT_HIDDEN["opt-30b"]
+    for n in (8, 16, 32, 64, 128, 256, 512, 1024):
+        rows += bench_shape(4 * h, h, n, 0.8, measure_wall=False, rng=rng)
+    # Wall-clock sanity cell (small, CPU-measurable)
+    rows += bench_shape(4096, 4096, 16, 0.8, measure_wall=True, rng=rng)
+    return rows

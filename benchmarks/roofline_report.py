@@ -1,0 +1,164 @@
+"""§Roofline report: three terms per (arch × shape × mesh) from dry-run JSONs.
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun), computes
+
+  compute_s    = HLO_FLOPs / (chips · 197e12)
+  memory_s     = HLO_bytes / (chips · 819e9)
+  collective_s = collective_bytes / 50e9        (per-chip link traffic)
+
+plus MODEL_FLOPS/HLO_FLOPs and the dominant term, and emits a markdown
+table (stdout) + machine-readable CSV rows for benchmarks.run.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro import configs
+from repro.core import roofline
+
+RESULTS_DIR = os.path.abspath(os.path.join(
+    os.path.dirname(__file__), "..", "results", "dryrun"))
+
+# Measured Tiled-CSL bytes ratio vs dense bf16 at 80% incl. padding
+LSCD_BYTES_RATIO = 0.44
+
+
+def load_records(pattern: str = "*.json") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _cache_bytes(cfg, batch: int, seq: int) -> float:
+    """Irreducible KV/state cache bytes (bf16) for one full read."""
+    total = 0.0
+    for i in range(cfg.n_layers):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            if cfg.attn_kind == "mla":
+                total += (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2.0
+            else:
+                s_eff = 1.0
+                if cfg.local_window is not None:
+                    s_eff = min(cfg.local_window / seq, 1.0)
+                total += 2 * cfg.n_kv * cfg.head_dim * 2.0 * s_eff
+        elif kind == "ssm":
+            total += 0.0  # O(1) state, negligible vs seq-scaled caches
+        elif kind == "rglru":
+            total += 0.0
+    return total * batch * seq
+
+
+def irreducible_bytes(rec: dict) -> float:
+    """Weights-once + cache-once lower bound on HBM traffic per step."""
+    try:
+        cfg = configs.get(rec["arch"])
+    except Exception:  # noqa: BLE001
+        return 0.0
+    shape = configs.SHAPES[rec["shape"]]
+    n_active = cfg.active_param_count()
+    w_bytes = n_active * (4.0 if shape.kind == "train" else 2.0)
+    if rec.get("weight_mode") == "sparse_xla" or rec.get("lscd"):
+        w_bytes *= LSCD_BYTES_RATIO
+    if shape.kind == "train":
+        # params read (fwd+bwd) + grad write + optimizer moments rw, f32
+        opt_bytes = n_active * 4.0 * 6
+        act = shape.global_batch * shape.seq_len * cfg.d_model * 2.0 \
+            * cfg.n_layers * 2          # residual save+restore
+        return 2 * w_bytes + opt_bytes + act
+    if shape.kind == "prefill":
+        act = shape.global_batch * shape.seq_len * cfg.d_model * 2.0 \
+            * cfg.n_layers
+        return w_bytes + _cache_bytes(cfg, shape.global_batch,
+                                      shape.seq_len) + act
+    return w_bytes + _cache_bytes(cfg, shape.global_batch, shape.seq_len)
+
+
+def terms_from_record(rec: dict, *, lscd: bool = False
+                      ) -> Optional[roofline.RooflineTerms]:
+    """lscd=True replaces the dense weight traffic with the measured
+    compressed bytes (the Pallas-kernel accounting; DESIGN.md §4)."""
+    if rec.get("status") != "ok":
+        return None
+    cost = rec.get("cost", {})
+    coll = rec.get("collective_bytes", {}) or {}
+    hbm = float(cost.get("bytes accessed", 0.0)) * rec["chips"]
+    label = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}/{rec['weight_mode']}"
+    if lscd:
+        cfg = configs.get(rec["arch"])
+        shape = configs.SHAPES[rec["shape"]]
+        w_dense = cfg.active_param_count() * 2.0
+        hbm = hbm - w_dense * (1.0 - LSCD_BYTES_RATIO)
+        label = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}/lscd_kernel"
+        rec = dict(rec, lscd=True)
+    return roofline.RooflineTerms(
+        flops=float(cost.get("flops", 0.0)) * rec["chips"],
+        hbm_bytes=hbm,
+        collective_bytes=sum(coll.values()),
+        chips=rec["chips"],
+        label=label,
+        model_flops=float(rec.get("model_flops", 0.0)),
+        model_bytes=irreducible_bytes(rec),
+        collective_breakdown=coll,
+    )
+
+
+def markdown_table(recs: List[dict], *, lscd_rows: bool = True) -> str:
+    lines = [
+        "| arch | shape | mesh | mode | compute_s | memory_s | collective_s "
+        "| bound | useful_flops | roofline_frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        variants = [(rec["weight_mode"], terms_from_record(rec))]
+        if (lscd_rows and rec.get("shape", "").startswith(("decode", "long"))
+                and rec.get("weight_mode") == "dense"
+                and rec.get("status") == "ok"):
+            variants.append(("lscd_kernel", terms_from_record(rec, lscd=True)))
+        for mode, t in variants:
+            if t is None:
+                lines.append(
+                    f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                    f"{mode} | — | — | — | "
+                    f"ERROR: {rec.get('error', '?')[:60]} | — | — |")
+                continue
+            lines.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                f"{mode} | {t.compute_s:.3e} | {t.memory_s:.3e} | "
+                f"{t.collective_s:.3e} | {t.bound} | "
+                f"{t.useful_flops_ratio:.2f} | {t.roofline_fraction:.2f} |")
+    return "\n".join(lines)
+
+
+def csv_rows(recs: List[dict]) -> List[str]:
+    rows = []
+    for rec in recs:
+        t = terms_from_record(rec)
+        if t is None:
+            continue
+        name = (f"roofline_{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+                f"_{rec['weight_mode']}")
+        rows.append(
+            f"{name},{t.step_time_s * 1e6:.1f},"
+            f"bound={t.bound};compute_s={t.compute_s:.3e};"
+            f"memory_s={t.memory_s:.3e};collective_s={t.collective_s:.3e};"
+            f"useful={t.useful_flops_ratio:.3f}")
+    return rows
+
+
+def main() -> None:
+    recs = load_records()
+    if not recs:
+        print("no dry-run records found — run python -m repro.launch.dryrun")
+        return
+    print(markdown_table(recs))
+
+
+if __name__ == "__main__":
+    main()

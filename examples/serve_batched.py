@@ -1,0 +1,53 @@
+"""Continuous-batching serving demo over any assigned architecture.
+
+Shows the production serving loop: a queue of requests with ragged prompt
+lengths drained through a fixed pool of decode slots — the throughput
+mechanism the paper's memory savings feed (§6.3: bigger effective batch on
+the same hardware).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py --arch qwen2_moe_a2_7b
+      (any id from repro.configs.ARCH_IDS; smoke-sized weights)
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import transformer
+from repro.serving import batching
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="tinyllama_1_1b",
+                choices=configs.ARCH_IDS)
+ap.add_argument("--requests", type=int, default=10)
+ap.add_argument("--slots", type=int, default=3)
+args = ap.parse_args()
+
+cfg = configs.smoke(args.arch)
+if cfg.n_codebooks:
+    raise SystemExit("audio archs need codebook prompts; use the engine API")
+params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+
+b = batching.ContinuousBatcher(params, cfg, n_slots=args.slots, max_len=48)
+rng = np.random.default_rng(0)
+lens = rng.integers(3, 12, args.requests)
+for uid in range(args.requests):
+    b.submit(uid, rng.integers(0, cfg.vocab, lens[uid]).astype(np.int64),
+             max_new_tokens=int(rng.integers(4, 10)))
+
+t0 = time.time()
+steps = 0
+while True:
+    finished = b.step()
+    steps += 1
+    for uid, toks in finished.items():
+        print(f"[{time.time() - t0:5.2f}s] request {uid} done "
+              f"({len(toks)} tokens): {toks}")
+    if not b.queue and all(s is None for s in b.slots):
+        break
+print(f"{args.requests} ragged requests over {args.slots} slots "
+      f"in {steps} engine steps — slots were reused "
+      f"{args.requests - args.slots} times without pausing the loop")

@@ -1,0 +1,117 @@
+"""End-to-end driver: train -> prune -> mask-preserving finetune ->
+reformat to Tiled-CSL -> serve with continuous batching.
+
+This is the paper's full lifecycle (§6.3.1 + §5) at container scale:
+a ~25M-param llama-style model trained for a few hundred steps on a
+learnable synthetic grammar (pass --full for a ~100M model if you have
+the patience on CPU), pruned to 80% with the paper's layer plan, briefly
+retrained with masks, then served sparse.
+
+Run:  PYTHONPATH=src python examples/train_prune_serve.py [--full]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pruning, tiled_csl
+from repro.models import nn, transformer
+from repro.models.config import ModelConfig
+from repro.serving import batching
+from repro.training import data as data_mod
+from repro.training import optimizer as opt_mod
+from repro.training import train_loop
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true", help="~100M params")
+ap.add_argument("--steps", type=int, default=300)
+args = ap.parse_args()
+
+cfg = ModelConfig(
+    name="e2e-demo", family="dense",
+    n_layers=8 if args.full else 4,
+    d_model=768 if args.full else 320,
+    n_heads=12 if args.full else 8,
+    n_kv=4 if args.full else 2,
+    d_ff=2048 if args.full else 1024,
+    vocab=2048, mlp_kind="swiglu", norm_kind="rmsnorm")
+
+# ---- 1. train ----------------------------------------------------------
+opt = opt_mod.AdamW(lr=opt_mod.cosine_schedule(1e-3, 20, args.steps))
+state = train_loop.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+print(f"model: {nn.count_params(state.params) / 1e6:.1f}M params")
+stream = data_mod.SyntheticLM(cfg.vocab, 128, 4, seed=0)
+step = jax.jit(train_loop.make_train_step(cfg, opt), donate_argnums=(0,))
+t0 = time.time()
+for s in range(args.steps):
+    batch = jax.tree.map(jnp.asarray, stream.next_batch())
+    state, m = step(state, batch)
+    if (s + 1) % 50 == 0:
+        print(f"  step {s + 1}: loss {float(m['loss']):.4f} "
+              f"({(time.time() - t0) / (s + 1):.2f} s/step)")
+loss_dense = float(m["loss"])
+
+# ---- 2. prune (paper layer plan: first/last quarter FFNs dense) --------
+plan = pruning.opt_style_plan(cfg.n_layers, 0.8)
+def make_masks(params):
+    def f(path, x):
+        key = jax.tree_util.keystr(path)
+        if x.ndim == 3 and any(k in key for k in ("'gate'", "'up'", "'down'",
+                                                  "'wq'", "'wk'", "'wv'",
+                                                  "'wo'")):
+            per = []
+            for layer in range(x.shape[0]):
+                s = plan[layer] if "'mlp'" in key else 0.8
+                per.append(pruning.unstructured_mask(jnp.abs(x[layer]), s)
+                           if s > 0 else jnp.ones_like(x[layer], dtype=bool))
+            return jnp.stack(per)
+        return None
+    return jax.tree_util.tree_map_with_path(f, params)
+
+masks = make_masks(state.params)
+pruned = opt_mod.apply_masks(state.params, masks)
+eval_batch = jax.tree.map(jnp.asarray, stream.next_batch())
+loss_fn = jax.jit(lambda p, b: train_loop.loss_fn(p, b, cfg)[0])
+loss_pruned = float(loss_fn(pruned, eval_batch))
+
+# ---- 3. mask-preserving finetune (retraining-based pruning) ------------
+ft_opt = opt_mod.AdamW(lr=3e-4)
+ft_state = train_loop.TrainState(pruned, ft_opt.init(pruned),
+                                 jnp.zeros((), jnp.int32))
+ft_step = jax.jit(train_loop.make_train_step(cfg, ft_opt, masks=masks),
+                  donate_argnums=(0,))
+for s in range(args.steps // 3):
+    batch = jax.tree.map(jnp.asarray, stream.next_batch())
+    ft_state, m = ft_step(ft_state, batch)
+loss_ft = float(loss_fn(ft_state.params, eval_batch))
+print(f"loss: dense {loss_dense:.4f} -> pruned {loss_pruned:.4f} "
+      f"-> finetuned {loss_ft:.4f}  (the paper's accuracy-recovery shape)")
+
+# ---- 4. reformat to Tiled-CSL + serve -----------------------------------
+# Only the attention matrices were pruned in EVERY layer (the paper plan
+# keeps first/last-quarter FFNs dense — encoding a dense matrix in
+# Tiled-CSL would double its bytes, so dense-plan weights stay dense,
+# exactly like the paper's FasterTransformer integration).
+sparse_params = pruning.sparsify_params(
+    ft_state.params, 0.0,   # already pruned; encode as-is
+    should_sparsify=lambda n: any(
+        k in n for k in ("'wq'", "'wk'", "'wv'", "'wo'")))
+csl = [l for l in jax.tree.leaves(
+    sparse_params, is_leaf=lambda x: isinstance(x, tiled_csl.TiledCSL))
+    if isinstance(l, tiled_csl.TiledCSL)]
+print(f"Tiled-CSL: {sum(t.nbytes_dense for t in csl) / 2 ** 20:.1f} MiB "
+      f"-> {sum(t.nbytes_sparse for t in csl) / 2 ** 20:.1f} MiB weights")
+
+b = batching.ContinuousBatcher(sparse_params, cfg, n_slots=4, max_len=64)
+rng = np.random.default_rng(1)
+for uid in range(8):
+    b.submit(uid, rng.integers(0, cfg.vocab, 8).astype(np.int64), 12)
+t0 = time.time()
+done = b.run_to_completion()
+dt = time.time() - t0
+n_tok = sum(len(v) for v in done.values())
+print(f"served {len(done)} requests / {n_tok} tokens in {dt:.1f}s "
+      f"({n_tok / dt:.1f} tok/s) with sparse weights")

@@ -1,0 +1,60 @@
+"""LSCD sparse linear layer — the FasterTransformer-integration analogue.
+
+The paper extends FasterTransformer's ``DenseWeight``/``cuBlasMMWrapper`` so
+every weight can be either dense (→ cuBLAS) or Tiled-CSL (→ Flash-LLM SpMM).
+This module is our equivalent: one ``linear()`` entry point that dispatches on
+the weight's runtime type:
+
+  * dense jax.Array         → XLA dot (the "cuBLAS" path)
+  * tiled_csl.TiledCSL      → LSCD SpMM (Pallas on TPU / XLA-ref elsewhere)
+
+Orientation is the paper's: weights are stored ``[out, in]`` = A[M, K]; the
+activation matrix is transposed to ``[in, tokens]`` = B[K, N] so that N is
+the (skinny) token/batch dimension — §2.2's "Skinny MatMul".
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tiled_csl
+from repro.kernels import ops
+
+
+def linear(w, x: jax.Array, b: Optional[jax.Array] = None,
+           *, backend: str = "auto") -> jax.Array:
+    """y[..., out] = x[..., in] @ W^T + b.
+
+    ``w`` is either a dense [out, in] array or a TiledCSL of logical shape
+    [out_padded, in_padded] (tile-aligned; padding sliced off here).
+    """
+    if isinstance(w, tiled_csl.TiledCSL):
+        lead = x.shape[:-1]
+        k_in = x.shape[-1]
+        xt = x.reshape(-1, k_in).T                       # B = [in, tokens]
+        if t_needs_pad := (w.shape[1] != k_in):
+            xt = jnp.pad(xt, ((0, w.shape[1] - k_in), (0, 0)))
+        y = ops.spmm(w, xt.astype(x.dtype), out_dtype=x.dtype,
+                     backend=backend)                    # [out_pad, tokens]
+        y = y.T.reshape(*lead, w.shape[0])
+        out_dim = b.shape[0] if b is not None else None
+        if out_dim is not None and out_dim != w.shape[0]:
+            y = y[..., :out_dim]
+        return y + b.astype(y.dtype) if b is not None else y
+    # dense path
+    y = jnp.dot(x, w.T.astype(x.dtype))
+    return y + b.astype(y.dtype) if b is not None else y
+
+
+def linear_logical_out(w, declared_out: int, x: jax.Array,
+                       b: Optional[jax.Array] = None, *,
+                       backend: str = "auto") -> jax.Array:
+    """Like :func:`linear` but slices the output to ``declared_out`` even
+    without a bias present (TiledCSL pads out-dim to the tile multiple)."""
+    y = linear(w, x, b, backend=backend)
+    if y.shape[-1] != declared_out:
+        y = y[..., :declared_out]
+    return y

@@ -1,0 +1,90 @@
+"""Public jit'd wrappers around the LSCD SpMM kernel.
+
+``spmm`` is the framework-facing op: handles N padding/tile selection,
+backend dispatch (Pallas on TPU / interpret for validation / XLA reference
+on CPU), and a custom VJP (grad flows to the dense activation only — the
+Tiled-CSL weight is an inference-time format; training uses masked dense
+weights, see ``core/pruning.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tiled_csl
+from repro.kernels import ref as ref_mod
+from repro.kernels import spmm as spmm_mod
+
+Backend = Literal["auto", "pallas", "interpret", "xla"]
+
+
+def _pick_n_tb(n: int) -> int:
+    """Tile N like the paper §5: N_TB = 8/16/32/64 for small batch, 128 cap.
+
+    (Paper uses N_TB up to 64 on A100; TPU lanes are 128 wide so we allow a
+    128 cap for large-N shapes.)
+    """
+    for cand in (8, 16, 32, 64, 128):
+        if n <= cand:
+            return cand
+    return 128
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def spmm(t: tiled_csl.TiledCSL,
+         b: jax.Array,
+         *,
+         out_dtype=None,
+         backend: Backend = "auto",
+         n_tb: int | None = None) -> jax.Array:
+    """C[M, N] = A_tiled_csl[M, K] @ B[K, N] (Load-as-Sparse, Compute-as-Dense).
+
+    backend:
+      auto      — Pallas on TPU, XLA reference elsewhere (full-model CPU runs).
+      pallas    — force the TPU kernel (interpret=False).
+      interpret — Pallas kernel body on CPU (correctness validation).
+      xla       — decompress-then-matmul reference path.
+    """
+    out_dtype = out_dtype or b.dtype
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        return ref_mod.spmm_ref(t, b, out_dtype=out_dtype)
+
+    n = b.shape[1]
+    tb = n_tb or _pick_n_tb(n)
+    n_pad = -(-n // tb) * tb
+    if n_pad != n:
+        b = jnp.pad(b, ((0, 0), (0, n_pad - n)))
+    out = spmm_mod.lscd_spmm(
+        t, b, n_tb=tb, out_dtype=out_dtype,
+        interpret=(backend == "interpret"))
+    return out[:, :n] if n_pad != n else out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def spmm_diff(t: tiled_csl.TiledCSL, b: jax.Array) -> jax.Array:
+    """Differentiable-in-B SpMM (weights are a frozen inference format)."""
+    return spmm(t, b)
+
+
+def _spmm_fwd(t, b):
+    return spmm_diff(t, b), None
+
+
+def _spmm_bwd(t, _res, g):
+    # dB = A^T @ dC; use the XLA reference transpose (backward runs on the
+    # training path where weights are dense+masked anyway — this exists for
+    # API completeness, e.g. activation-gradient probes through a served model).
+    a = tiled_csl.decode_jax(t).astype(jnp.float32)
+    return (jnp.dot(a.T, g.astype(jnp.float32)).astype(g.dtype),)
+
+
+spmm_diff.defvjp(_spmm_fwd, _spmm_bwd)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Flash-LLM LSCD SpMM kernel.
+
+``spmm_ref`` is THE correctness oracle every Pallas sweep asserts against.
+It is also the ``sparse_xla`` full-model execution path on backends where the
+TPU kernel cannot lower (this CPU container): XLA materialises the dense
+weight (HBM round-trip) before the matmul — exactly the traffic penalty the
+fused kernel removes on real hardware.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tiled_csl
+
+
+def spmm_dense_oracle(a_dense: jax.Array, b: jax.Array,
+                      out_dtype=jnp.float32) -> jax.Array:
+    """C = A @ B with the original (pre-encoding) dense A. Ground truth."""
+    return jnp.dot(a_dense.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def spmm_ref(t: tiled_csl.TiledCSL, b: jax.Array,
+             out_dtype=jnp.float32) -> jax.Array:
+    """C = decode(A_sparse) @ B — decompress-then-matmul reference.
+
+    Numerically this is what the kernel computes (bf16-rounded values,
+    f32 accumulation), so kernel sweeps compare against it with tight
+    tolerances; vs ``spmm_dense_oracle`` only the bf16 value rounding of
+    the encoding differs.
+    """
+    a = tiled_csl.decode_jax(t).astype(jnp.float32)
+    return jnp.dot(a, b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,86 @@
+"""Serving launcher (CLI): continuous-batching engine over a (optionally
+Tiled-CSL sparse) model — the paper's end-to-end deployment path.
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch tinyllama_1_1b --smoke --sparsity 0.8 --requests 8
+
+Loads/creates weights, optionally prunes + reformats to Tiled-CSL (the
+paper's weight reformatting tool), then drains a synthetic request queue
+through the slot-based continuous batcher, reporting tokens/sec and the
+weight-bytes saving.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.core import pruning, tiled_csl
+from repro.distributed import fault_tolerance as ft
+from repro.models import transformer, nn
+from repro.serving import batching
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sparsity", type=float, default=None)
+    ap.add_argument("--balanced", action="store_true",
+                    help="tile-balanced pruning (zero pad overhead)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--ckpt", default=None, help="restore params from dir")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
+    params = transformer.init_model(jax.random.PRNGKey(args.seed), cfg)
+    if args.ckpt:
+        mgr = ft.CheckpointManager(args.ckpt)
+        params, _ = mgr.restore(params)
+
+    n_dense = nn.count_params(params)
+    if args.sparsity:
+        t0 = time.time()
+        params = pruning.sparsify_params(
+            params, args.sparsity,
+            should_sparsify=lambda n: any(
+                k in n for k in ("'wq'", "'wk'", "'wv'", "'wo'", "'gate'",
+                                 "'up'", "'down'")),
+            balanced=args.balanced)
+        csl = [l for l in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, tiled_csl.TiledCSL))
+            if isinstance(l, tiled_csl.TiledCSL)]
+        sp_bytes = sum(t.nbytes_sparse for t in csl)
+        de_bytes = sum(t.nbytes_dense for t in csl)
+        print(f"reformatted {len(csl)} weights to Tiled-CSL in "
+              f"{time.time() - t0:.1f}s: {de_bytes / 2 ** 20:.1f} MiB dense "
+              f"-> {sp_bytes / 2 ** 20:.1f} MiB sparse "
+              f"({sp_bytes / de_bytes:.2f}x)")
+
+    b = batching.ContinuousBatcher(params, cfg, n_slots=args.slots,
+                                   max_len=args.max_len)
+    rng = np.random.default_rng(args.seed)
+    for uid in range(args.requests):
+        plen = int(rng.integers(4, min(16, args.max_len - args.max_new)))
+        b.submit(uid, rng.integers(0, cfg.vocab, plen).astype(np.int64),
+                 args.max_new)
+    t0 = time.time()
+    done = b.run_to_completion()
+    dt = time.time() - t0
+    n_tokens = sum(len(v) for v in done.values())
+    print(f"served {len(done)} requests / {n_tokens} tokens in {dt:.2f}s "
+          f"({n_tokens / dt:.1f} tok/s, params={n_dense / 1e6:.1f}M)")
+    for uid in sorted(done)[:3]:
+        print(f"  req {uid}: {done[uid][:8]}...")
+
+
+if __name__ == "__main__":
+    main()

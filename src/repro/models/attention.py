@@ -1,0 +1,254 @@
+"""GQA attention with RoPE / M-RoPE, causal + sliding-window masks, KV cache.
+
+Covers: deepseek-coder (GQA kv=8), tinyllama (kv=4), qwen2 (kv=2 + QKV bias),
+recurrentgemma local attention (kv=1, window), qwen2-vl (M-RoPE),
+musicgen (MHA kv=32), qwen-moe attention sub-blocks.
+
+Weights are stored [out, in] (paper A[M,K] orientation) and may be dense
+arrays or Tiled-CSL — ``sparse_linear.linear`` dispatches per weight.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_linear
+from repro.distributed import sharding as dist_sharding
+from repro.models import nn, rope
+from repro.models.config import ModelConfig
+
+NEG_INF = -2.3819763e38  # large negative for bf16-safe masking
+
+
+def init_attention(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = nn.split_keys(key, 4)
+    p = {
+        "wq": {"w": nn.dense_init(ks[0], h * hd, d, dtype)},
+        "wk": {"w": nn.dense_init(ks[1], kv * hd, d, dtype)},
+        "wv": {"w": nn.dense_init(ks[2], kv * hd, d, dtype)},
+        "wo": {"w": nn.dense_init(ks[3], d, h * hd, dtype)},
+    }
+    if cfg.qkv_bias:
+        p["wq"]["b"] = nn.zeros_init((h * hd,), dtype)
+        p["wk"]["b"] = nn.zeros_init((kv * hd,), dtype)
+        p["wv"]["b"] = nn.zeros_init((kv * hd,), dtype)
+    return p
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    kv, hd = cfg.n_kv, cfg.head_dim
+    if cfg.local_window is not None:
+        max_len = min(max_len, cfg.local_window)
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+    }
+
+
+def _project_qkv(params, x, cfg: ModelConfig, backend: str):
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = sparse_linear.linear_logical_out(
+        params["wq"]["w"], h * hd, x, params["wq"].get("b"), backend=backend)
+    k = sparse_linear.linear_logical_out(
+        params["wk"]["w"], kv * hd, x, params["wk"].get("b"), backend=backend)
+    v = sparse_linear.linear_logical_out(
+        params["wv"]["w"], kv * hd, x, params["wv"].get("b"), backend=backend)
+    B, S = x.shape[0], x.shape[1]
+    q = q.reshape(B, S, h, hd)
+    k = k.reshape(B, S, kv, hd)
+    v = v.reshape(B, S, kv, hd)
+    if S > 1:
+        # Train/prefill: keep q/k/v batch-sharded (+ heads over model when
+        # divisible) — GSPMD otherwise replicates the batch (§Perf iter 4).
+        # Decode (S == 1) must NOT pin heads to model: the cache shards on
+        # the head-dim fallback axis, and a heads-vs-hd mismatch inserts a
+        # per-step psum over the scores (§Perf iteration 9).
+        q = dist_sharding.constrain(q, "batch", None, "model", None)
+        k = dist_sharding.constrain(k, "batch", None, "model", None)
+        v = dist_sharding.constrain(v, "batch", None, "model", None)
+    return q, k, v
+
+
+def _rope_q_k(q, k, positions, cfg: ModelConfig):
+    if cfg.mrope_sections is not None:
+        # positions: [3, B, S]
+        q = rope.apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = rope.apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = rope.apply_rope(q, positions, cfg.rope_theta)
+        k = rope.apply_rope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q: [B,S,H,D], k: [B,T,KV,D] -> scores [B,KV,G,S,T] (G=H/KV)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q = q.reshape(B, S, KV, G, D)
+    # bf16 operands + f32 accumulation (MXU-native): upcasting k would
+    # materialize an f32 copy of the whole KV cache (§Perf iteration 8).
+    scores = nn.einsum_f32acc("bskgd,btkd->bkgst", q, k)
+    return scores * (D ** -0.5)
+
+
+def _gqa_out(weights, v, cfg: ModelConfig):
+    """weights: [B,KV,G,S,T], v: [B,T,KV,D] -> [B,S,H*D]."""
+    B, KV, G, S, T = weights.shape
+    D = v.shape[-1]
+    o = nn.einsum_f32acc("bkgst,btkd->bskgd", weights.astype(v.dtype), v)
+    return o.reshape(B, S, KV * G * D)
+
+
+def _full_scores_attention(q, k, v, pos_1d, cfg: ModelConfig) -> jax.Array:
+    """Naive attention: materializes [B,KV,G,S,T] scores (baseline path)."""
+    scores = _gqa_scores(q, k, cfg)                     # [B,KV,G,S,T]
+    qpos = pos_1d[:, :, None]                            # [B,S,1]
+    kpos = pos_1d[:, None, :]                            # [B,1,T]
+    mask = kpos <= qpos                                  # causal
+    if cfg.local_window is not None:
+        mask &= (qpos - kpos) < cfg.local_window
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(w, v, cfg)
+
+
+def _chunked_attention(q, k, v, pos_1d, cfg: ModelConfig) -> jax.Array:
+    """Flash-style q-chunked attention (train/prefill memory fix, §Perf
+    iteration 2): lax.scan over query chunks; each step materializes only
+    [B,KV,G,Cq,T] scores and is jax.checkpoint'd so the backward recomputes
+    them instead of storing S x S residuals — the TPU-idiomatic equivalent
+    of a fused flash kernel, expressed at the XLA level."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    Cq = min(cfg.attn_q_chunk, S)
+    while S % Cq:
+        Cq //= 2
+    nq = S // Cq
+    scale = D ** -0.5
+    qr = jnp.moveaxis(q.reshape(B, nq, Cq, KV, G, D), 1, 0)
+    qpr = jnp.moveaxis(pos_1d.reshape(B, nq, Cq), 1, 0)
+    kf = k
+    vf = v
+
+    @jax.checkpoint
+    def body(carry, inp):
+        qc, qp = inp                                     # [B,Cq,KV,G,D],[B,Cq]
+        s = nn.einsum_f32acc("bckgd,btkd->bkgct", qc.astype(kf.dtype),
+                             kf) * scale
+        mask = pos_1d[:, None, :] <= qp[:, :, None]      # [B,Cq,T]
+        if cfg.local_window is not None:
+            mask &= (qp[:, :, None] - pos_1d[:, None, :]) < cfg.local_window
+        s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = nn.einsum_f32acc("bkgct,btkd->bckgd", w.astype(vf.dtype), vf)
+        return carry, o
+
+    _, outs = jax.lax.scan(body, None, (qr, qpr))        # [nq,B,Cq,KV,G,D]
+    outs = jnp.moveaxis(outs, 0, 1).reshape(B, S, KV * G * D)
+    return outs
+
+
+def attention(params: dict, x: jax.Array, positions: jax.Array,
+              cfg: ModelConfig, *, cache: Optional[dict] = None,
+              cache_pos: Optional[jax.Array] = None,
+              backend: str = "auto") -> Tuple[jax.Array, Optional[dict]]:
+    """Full-sequence (train / prefill) attention.
+
+    If ``cache`` is given, the new K/V are written at positions [0, S) and
+    the updated cache is returned (prefill).
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg, backend)
+    q, k = _rope_q_k(q, k, positions, cfg)
+    k = k.astype(jnp.bfloat16)
+    v = v.astype(jnp.bfloat16)
+
+    pos_1d = positions if positions.ndim == 2 else positions[0]
+    if cfg.attn_q_chunk and S > cfg.attn_q_chunk:
+        o = _chunked_attention(q, k, v, pos_1d, cfg)
+    else:
+        o = _full_scores_attention(q, k, v, pos_1d, cfg)
+    o = o.astype(x.dtype)
+    y = sparse_linear.linear_logical_out(params["wo"]["w"], cfg.d_model, o,
+                                         backend=backend)
+
+    new_cache = None
+    if cache is not None:
+        W = cache["k"].shape[1]
+        if cfg.local_window is not None and S > W:
+            # Ring-buffer invariant: slot i holds the position p == i (mod W).
+            # The trailing W positions cover every residue exactly once, so
+            # this is a roll of the trailing window.
+            slots = jnp.mod(jnp.arange(S - W, S), W)
+            new_cache = {
+                "k": cache["k"].at[:, slots].set(k[:, S - W:].astype(cache["k"].dtype)),
+                "v": cache["v"].at[:, slots].set(v[:, S - W:].astype(cache["v"].dtype)),
+            }
+        else:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+            }
+    return y, new_cache
+
+
+def attention_decode(params: dict, x: jax.Array, cache: dict,
+                     pos: jax.Array, cfg: ModelConfig, *,
+                     backend: str = "auto") -> Tuple[jax.Array, dict]:
+    """Single-token decode with KV cache.
+
+    x: [B, 1, d]; pos: scalar int32 OR per-slot [B] int32 (continuous
+    batching decodes every slot at its own position). Sliding-window caches
+    store positions modulo the window (ring buffer).
+    """
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_vec = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos
+    positions = pos_vec[:, None]
+    if cfg.mrope_sections is not None:
+        positions_rope = jnp.broadcast_to(positions[None], (3, B, 1))
+    else:
+        positions_rope = positions
+    q, k, v = _project_qkv(params, x, cfg, backend)
+    q, k = _rope_q_k(q, k, positions_rope, cfg)
+
+    W = cache["k"].shape[1]
+    slot = jnp.mod(pos_vec, W) if cfg.local_window is not None else pos_vec
+    if pos.ndim == 0:
+        # Uniform position (plain serving / dry-run): dynamic_update_slice
+        # partitions cleanly under GSPMD (scatter does not).
+        s0 = slot[0]
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, s0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, s0, 0, 0))
+    else:
+        barange = jnp.arange(B)
+        ck = cache["k"].at[barange, slot].set(k[:, 0].astype(cache["k"].dtype))
+        cv = cache["v"].at[barange, slot].set(v[:, 0].astype(cache["v"].dtype))
+
+    scores = _gqa_scores(q, ck, cfg)                     # [B,KV,G,1,W]
+    idx = jnp.arange(W)[None, :]                         # [1,W]
+    if cfg.local_window is not None:
+        # ring buffer: slot i holds absolute position p with p % W == i and
+        # p in (pos-W, pos]; valid iff that p >= 0 i.e. filled.
+        age = jnp.mod(slot[:, None] - idx, W)            # [B,W] distance back
+        abs_pos = pos_vec[:, None] - age
+        valid = abs_pos >= 0
+    else:
+        valid = idx <= pos_vec[:, None]                  # [B,W]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = _gqa_out(w, cv, cfg).astype(x.dtype)
+    y = sparse_linear.linear_logical_out(params["wo"]["w"], cfg.d_model, o,
+                                         backend=backend)
+    return y, {"k": ck, "v": cv}

@@ -1,0 +1,115 @@
+"""Norms, MLPs, embeddings, logits heads — shared across all 10 archs."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_linear
+from repro.distributed import sharding as dist_sharding
+from repro.models import nn
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": nn.ones_init((dim,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32) -> dict:
+    return {"scale": nn.ones_init((dim,), dtype),
+            "bias": nn.zeros_init((dim,), dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs (weights stored [out, in] — the paper's A[M, K] orientation)
+# ---------------------------------------------------------------------------
+
+def init_swiglu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = nn.split_keys(key, 3)
+    return {
+        "gate": {"w": nn.dense_init(k1, d_ff, d_model, dtype)},
+        "up": {"w": nn.dense_init(k2, d_ff, d_model, dtype)},
+        "down": {"w": nn.dense_init(k3, d_model, d_ff, dtype)},
+    }
+
+
+def swiglu_mlp(params: dict, x: jax.Array, *, d_ff: int, d_model: int,
+               backend: str = "auto") -> jax.Array:
+    g = sparse_linear.linear_logical_out(params["gate"]["w"], d_ff, x,
+                                         backend=backend)
+    u = sparse_linear.linear_logical_out(params["up"]["w"], d_ff, x,
+                                         backend=backend)
+    h = jax.nn.silu(g) * u
+    h = dist_sharding.constrain(h, "batch", None, "model")
+    return sparse_linear.linear_logical_out(params["down"]["w"], d_model, h,
+                                            backend=backend)
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32,
+                  bias: bool = True) -> dict:
+    k1, k2 = nn.split_keys(key, 2)
+    p = {
+        "up": {"w": nn.dense_init(k1, d_ff, d_model, dtype)},
+        "down": {"w": nn.dense_init(k2, d_model, d_ff, dtype)},
+    }
+    if bias:
+        p["up"]["b"] = nn.zeros_init((d_ff,), dtype)
+        p["down"]["b"] = nn.zeros_init((d_model,), dtype)
+    return p
+
+
+def gelu_mlp(params: dict, x: jax.Array, *, d_ff: int, d_model: int,
+             backend: str = "auto") -> jax.Array:
+    h = sparse_linear.linear_logical_out(
+        params["up"]["w"], d_ff, x, params["up"].get("b"), backend=backend)
+    h = jax.nn.gelu(h)
+    h = dist_sharding.constrain(h, "batch", None, "model")
+    return sparse_linear.linear_logical_out(
+        params["down"]["w"], d_model, h, params["down"].get("b"),
+        backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def init_embed(key, vocab: int, dim: int, dtype=jnp.float32) -> dict:
+    return {"table": nn.embed_init(key, vocab, dim, dtype)}
+
+
+def embed(params: dict, tokens: jax.Array, compute_dtype=jnp.bfloat16
+          ) -> jax.Array:
+    return params["table"].astype(compute_dtype)[tokens]
+
+
+def logits_head(params: Optional[dict], embed_params: dict, x: jax.Array,
+                *, vocab: int, backend: str = "auto") -> jax.Array:
+    """Untied head if ``params`` given, else tied to the embedding table."""
+    if params is not None:
+        return sparse_linear.linear_logical_out(params["w"], vocab, x,
+                                                backend=backend)
+    table = embed_params["table"]
+    return jnp.dot(x, table.astype(x.dtype).T)

@@ -1,0 +1,210 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Q is produced through a low-rank bottleneck (W_DQ then W_UQ); K/V are
+produced from a shared compressed latent c_kv = W_DKV·x of rank
+``kv_lora_rank``, plus a decoupled RoPE key part k_rope shared across heads.
+The KV cache stores only (c_kv, k_rope) — the MLA memory win — and the
+up-projections W_UK/W_UV expand at attention time.
+
+All the down/up projection factors are skinny GEMMs at decode, so the
+paper's LSCD technique applies to each factor individually (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_linear
+from repro.models import nn, rope
+from repro.models.attention import NEG_INF
+from repro.models.config import ModelConfig
+
+
+def init_mla(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = nn.split_keys(key, 6)
+    return {
+        "w_dq": {"w": nn.dense_init(ks[0], qr, d, dtype)},
+        "w_uq": {"w": nn.dense_init(ks[1], h * (dn + dr), qr, dtype)},
+        # down-projection produces [c_kv (kvr) | k_rope (dr)]
+        "w_dkv": {"w": nn.dense_init(ks[2], kvr + dr, d, dtype)},
+        "w_ukv": {"w": nn.dense_init(ks[3], h * (dn + dv), kvr, dtype)},
+        "wo": {"w": nn.dense_init(ks[4], d, h * dv, dtype)},
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> dict:
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def _mla_qkv(params, x, positions, cfg: ModelConfig, backend: str):
+    """Returns q_nope, q_rope (roped), c_kv, k_rope (roped)."""
+    B, S, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = sparse_linear.linear_logical_out(
+        params["w_dq"]["w"], cfg.q_lora_rank, x, backend=backend)
+    q = sparse_linear.linear_logical_out(
+        params["w_uq"]["w"], h * (dn + dr), cq, backend=backend)
+    q = q.reshape(B, S, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = sparse_linear.linear_logical_out(
+        params["w_dkv"]["w"], cfg.kv_lora_rank + dr, x, backend=backend)
+    c_kv, k_rope = dkv[..., :cfg.kv_lora_rank], dkv[..., cfg.kv_lora_rank:]
+    k_rope = rope.apply_rope(k_rope[:, :, None, :], positions,
+                             cfg.rope_theta)[:, :, 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(params, q_nope, q_rope, c_kv, k_rope, mask, cfg: ModelConfig,
+                backend: str):
+    """Attention over (expanded) latents. Shapes:
+    q_nope [B,S,H,dn], q_rope [B,S,H,dr], c_kv [B,T,kvr], k_rope [B,T,dr];
+    mask broadcasts against [B,h,S,T].
+
+    For long S the score block is q-chunked with checkpointed chunk bodies
+    (the same flash-style memory fix as GQA attention — §Perf iteration 2).
+    """
+    B, S, h, dn = q_nope.shape
+    T = c_kv.shape[1]
+    dv = cfg.v_head_dim
+    # expand latents: kv = c_kv @ W_UKV^T -> [B,T,H,(dn+dv)]
+    kv = sparse_linear.linear_logical_out(
+        params["w_ukv"]["w"], h * (dn + dv), c_kv, backend=backend)
+    kv = kv.reshape(B, T, h, dn + dv)
+    k_nope = kv[..., :dn].astype(jnp.float32)
+    v = kv[..., dn:].astype(jnp.float32)
+    k_rope_f = k_rope.astype(jnp.float32)
+    scale = (dn + cfg.qk_rope_dim) ** -0.5
+
+    def attend_block(qn, qr, blk_mask):
+        s = (jnp.einsum("bshd,bthd->bhst", qn.astype(jnp.float32), k_nope)
+             + jnp.einsum("bshd,btd->bhst", qr.astype(jnp.float32),
+                          k_rope_f)) * scale
+        s = jnp.where(blk_mask, s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhst,bthd->bshd", w, v)
+
+    Cq = cfg.attn_q_chunk
+    if Cq and S > Cq and S % Cq == 0 and mask.shape[-2] == S:
+        nq = S // Cq
+        qn_r = jnp.moveaxis(q_nope.reshape(B, nq, Cq, h, dn), 1, 0)
+        qr_r = jnp.moveaxis(q_rope.reshape(B, nq, Cq, h, -1), 1, 0)
+        m_b = jnp.broadcast_to(mask, (B, mask.shape[1], S, T))
+        m_r = jnp.moveaxis(m_b.reshape(B, mask.shape[1], nq, Cq, T), 2, 0)
+
+        @jax.checkpoint
+        def body(carry, inp):
+            qn, qr, mk = inp
+            return carry, attend_block(qn, qr, mk)
+
+        _, outs = jax.lax.scan(body, None, (qn_r, qr_r, m_r))
+        o = jnp.moveaxis(outs, 0, 1).reshape(B, S, h, dv)
+    else:
+        o = attend_block(q_nope, q_rope, mask)
+    o = o.reshape(B, S, h * dv).astype(q_nope.dtype)
+    return sparse_linear.linear_logical_out(params["wo"]["w"], cfg.d_model, o,
+                                            backend=backend)
+
+
+def mla_attention(params: dict, x: jax.Array, positions: jax.Array,
+                  cfg: ModelConfig, *, cache: Optional[dict] = None,
+                  backend: str = "auto") -> Tuple[jax.Array, Optional[dict]]:
+    """Train / prefill MLA."""
+    B, S, _ = x.shape
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg, backend)
+    qpos = positions[:, :, None]
+    kpos = positions[:, None, :]
+    mask = (kpos <= qpos)[:, None, :, :]
+    y = _mla_attend(params, q_nope, q_rope, c_kv, k_rope, mask, cfg, backend)
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "ckv": jax.lax.dynamic_update_slice(
+                cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, 0, 0)),
+            "krope": jax.lax.dynamic_update_slice(
+                cache["krope"], k_rope.astype(cache["krope"].dtype), (0, 0, 0)),
+        }
+    return y, new_cache
+
+
+def mla_decode(params: dict, x: jax.Array, cache: dict, pos: jax.Array,
+               cfg: ModelConfig, *, backend: str = "auto"
+               ) -> Tuple[jax.Array, dict]:
+    """Single-token MLA decode in the **absorbed** form (§Perf iteration 6).
+
+    The naive form re-expands the whole latent cache through W_UKV every
+    step: 2·T·kvr·h·(dn+dv) FLOPs + a T·h·(dn+dv) intermediate — measured
+    as useful_flops = 0.00 and a collective-bound step at minicpm3-4b
+    decode_32k. The DeepSeek-V2 absorbed form folds W_UK into the query
+    (q_lat = q_nope @ W_UK per head) and W_UV into the output projection,
+    so attention runs *in the kvr-dim latent space*:
+
+        scores = q_lat · c_kv^T + q_rope · k_rope^T      (T·kvr + T·dr)
+        o_lat  = softmax · c_kv                           (T·kvr)
+        o      = o_lat @ W_UV per head, then W_O
+
+    per-step FLOPs drop by ~h·(dn+dv)/kvr (≈ 20x for minicpm3) and the
+    [B,T,h,dn+dv] expansion tensor disappears.
+    """
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_vec = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos
+    positions = pos_vec[:, None]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg, backend)
+    if pos.ndim == 0:
+        # c_kv / k_rope are [B, 1, *]: slice-update at the shared position.
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
+        ckrope = jax.lax.dynamic_update_slice(
+            cache["krope"], k_rope.astype(cache["krope"].dtype), (0, pos, 0))
+    else:
+        barange = jnp.arange(B)
+        ckv = cache["ckv"].at[barange, pos_vec].set(
+            c_kv[:, 0].astype(cache["ckv"].dtype))
+        ckrope = cache["krope"].at[barange, pos_vec].set(
+            k_rope[:, 0].astype(cache["krope"].dtype))
+    T = ckv.shape[1]
+    h, dn, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+
+    # W_UKV rows: [h*(dn+dv), kvr] -> per-head W_UK [h,dn,kvr], W_UV [h,dv,kvr]
+    w_ukv = params["w_ukv"]["w"]
+    if not isinstance(w_ukv, jnp.ndarray) and hasattr(w_ukv, "words"):
+        from repro.core import tiled_csl as _tcsl
+        w_ukv = _tcsl.decode_jax(w_ukv)[: h * (dn + dv), :kvr]
+    w_ukv = w_ukv.reshape(h, dn + dv, kvr)
+    w_uk = w_ukv[:, :dn, :].astype(jnp.float32)              # [h,dn,kvr]
+    w_uv = w_ukv[:, dn:, :].astype(jnp.float32)              # [h,dv,kvr]
+
+    # absorb: q_lat[b,1,h,kvr] = q_nope @ W_UK
+    # bf16 cache operands + f32 accumulation: upcasting the latent cache
+    # would materialize a 15.5 GiB f32 copy per step (§Perf iteration 8).
+    q_lat = jnp.einsum("bshd,hdr->bshr", q_nope.astype(jnp.float32), w_uk)
+    cdt = ckv.dtype
+    scale = (dn + cfg.qk_rope_dim) ** -0.5
+    scores = (nn.einsum_f32acc("bshr,btr->bhst", q_lat.astype(cdt), ckv)
+              + nn.einsum_f32acc("bshd,btd->bhst", q_rope.astype(cdt),
+                                 ckrope)) * scale
+    mask = (jnp.arange(T)[None, :] <= pos_vec[:, None])[:, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o_lat = nn.einsum_f32acc("bhst,btr->bshr", w.astype(cdt),
+                             ckv)                            # [B,1,h,kvr]
+    o = jnp.einsum("bshr,hdr->bshd", o_lat, w_uv)            # [B,1,h,dv]
+    o = o.reshape(B, 1, h * dv).astype(x.dtype)
+    y = sparse_linear.linear_logical_out(params["wo"]["w"], cfg.d_model, o,
+                                         backend=backend)
+    return y, {"ckv": ckv, "krope": ckrope}

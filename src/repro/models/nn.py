@@ -1,0 +1,83 @@
+"""Minimal functional NN substrate: param init + dtype policy.
+
+Params are plain nested dicts of jax.Arrays (pytrees) — no framework dep.
+Every module in ``repro.models`` follows the convention
+
+    init_<mod>(key, cfg, ...) -> params: dict
+    <mod>(params, x, ...)     -> y
+
+so layers compose by dict nesting, stack for ``lax.scan`` by tree-mapping
+``jnp.stack``, and shard by matching the dict paths against the logical
+sharding rules in ``repro.distributed.sharding``.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class DTypePolicy:
+    """MaxText-style mixed precision: params, compute, accumulation dtypes."""
+
+    def __init__(self, params=jnp.float32, compute=jnp.bfloat16,
+                 accum=jnp.float32):
+        self.params = params
+        self.compute = compute
+        self.accum = accum
+
+
+DEFAULT_POLICY = DTypePolicy()
+
+
+def dense_init(key, out_dim: int, in_dim: int, dtype=jnp.float32,
+               scale: float | None = None) -> jax.Array:
+    """[out, in] weight, truncated-normal, 1/sqrt(fan_in) scale."""
+    scale = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (out_dim, in_dim))
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+def zeros_init(shape: Sequence[int], dtype=jnp.float32) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(shape: Sequence[int], dtype=jnp.float32) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def stack_layers(layer_params: Sequence[dict]) -> dict:
+    """Stack per-layer param trees along a leading L axis (for lax.scan)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layer_params)
+
+
+def count_params(params) -> int:
+    leaves = jax.tree.leaves(params)
+    return int(sum(x.size for x in leaves if hasattr(x, "size")))
+
+
+def einsum_f32acc(subscripts: str, *operands) -> jax.Array:
+    """Einsum with f32 accumulation over (possibly bf16) operands.
+
+    On the TPU target this is a native MXU mode (bf16 x bf16 -> f32), which
+    the dry-run opts into via REPRO_BF16_DOT_F32_ACC=1 so the compiled
+    artifact reflects TPU behaviour (no materialized f32 cache copies —
+    §Perf iteration 8). The CPU *runtime* cannot execute that dot, so test
+    execution falls back to upcasting the operands.
+    """
+    if os.environ.get("REPRO_BF16_DOT_F32_ACC") == "1":
+        return jnp.einsum(subscripts, *operands,
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum(subscripts,
+                      *[o.astype(jnp.float32) for o in operands])

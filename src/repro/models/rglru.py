@@ -1,0 +1,143 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence:  r_t = sigmoid(W_a x_t + b_a)         (recurrence gate)
+                 i_t = sigmoid(W_x x_t + b_x)         (input gate)
+                 a_t = a^(c * r_t)   with a = sigmoid(Lambda), c = 8
+                 h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+wrapped in the Griffin recurrent block: x -> (linear -> conv1d -> RG-LRU)
+gated elementwise by a GeLU branch, then an output linear. State is O(d_rnn)
+per sequence — this is why long_500k runs for this family.
+
+Prefill uses a chunked parallel form: within a chunk the linear recurrence is
+unrolled with cumulative products (log-space-safe since 0 < a_t < 1), across
+chunks a lax.scan carries the state — O(L) work, O(L/chunk) scan steps.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_linear
+from repro.models import nn
+from repro.models.config import ModelConfig
+
+_C = 8.0  # the paper's fixed exponent scale
+
+
+def init_rglru(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, r = cfg.d_model, cfg.rnn_dim
+    ks = nn.split_keys(key, 5)
+    return {
+        "w_x": {"w": nn.dense_init(ks[0], r, d, dtype)},      # branch proj
+        "w_gate": {"w": nn.dense_init(ks[1], r, d, dtype)},   # GeLU branch
+        "w_out": {"w": nn.dense_init(ks[2], d, r, dtype)},
+        "conv_w": (jax.random.normal(ks[3], (cfg.rglru_conv, r)) * 0.1
+                   ).astype(dtype),
+        "conv_b": nn.zeros_init((r,), dtype),
+        "wa": {"w": nn.dense_init(ks[4], r, r, dtype)},       # recurrence gate
+        "ba": nn.zeros_init((r,), dtype),
+        "wi_b": nn.zeros_init((r,), dtype),                   # input gate bias
+        "wi_diag": nn.ones_init((r,), dtype),                 # diag input gate
+        "lam": (jnp.ones((r,)) * 2.2).astype(dtype),          # a≈0.9 init
+    }
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "h": jnp.zeros((batch, cfg.rnn_dim), dtype),
+        "conv": jnp.zeros((batch, cfg.rglru_conv - 1, cfg.rnn_dim), dtype),
+    }
+
+
+def _rglru_gates(params, xr):
+    """xr: [..., r] f32 -> (log_a, gated_input) both [..., r]."""
+    r_gate = jax.nn.sigmoid(
+        jnp.einsum("...r,sr->...s", xr, params["wa"]["w"].astype(jnp.float32))
+        + params["ba"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(xr * params["wi_diag"].astype(jnp.float32)
+                            + params["wi_b"].astype(jnp.float32))
+    a_base = jax.nn.sigmoid(params["lam"].astype(jnp.float32))
+    log_a = _C * r_gate * jnp.log(a_base)                     # [..., r] (<0)
+    a = jnp.exp(log_a)
+    gx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_gate * xr)
+    return log_a, gx
+
+
+def _linear_scan(log_a, gx, h0):
+    """h_t = exp(log_a_t)·h_{t-1} + gx_t via associative scan (log-depth,
+    numerically stable: only products of a in (0,1], never 1/a).
+
+    log_a, gx: [B, L, r]; h0: [B, r]. Returns y [B, L, r], h_final.
+    """
+    a = jnp.exp(log_a)
+
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    aa, bb = jax.lax.associative_scan(comb, (a, gx), axis=1)
+    y = aa * h0[:, None, :] + bb
+    return y, y[:, -1, :]
+
+
+def rglru_block(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                cache: Optional[dict] = None, backend: str = "auto",
+                chunk: int = 128) -> Tuple[jax.Array, Optional[dict]]:
+    """Train / prefill. x: [B, L, d] with L % chunk == 0."""
+    B, L, _ = x.shape
+    r = cfg.rnn_dim
+    xr = sparse_linear.linear_logical_out(params["w_x"]["w"], r, x,
+                                          backend=backend)
+    gate = sparse_linear.linear_logical_out(params["w_gate"]["w"], r, x,
+                                            backend=backend)
+    # causal depthwise conv
+    cv = params["conv_w"].shape[0]
+    pad = jnp.zeros((B, cv - 1, r), xr.dtype)
+    xr_pad = jnp.concatenate([pad, xr], axis=1)
+    cw = params["conv_w"].astype(jnp.float32)
+    conv = sum(xr_pad[:, i:i + L].astype(jnp.float32) * cw[i]
+               for i in range(cv))
+    xc = conv + params["conv_b"].astype(jnp.float32)
+
+    log_a, gx = _rglru_gates(params, xc)
+    h0 = (jnp.zeros((B, r), jnp.float32) if cache is None
+          else cache["h"].astype(jnp.float32))
+    y, h_final = _linear_scan(log_a, gx, h0)
+
+    y = y.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = sparse_linear.linear_logical_out(params["w_out"]["w"], cfg.d_model,
+                                           y, backend=backend)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h_final.astype(cache["h"].dtype),
+                     "conv": xr_pad[:, L:L + cv - 1].astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+def rglru_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig, *,
+                 backend: str = "auto") -> Tuple[jax.Array, dict]:
+    """Single-token step. x: [B, 1, d]."""
+    B = x.shape[0]
+    r = cfg.rnn_dim
+    xr = sparse_linear.linear_logical_out(params["w_x"]["w"], r, x,
+                                          backend=backend)[:, 0]
+    gate = sparse_linear.linear_logical_out(params["w_gate"]["w"], r, x,
+                                            backend=backend)[:, 0]
+    hist = jnp.concatenate([cache["conv"].astype(xr.dtype), xr[:, None]],
+                           axis=1)                            # [B, cv, r]
+    cw = params["conv_w"].astype(jnp.float32)
+    xc = jnp.einsum("bcf,cf->bf", hist.astype(jnp.float32), cw) \
+        + params["conv_b"].astype(jnp.float32)
+
+    log_a, gx = _rglru_gates(params, xc)
+    h = cache["h"].astype(jnp.float32) * jnp.exp(log_a) + gx
+    y = h.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    out = sparse_linear.linear_logical_out(params["w_out"]["w"], cfg.d_model,
+                                           y[:, None, :], backend=backend)
+    return out, {"h": h.astype(cache["h"].dtype),
+                 "conv": hist[:, 1:].astype(cache["conv"].dtype)}

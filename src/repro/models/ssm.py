@@ -1,0 +1,223 @@
+"""Mamba2 SSD (state-space duality) block — attention-free arch (mamba2-130m).
+
+Implements the chunked SSD algorithm (Dao & Gu, arXiv:2405.21060 §6) for
+train/prefill — O(L) in sequence length via chunk-local quadratic attention
+plus inter-chunk state recurrence — and the O(1)-per-token recurrent form for
+decode. Scalar-per-head A (the SSD restriction), grouped B/C (n_groups=1).
+
+Weight layout: one fused ``in_proj`` [2*d_inner + 2*n + heads, d_model]
+producing (z, x, B, C, dt), and ``out_proj`` [d_model, d_inner] — these two
+are the dominant parameter mass and the LSCD-sparsifiable matrices
+(DESIGN.md §6); the conv1d and SSD internals stay dense.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_linear
+from repro.models import nn, layers
+from repro.models.config import ModelConfig
+
+
+def _dims(cfg: ModelConfig):
+    din = cfg.ssm_inner
+    heads = cfg.ssm_heads
+    n = cfg.ssm_state
+    return din, heads, n
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    din, heads, n = _dims(cfg)
+    proj_out = 2 * din + 2 * n + heads
+    ks = nn.split_keys(key, 4)
+    return {
+        "in_proj": {"w": nn.dense_init(ks[0], proj_out, d, dtype)},
+        "out_proj": {"w": nn.dense_init(ks[1], d, din, dtype)},
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, din + 2 * n))
+                   * 0.1).astype(dtype),
+        "conv_b": nn.zeros_init((din + 2 * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, float(heads), heads)).astype(dtype),
+        "d_skip": nn.ones_init((heads,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((heads,), 1e-2))).astype(dtype),
+        "norm": layers.init_rmsnorm(din, dtype),
+    }
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    din, heads, n = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, heads, cfg.ssm_head_dim, n), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, din + 2 * n), dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    din, heads, n = _dims(cfg)
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din: 2 * din + 2 * n]
+    dt = zxbcdt[..., 2 * din + 2 * n:]
+    return z, xbc, dt
+
+
+def _ssd_chunked(x, dt, a_log, B, C, d_skip, chunk: int,
+                 init_state=None):
+    """Chunked SSD scan.
+
+    x: [b, l, h, p]; dt: [b, l, h] (softplus'd); B, C: [b, l, n];
+    a_log: [h]. Returns y [b, l, h, p] and final state [b, h, p, n].
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    nc = l // chunk
+    A = -jnp.exp(a_log.astype(jnp.float32))                 # [h], negative
+    dt = dt.astype(jnp.float32)
+    dA = dt * A                                              # [b,l,h]
+
+    xr = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    Br = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cr = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+    dAr = dA.reshape(b, nc, chunk, h)
+    dtr = dt.reshape(b, nc, chunk, h)
+
+    # cumulative decay within chunk
+    seg = jnp.cumsum(dAr, axis=2)                            # [b,nc,c,h]
+    # intra-chunk (diagonal block) — causal "attention" with decay
+    decay = jnp.exp(seg[:, :, :, None, :] - seg[:, :, None, :, :])  # [b,nc,c,c,h]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    cb = jnp.einsum("bzcn,bzsn->bzcs", Cr, Br)               # [b,nc,c,c]
+    att = jnp.where(causal[None, None, :, :, None], cb[..., None] * decay, 0.0)
+    y_diag = jnp.einsum("bzcsh,bzsh,bzshp->bzchp", att, dtr, xr)
+
+    # chunk-final states: sum_s exp(seg_end - seg_s) * dt_s * B_s x_s
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)          # [b,nc,c,h]
+    chunk_state = jnp.einsum("bzsh,bzsh,bzsn,bzshp->bzhpn",
+                             decay_to_end, dtr, Br, xr)      # [b,nc,h,p,n]
+
+    # inter-chunk recurrence over nc
+    chunk_decay = jnp.exp(jnp.sum(dAr, axis=2))              # [b,nc,h]
+
+    def scan_fn(carry, inp):
+        st = carry                                           # [b,h,p,n]
+        cs, cd = inp                                         # [b,h,p,n],[b,h]
+        out_st = st
+        st = st * cd[:, :, None, None] + cs
+        return st, out_st
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+            else init_state.astype(jnp.float32))
+    cs_t = jnp.moveaxis(chunk_state, 1, 0)                   # [nc,b,h,p,n]
+    cd_t = jnp.moveaxis(chunk_decay, 1, 0)                   # [nc,b,h]
+    final_state, prev_states = jax.lax.scan(scan_fn, init, (cs_t, cd_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)            # [b,nc,h,p,n]
+
+    # inter-chunk contribution: C_t · exp(seg_t) · state_prev
+    state_decay = jnp.exp(seg)                               # [b,nc,c,h]
+    y_off = jnp.einsum("bzcn,bzch,bzhpn->bzchp",
+                       Cr, state_decay, prev_states)
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return y, final_state
+
+
+def ssm_block(params: dict, x: jax.Array, cfg: ModelConfig, *,
+              cache: Optional[dict] = None, backend: str = "auto"
+              ) -> Tuple[jax.Array, Optional[dict]]:
+    """Train / prefill SSD. x: [B, L, d]; L % ssm_chunk == 0."""
+    Bsz, L, _ = x.shape
+    din, heads, n = _dims(cfg)
+    hp = cfg.ssm_head_dim
+    zxbcdt = sparse_linear.linear_logical_out(
+        params["in_proj"]["w"], 2 * din + 2 * n + heads, x, backend=backend)
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+
+    # causal depthwise conv over (x, B, C)
+    cw = params["conv_w"].astype(jnp.float32)                 # [cv, din+2n]
+    cv = cw.shape[0]
+    pad = jnp.zeros((Bsz, cv - 1, xbc.shape[-1]), xbc.dtype)
+    xbc_pad = jnp.concatenate([pad, xbc], axis=1)
+    conv = sum(xbc_pad[:, i:i + L].astype(jnp.float32) * cw[i]
+               for i in range(cv))
+    xbc = jax.nn.silu(conv + params["conv_b"].astype(jnp.float32))
+
+    xs = xbc[..., :din].reshape(Bsz, L, heads, hp)
+    Bmat = xbc[..., din:din + n]
+    Cmat = xbc[..., din + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    # Pad L to a chunk multiple. Padded steps get dt = 0, which makes the
+    # SSD recurrence an exact passthrough (decay exp(0·A) = 1, update 0), so
+    # the final state is unaffected by padding.
+    chunk = min(cfg.ssm_chunk, L)
+    Lp = -(-L // chunk) * chunk
+    if Lp != L:
+        padw = Lp - L
+        xs = jnp.pad(xs, ((0, 0), (0, padw), (0, 0), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, padw), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, padw), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padw), (0, 0)))
+        dt = dt * (jnp.arange(Lp)[None, :, None] < L)
+
+    y, final_state = _ssd_chunked(xs, dt, params["a_log"], Bmat, Cmat,
+                                  params["d_skip"], chunk)
+    y = y[:, :L].reshape(Bsz, L, din).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = sparse_linear.linear_logical_out(
+        params["out_proj"]["w"], cfg.d_model, y, backend=backend)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "state": final_state.astype(cache["state"].dtype),
+            "conv": xbc_pad[:, L:L + cv - 1] if cv > 1 else cache["conv"],
+        }
+        # conv cache: last cv-1 *pre-activation* inputs
+        raw = jnp.concatenate([pad, zxbcdt[..., din:2 * din + 2 * n]], axis=1)
+        new_cache["conv"] = raw[:, L:L + cv - 1]
+    return out, new_cache
+
+
+def ssm_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig, *,
+               backend: str = "auto") -> Tuple[jax.Array, dict]:
+    """Single-token recurrent step. x: [B, 1, d]."""
+    Bsz = x.shape[0]
+    din, heads, n = _dims(cfg)
+    hp = cfg.ssm_head_dim
+    zxbcdt = sparse_linear.linear_logical_out(
+        params["in_proj"]["w"], 2 * din + 2 * n + heads, x, backend=backend)
+    z, xbc_new, dt = _split_proj(zxbcdt, cfg)
+
+    # conv ring: cache["conv"] holds previous cv-1 raw inputs
+    cv = cfg.ssm_conv
+    hist = jnp.concatenate([cache["conv"].astype(xbc_new.dtype),
+                            xbc_new], axis=1)                 # [B, cv, ch]
+    cw = params["conv_w"].astype(jnp.float32)
+    conv = jnp.einsum("bcf,cf->bf", hist.astype(jnp.float32), cw)
+    xbc = jax.nn.silu(conv + params["conv_b"].astype(jnp.float32))[:, None, :]
+
+    xs = xbc[..., :din].reshape(Bsz, heads, hp)
+    Bv = xbc[:, 0, din:din + n]
+    Cv = xbc[:, 0, din + n:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,h]
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                      # [B,h]
+
+    st = cache["state"].astype(jnp.float32)                   # [B,h,p,n]
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bv.astype(jnp.float32),
+                     xs.astype(jnp.float32))
+    st = st * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", st, Cv.astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, 1, din).astype(x.dtype)
+    y = layers.rmsnorm(params["norm"],
+                       y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype))
+    out = sparse_linear.linear_logical_out(
+        params["out_proj"]["w"], cfg.d_model, y, backend=backend)
+    return out, {"state": st.astype(cache["state"].dtype),
+                 "conv": hist[:, 1:].astype(cache["conv"].dtype)}

@@ -1,0 +1,284 @@
+"""Model assembly: config → init / forward for all architecture families.
+
+One generic decoder stack built from the block library. Layer stacks are
+``lax.scan``-compiled when homogeneous (dense / moe / ssm / vlm / audio
+archs) and unrolled for heterogeneous patterns (recurrentgemma's
+rglru/rglru/attn cycle). Three execution modes share the block code:
+
+  train    — full sequence, no cache, returns logits for CE loss
+  prefill  — full sequence, writes the cache
+  decode   — single token + cache (the paper's skinny-MatMul regime)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as dist_sharding
+from repro.models import (attention, layers, mla, moe, nn, rglru, ssm)
+from repro.models.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# per-layer blocks
+# ---------------------------------------------------------------------------
+
+def _init_norm(cfg: ModelConfig, dtype):
+    return (layers.init_rmsnorm(cfg.d_model, dtype) if cfg.norm_kind == "rmsnorm"
+            else layers.init_layernorm(cfg.d_model, dtype))
+
+
+def _norm(cfg: ModelConfig, p, x):
+    return (layers.rmsnorm(p, x) if cfg.norm_kind == "rmsnorm"
+            else layers.layernorm(p, x))
+
+
+def init_block(key, kind: str, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    k1, k2 = nn.split_keys(key, 2)
+    p: Params = {"pre_norm": _init_norm(cfg, dtype)}
+    if kind == "attn":
+        p["attn"] = (mla.init_mla(k1, cfg, dtype) if cfg.attn_kind == "mla"
+                     else attention.init_attention(k1, cfg, dtype))
+        p["mlp_norm"] = _init_norm(cfg, dtype)
+        if cfg.n_routed_experts:
+            p["moe"] = moe.init_moe(k2, cfg, dtype)
+        elif cfg.mlp_kind == "swiglu":
+            p["mlp"] = layers.init_swiglu_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["mlp"] = layers.init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, dtype,
+                                            bias=cfg.mlp_bias)
+    elif kind == "ssm":
+        p["ssm"] = ssm.init_ssm(k1, cfg, dtype)
+        if cfg.d_ff:
+            p["mlp_norm"] = _init_norm(cfg, dtype)
+            p["mlp"] = layers.init_swiglu_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    elif kind == "rglru":
+        p["rglru"] = rglru.init_rglru(k1, cfg, dtype)
+        p["mlp_norm"] = _init_norm(cfg, dtype)
+        p["mlp"] = layers.init_swiglu_mlp(k2, cfg.d_model, cfg.d_ff, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16) -> Params:
+    if kind == "attn":
+        if cfg.attn_kind == "mla":
+            return mla.init_mla_cache(cfg, batch, max_len, dtype)
+        return attention.init_cache(cfg, batch, max_len, dtype)
+    if kind == "ssm":
+        return ssm.init_ssm_cache(cfg, batch, jnp.float32)
+    if kind == "rglru":
+        return rglru.init_rglru_cache(cfg, batch, jnp.float32)
+    raise ValueError(kind)
+
+
+def _mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig, backend: str):
+    if cfg.mlp_kind == "swiglu":
+        return layers.swiglu_mlp(p, x, d_ff=cfg.d_ff, d_model=cfg.d_model,
+                                 backend=backend)
+    return layers.gelu_mlp(p, x, d_ff=cfg.d_ff, d_model=cfg.d_model,
+                           backend=backend)
+
+
+def block_apply(p: Params, x: jax.Array, kind: str, cfg: ModelConfig, *,
+                mode: str, positions=None, cache=None, pos=None,
+                backend: str = "auto"
+                ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    """Residual block. Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    # Pin the activation layout at every block boundary: without this GSPMD
+    # propagates weight shardings into the residual stream and replicates
+    # the batch dim per device (measured 16x activation blow-up at
+    # train_4k — §Perf iteration 4).
+    x = dist_sharding.constrain(x, "batch", None, None)
+    h = _norm(cfg, p["pre_norm"], x)
+    if kind == "attn":
+        if cfg.attn_kind == "mla":
+            if mode == "decode":
+                a, new_cache = mla.mla_decode(p["attn"], h, cache, pos, cfg,
+                                              backend=backend)
+            else:
+                a, new_cache = mla.mla_attention(
+                    p["attn"], h, positions, cfg, cache=cache, backend=backend)
+        else:
+            if mode == "decode":
+                a, new_cache = attention.attention_decode(
+                    p["attn"], h, cache, pos, cfg, backend=backend)
+            else:
+                a, new_cache = attention.attention(
+                    p["attn"], h, positions, cfg, cache=cache, backend=backend)
+        x = x + a
+        h2 = _norm(cfg, p["mlp_norm"], x)
+        if cfg.n_routed_experts:
+            m, aux = moe.moe_block(p["moe"], h2, cfg, backend=backend)
+        else:
+            m = _mlp_apply(p["mlp"], h2, cfg, backend)
+        x = x + m
+    elif kind == "ssm":
+        if mode == "decode":
+            s, new_cache = ssm.ssm_decode(p["ssm"], h, cache, cfg,
+                                          backend=backend)
+        else:
+            s, new_cache = ssm.ssm_block(p["ssm"], h, cfg, cache=cache,
+                                         backend=backend)
+        x = x + s
+        if cfg.d_ff:
+            x = x + _mlp_apply(p["mlp"], _norm(cfg, p["mlp_norm"], x), cfg,
+                               backend)
+    elif kind == "rglru":
+        if mode == "decode":
+            r, new_cache = rglru.rglru_decode(p["rglru"], h, cache, cfg,
+                                              backend=backend)
+        else:
+            r, new_cache = rglru.rglru_block(p["rglru"], h, cfg, cache=cache,
+                                             backend=backend)
+        x = x + r
+        x = x + _mlp_apply(p["mlp"], _norm(cfg, p["mlp_norm"], x), cfg, backend)
+    else:
+        raise ValueError(kind)
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+def _use_scan(cfg: ModelConfig) -> bool:
+    return cfg.scan_layers and cfg.uniform_layers
+
+
+def init_model(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    keys = nn.split_keys(key, cfg.n_layers + 3)
+    params: Params = {}
+    if cfg.n_codebooks:
+        params["embed"] = {"table": jnp.stack([
+            nn.embed_init(jax.random.fold_in(keys[-1], i), cfg.vocab,
+                          cfg.d_model, dtype)
+            for i in range(cfg.n_codebooks)])}
+    else:
+        params["embed"] = layers.init_embed(keys[-1], cfg.vocab, cfg.d_model,
+                                            dtype)
+    blocks = [init_block(keys[i], cfg.layer_kind(i), cfg, dtype)
+              for i in range(cfg.n_layers)]
+    if _use_scan(cfg):
+        params["layers"] = nn.stack_layers(blocks)
+    else:
+        params["layers"] = blocks
+    params["final_norm"] = _init_norm(cfg, dtype)
+    if not cfg.tie_embeddings:
+        out = cfg.vocab * max(cfg.n_codebooks, 1)
+        params["lm_head"] = {"w": nn.dense_init(keys[-2], out, cfg.d_model,
+                                                dtype)}
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Any:
+    caches = [init_block_cache(cfg.layer_kind(i), cfg, batch, max_len, dtype)
+              for i in range(cfg.n_layers)]
+    if _use_scan(cfg):
+        return nn.stack_layers(caches)
+    return caches
+
+
+def _embed_tokens(params: Params, inputs: Dict[str, jax.Array],
+                  cfg: ModelConfig, compute_dtype) -> jax.Array:
+    if "embeds" in inputs and inputs["embeds"] is not None:
+        return inputs["embeds"].astype(compute_dtype)
+    tokens = inputs["tokens"]
+    if cfg.n_codebooks:
+        # tokens: [B, n_cb, S] — sum codebook embeddings (MusicGen)
+        tabs = params["embed"]["table"].astype(compute_dtype)  # [ncb,V,d]
+        parts = [tabs[i][tokens[:, i]] for i in range(cfg.n_codebooks)]
+        return sum(parts)
+    return params["embed"]["table"].astype(compute_dtype)[tokens]
+
+
+def forward(params: Params, inputs: Dict[str, jax.Array], cfg: ModelConfig, *,
+            mode: str = "train", cache: Any = None,
+            pos: Optional[jax.Array] = None, backend: str = "auto"
+            ) -> Tuple[jax.Array, Any, jax.Array]:
+    """Run the stack. Returns (logits, new_cache, aux_loss).
+
+    inputs: {"tokens": [B,S] (or [B,ncb,S])} or {"embeds": [B,S,d]},
+            optional "positions": [B,S] ([3,B,S] for M-RoPE).
+    decode mode: S == 1 and ``pos`` is the scalar absolute position.
+    """
+    compute_dtype = jnp.dtype(cfg.dtype)
+    x = _embed_tokens(params, inputs, cfg, compute_dtype)
+    B, S = x.shape[0], x.shape[-2]
+
+    positions = inputs.get("positions")
+    if positions is None and mode != "decode":
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions[None], (3, B, S))
+
+    block = functools.partial(block_apply, cfg=cfg, mode=mode,
+                              positions=positions, pos=pos, backend=backend)
+    if cfg.remat != "none" and mode == "train":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else
+                  jax.checkpoint_policies.nothing_saveable)
+        block = jax.checkpoint(block, policy=policy,
+                               static_argnums=(2,))
+
+    aux_total = jnp.zeros((), jnp.float32)
+    if _use_scan(cfg):
+        kind = cfg.layer_kind(0)
+
+        if cache is not None:
+            def scan_body(carry, layer_in):
+                xc, aux_acc = carry
+                p_l, cache_l = layer_in
+                xc, new_cache_l, aux = block(p_l, xc, kind, cache=cache_l)
+                return (xc, aux_acc + aux), new_cache_l
+
+            (x, aux_total), new_cache = jax.lax.scan(
+                scan_body, (x, aux_total), (params["layers"], cache))
+        else:
+            def scan_body(carry, p_l):
+                xc, aux_acc = carry
+                xc, _, aux = block(p_l, xc, kind, cache=None)
+                return (xc, aux_acc + aux), jnp.zeros((), jnp.float32)
+
+            (x, aux_total), _ = jax.lax.scan(
+                scan_body, (x, aux_total), params["layers"])
+            new_cache = None
+    else:
+        new_cache = [] if cache is not None else None
+        for i in range(cfg.n_layers):
+            cache_l = cache[i] if cache is not None else None
+            x, nc, aux = block(params["layers"][i], x, cfg.layer_kind(i),
+                               cache=cache_l)
+            aux_total = aux_total + aux
+            if cache is not None:
+                new_cache.append(nc)
+
+    x = _norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = layers.logits_head(None, {"table": params["embed"]["table"]}
+                                    if not cfg.n_codebooks else
+                                    {"table": params["embed"]["table"][0]},
+                                    x, vocab=cfg.vocab, backend=backend)
+    else:
+        out_dim = cfg.vocab * max(cfg.n_codebooks, 1)
+        logits = layers.logits_head(params["lm_head"], None, x,
+                                    vocab=out_dim, backend=backend)
+    # Keep the vocab dim model-sharded: without this constraint GSPMD
+    # replicates [B,S,V] logits per device (terabytes at train_4k scale) —
+    # §Perf hillclimb iteration 1.
+    logits = dist_sharding.constrain(logits, "batch", None, "model")
+    if cfg.n_codebooks and not cfg.tie_embeddings:
+        logits = logits.reshape(*logits.shape[:-1], cfg.n_codebooks,
+                                cfg.vocab)
+    return logits, new_cache, aux_total

@@ -1,0 +1,134 @@
+"""Optimizers built from scratch (no optax dep): AdamW, SGD-M, schedules,
+global-norm clipping, and sparsity-mask-preserving updates.
+
+State layout mirrors the params pytree so sharding rules apply unchanged
+(an AdamW moment shards exactly like its parameter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda: jax.tree.map(jnp.zeros_like, params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def update(self, grads, state: AdamWState, params, *,
+               masks: Any = None):
+        """One step. ``masks`` (optional pytree of 0/1, same structure as
+        params with None where unmasked) pins pruned weights at zero —
+        the retraining-based pruning loop the paper relies on (§7)."""
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                          state.nu, grads)
+        mu_hat_c = 1.0 - b1 ** step.astype(jnp.float32)
+        nu_hat_c = 1.0 - b2 ** step.astype(jnp.float32)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            u = (m / mu_hat_c) / (jnp.sqrt(v / nu_hat_c) + self.eps)
+            u = u + self.weight_decay * p
+            return (p - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        if masks is not None:
+            new_params = apply_masks(new_params, masks)
+        return new_params, AdamWState(step=step, mu=mu, nu=nu)
+
+
+class SGDMState(NamedTuple):
+    step: jax.Array
+    mom: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDM:
+    lr: Callable | float = 1e-2
+    momentum: float = 0.9
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> SGDMState:
+        return SGDMState(step=jnp.zeros((), jnp.int32),
+                         mom=jax.tree.map(jnp.zeros_like, params))
+
+    def update(self, grads, state: SGDMState, params, *, masks=None):
+        if self.clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        step = state.step + 1
+        mom = jax.tree.map(lambda m, g: self.momentum * m + g,
+                           state.mom, grads)
+        lr = self.lr(step) if callable(self.lr) else self.lr
+        new_params = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype),
+                                  params, mom)
+        if masks is not None:
+            new_params = apply_masks(new_params, masks)
+        return new_params, SGDMState(step=step, mom=mom)
+
+
+# ---------------------------------------------------------------------------
+# schedules & utilities
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def linear_schedule(peak_lr: float, warmup: int, total: int):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm, peak_lr * (1.0 - frac))
+    return fn
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def apply_masks(params, masks):
+    """Zero out pruned positions. masks tree: arrays (0/1) or None leaves."""
+    def f(p, m):
+        return p if m is None else p * m.astype(p.dtype)
+    return jax.tree.map(f, params, masks,
+                        is_leaf=lambda x: x is None)

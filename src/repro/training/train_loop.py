@@ -1,0 +1,122 @@
+"""Training loop substrate: CE loss, train_step, grad accumulation,
+mixed precision, sparse-mask-preserving updates, aux (MoE) losses.
+
+``train_step`` is the function the multi-pod dry-run lowers for train_4k
+cells; it is pure (params, opt_state, batch) -> (params, opt_state, metrics)
+so pjit shards it with the rules in ``repro.distributed.sharding``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt_mod
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  aux_loss: jax.Array = 0.0, aux_weight: float = 0.01
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean next-token CE. logits [..., V]; targets [...] int.
+
+    The gold logit is extracted with a one-hot contraction, NOT a gather:
+    a gather over a model-sharded vocab axis makes GSPMD all-gather the
+    full logits; the one-hot dot partitions cleanly (reduce over the
+    sharded axis) — §Perf hillclimb iteration 1.
+
+    MusicGen-style multi-codebook logits [..., ncb, V] with targets
+    [..., ncb] reduce over all codebooks.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    ce = jnp.mean(logz - gold)
+    loss = ce + aux_weight * aux_loss
+    return loss, {"ce": ce, "aux": jnp.asarray(aux_loss, jnp.float32)}
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
+            backend: str = "auto"):
+    tokens = batch["tokens"]
+    if cfg.n_codebooks:
+        # [B, ncb, S] tokens; targets [B, ncb, S] -> logits [B,S,ncb,V]
+        logits, _, aux = transformer.forward(params, {"tokens": tokens}, cfg,
+                                             mode="train", backend=backend)
+        targets = jnp.moveaxis(batch["targets"], 1, -1)   # [B,S,ncb]
+        return cross_entropy(logits, targets, aux)
+    logits, _, aux = transformer.forward(params, {"tokens": tokens}, cfg,
+                                         mode="train", backend=backend)
+    return cross_entropy(logits, batch["targets"], aux)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: opt_mod.AdamW, *,
+                    masks: Any = None, microbatches: int = 1,
+                    backend: str = "auto"):
+    """Build train_step(state, batch) -> (state, metrics).
+
+    microbatches > 1 splits the batch on axis 0 and accumulates grads with a
+    lax.scan — the DP all-reduce of microbatch i then overlaps microbatch
+    i+1's compute under pjit (collective-schedule hillclimb lever).
+    """
+
+    grad_fn = jax.value_and_grad(
+        lambda p, b: loss_fn(p, b, cfg, backend=backend), has_aux=True)
+
+    def single(params, batch):
+        (loss, parts), grads = grad_fn(params, batch)
+        return loss, parts, grads
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        params = state.params
+        if microbatches == 1:
+            loss, parts, grads = single(params, batch)
+        else:
+            def mb_slice(x, i):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def body(acc, i):
+                mb = jax.tree.map(lambda x: mb_slice(x, i), batch)
+                l, p, g = single(params, mb)
+                acc_loss, acc_parts, acc_g = acc
+                acc_g = jax.tree.map(jnp.add, acc_g, g)
+                return (acc_loss + l, jax.tree.map(jnp.add, acc_parts, p),
+                        acc_g), None
+
+            zero_g = jax.tree.map(jnp.zeros_like, params)
+            init = (jnp.zeros((), jnp.float32),
+                    {"ce": jnp.zeros((), jnp.float32),
+                     "aux": jnp.zeros((), jnp.float32)}, zero_g)
+            (loss, parts, grads), _ = jax.lax.scan(
+                body, init, jnp.arange(microbatches))
+            inv = 1.0 / microbatches
+            loss = loss * inv
+            parts = jax.tree.map(lambda x: x * inv, parts)
+            grads = jax.tree.map(lambda g: g * inv, grads)
+
+        new_params, new_opt = optimizer.update(grads, state.opt_state, params,
+                                               masks=masks)
+        metrics = {"loss": loss, **parts,
+                   "grad_norm": opt_mod.global_norm(grads)}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, optimizer: opt_mod.AdamW
+                     ) -> TrainState:
+    params = transformer.init_model(key, cfg)
+    return TrainState(params=params, opt_state=optimizer.init(params),
+                      step=jnp.zeros((), jnp.int32))

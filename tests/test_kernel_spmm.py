@@ -1,0 +1,211 @@
+"""Pallas LSCD SpMM kernel: interpret-mode sweeps vs the pure-jnp oracle.
+
+Per assignment: sweep shapes/dtypes/sparsities/tile geometries and
+assert_allclose against ref.py. Plus vjp correctness of the public op.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiled_csl
+from repro.kernels import ops, ref
+
+
+def _make(rng, m, k, sparsity, m_tb=128, k_tb=128):
+    a = rng.standard_normal((m, k), dtype=np.float32)
+    a[rng.random((m, k)) < sparsity] = 0.0
+    return a, tiled_csl.encode(a, m_tb=m_tb, k_tb=k_tb)
+
+
+# ---------------------------------------------------------------------------
+# grid sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 8),       # single tile, skinny
+    (256, 384, 16),      # multi-tile, skinny (paper's regime)
+    (512, 256, 64),      # batch 64 (paper's largest N_TB)
+    (128, 512, 128),     # wide-N
+    (384, 128, 7),       # ragged N -> padding path
+])
+@pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.8, 0.95])
+def test_kernel_matches_ref(m, k, n, sparsity):
+    rng = np.random.default_rng(hash((m, k, n, int(sparsity * 100))) % 2 ** 31)
+    a, t = _make(rng, m, k, sparsity)
+    b = jnp.asarray(rng.standard_normal((k, n), dtype=np.float32))
+    got = ops.spmm(t, b, backend="interpret", out_dtype=jnp.float32)
+    want = ref.spmm_ref(t, b, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    a, t = _make(rng, 256, 256, 0.8)
+    b = jnp.asarray(rng.standard_normal((256, 16), dtype=np.float32)).astype(dtype)
+    got = ops.spmm(t, b, backend="interpret", out_dtype=dtype)
+    want = ref.spmm_ref(t, b, out_dtype=dtype)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("m_tb,k_tb", [(128, 128), (64, 128), (128, 64),
+                                       (64, 64)])
+def test_kernel_tile_geometries(m_tb, k_tb):
+    rng = np.random.default_rng(7)
+    a, t = _make(rng, 256, 256, 0.7, m_tb=m_tb, k_tb=k_tb)
+    b = jnp.asarray(rng.standard_normal((256, 8), dtype=np.float32))
+    got = ops.spmm(t, b, backend="interpret", out_dtype=jnp.float32)
+    want = ref.spmm_ref(t, b, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_vs_dense_oracle():
+    """Against the ORIGINAL dense matrix: only bf16 value rounding may
+    differ. Output scale is ~sqrt(K*density) ~ 7, so the rounding-error
+    budget is absolute (per-element relative error explodes on
+    near-cancelling sums)."""
+    rng = np.random.default_rng(3)
+    a, t = _make(rng, 256, 256, 0.8)
+    b = jnp.asarray(rng.standard_normal((256, 8), dtype=np.float32))
+    got = ops.spmm(t, b, backend="interpret", out_dtype=jnp.float32)
+    want = ref.spmm_dense_oracle(jnp.asarray(a), b)
+    scale = float(jnp.max(jnp.abs(want)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.0, atol=0.01 * scale)
+
+
+def test_empty_tiles_fast_path():
+    """All-zero tiles exercise the nnz==0 pl.when skip branch."""
+    a = np.zeros((256, 256), np.float32)
+    a[:128, :128] = np.random.default_rng(0).standard_normal((128, 128))
+    t = tiled_csl.encode(a)
+    assert int(np.asarray(t.nnz)[1, 1]) == 0
+    b = jnp.ones((256, 8), jnp.float32)
+    got = ops.spmm(t, b, backend="interpret", out_dtype=jnp.float32)
+    want = ref.spmm_ref(t, b, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_vjp_through_spmm_diff():
+    """Custom VJP == autodiff of the reference path (exact, no numeric
+    differentiation — f32 central differences on a sum-of-squares loss
+    cancel catastrophically)."""
+    rng = np.random.default_rng(5)
+    a, t = _make(rng, 128, 128, 0.7)
+    b = jnp.asarray(rng.standard_normal((128, 4), dtype=np.float32))
+
+    def f_custom(b_):
+        return jnp.sum(ops.spmm_diff(t, b_) ** 2)
+
+    def f_ref(b_):
+        return jnp.sum(ref.spmm_ref(t, b_, out_dtype=jnp.float32) ** 2)
+
+    g_custom = jax.grad(f_custom)(b)
+    g_ref = jax.grad(f_ref)(b)
+    np.testing.assert_allclose(np.asarray(g_custom), np.asarray(g_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# property sweep (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mt=st.integers(1, 2), kt=st.integers(1, 3),
+    n=st.sampled_from([1, 8, 24, 64]),
+    sparsity=st.floats(0.0, 0.99),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_kernel_property(mt, kt, n, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    a, t = _make(rng, mt * 128, kt * 128, sparsity)
+    b = jnp.asarray(rng.standard_normal((kt * 128, n), dtype=np.float32))
+    got = ops.spmm(t, b, backend="interpret", out_dtype=jnp.float32)
+    want = ref.spmm_ref(t, b, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fused_epilogue_variants():
+    """Beyond-paper: bias + activation fused into the flush stage."""
+    from repro.kernels import spmm as spmm_mod
+    rng = np.random.default_rng(11)
+    a, t = _make(rng, 256, 256, 0.8)
+    b = jnp.asarray(rng.standard_normal((256, 16), dtype=np.float32))
+    bias = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    base = ref.spmm_ref(t, b, out_dtype=jnp.float32)
+    for epi, fn in [("silu", jax.nn.silu), ("gelu", jax.nn.gelu),
+                    ("relu", lambda x: jnp.maximum(x, 0.0))]:
+        got = spmm_mod.lscd_spmm(t, b, n_tb=16, interpret=True,
+                                 epilogue=epi, bias=bias)
+        want = fn(base + bias[:, None])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+    # epilogue without bias
+    got = spmm_mod.lscd_spmm(t, b, n_tb=16, interpret=True, epilogue="relu")
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(jnp.maximum(base, 0.0)),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_dense_gemm_baseline_kernel():
+    """The cuBLAS-analogue Pallas GEMM (paper's dense baseline) vs jnp."""
+    from repro.kernels import gemm
+    rng = np.random.default_rng(21)
+    a = jnp.asarray(rng.standard_normal((256, 384), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal((384, 128), dtype=np.float32))
+    got = gemm.dense_gemm(a, b, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(a @ b),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_spmm_equals_dense_gemm_on_same_matrix():
+    """LSCD SpMM and the dense baseline agree on the same pruned matrix —
+    the kernel-level apples-to-apples the paper's Fig.9 relies on."""
+    from repro.kernels import gemm
+    rng = np.random.default_rng(22)
+    a, t = _make(rng, 256, 256, 0.8)
+    # dense path sees the bf16-rounded values the encoding stores
+    a_rounded = tiled_csl.decode(t)
+    b = jnp.asarray(rng.standard_normal((256, 128), dtype=np.float32))
+    dense = gemm.dense_gemm(jnp.asarray(a_rounded), b, interpret=True)
+    sparse = ops.spmm(t, b, backend="interpret", out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_moe_experts_with_tiled_csl_weights():
+    """Stacked (per-expert) Tiled-CSL weights through the MoE block."""
+    import dataclasses
+    from repro import configs
+    from repro.core import pruning
+    from repro.models import moe, transformer
+    cfg = configs.smoke("qwen3_moe_30b_a3b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    moe_p = params["layers"]["moe"]
+    # take layer 0's expert stacks [E, f, d] and sparsify per expert
+    one_layer = {k: (v[0] if hasattr(v, "ndim") and v.ndim >= 3 else v)
+                 for k, v in moe_p.items() if k in ("gate", "up", "down")}
+    one_layer["router"] = {"w": moe_p["router"]["w"][0]}
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model),
+                          jnp.float32)
+    y_dense, _ = moe.moe_block(one_layer, x, cfg)
+    sparse = dict(one_layer)
+    for k in ("gate", "up", "down"):
+        sparse[k] = pruning.sparsify_params(
+            {"w": one_layer[k]}, 0.5,
+            should_sparsify=lambda n: True)["w"]
+    y_sparse, _ = moe.moe_block(sparse, x, cfg)
+    # 50% pruning changes values; just verify shape/finiteness + that the
+    # sparse path runs the vmapped CSL decode end to end
+    assert y_sparse.shape == y_dense.shape
+    assert bool(jnp.isfinite(y_sparse).all())

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train
+step on CPU, asserting output shapes + finiteness (assignment deliverable f).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.training import optimizer as opt_mod
+from repro.training import train_loop
+
+
+def _tokens(cfg, key, B, S):
+    if cfg.n_codebooks:
+        return jax.random.randint(key, (B, cfg.n_codebooks, S), 0, cfg.vocab)
+    return jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS + configs.PAPER_IDS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = configs.smoke(arch)
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_model(key, cfg)
+    B, S = 2, 32
+    tokens = _tokens(cfg, key, B, S)
+    logits, _, aux = transformer.forward(params, {"tokens": tokens}, cfg,
+                                         mode="train")
+    if cfg.n_codebooks:
+        assert logits.shape == (B, S, cfg.n_codebooks, cfg.vocab)
+    else:
+        assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = configs.smoke(arch)
+    opt = opt_mod.AdamW(lr=1e-3)
+    state = train_loop.init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    key = jax.random.PRNGKey(1)
+    B, S = 2, 16
+    toks = _tokens(cfg, key, B, S + 1)
+    batch = ({"tokens": toks[..., :-1], "targets": toks[..., 1:]})
+    step = train_loop.make_train_step(cfg, opt)
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert int(new_state.step) == 1
+    # params actually changed
+    d0 = jax.tree.leaves(state.params)[0]
+    d1 = jax.tree.leaves(new_state.params)[0]
+    assert not np.allclose(np.asarray(d0, np.float32),
+                           np.asarray(d1, np.float32))
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_decode_equals_full_forward(arch):
+    """prefill(S) + decode(S) == train-mode forward over S+1 tokens."""
+    cfg = configs.smoke(arch)
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    B, S, max_len = 2, 16, 32
+    toks = _tokens(cfg, jax.random.PRNGKey(1), B, S + 1)
+    full, _, _ = transformer.forward(params, {"tokens": toks[..., :S + 1]},
+                                     cfg, mode="train")
+    cache = transformer.init_cache(cfg, B, max_len)
+    _, cache, _ = transformer.forward(params, {"tokens": toks[..., :S]},
+                                      cfg, mode="prefill", cache=cache)
+    dec, _, _ = transformer.forward(
+        params, {"tokens": toks[..., S:S + 1]}, cfg, mode="decode",
+        cache=cache, pos=jnp.array(S, jnp.int32))
+    if cfg.n_codebooks:
+        ref, got = full[:, -1], dec[:, 0]
+    else:
+        ref, got = full[:, -1], dec[:, 0]
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_param_count_analytic_close_to_actual():
+    """ModelConfig.param_count() tracks the real init within 2%."""
+    for arch in ("tinyllama_1_1b", "qwen2_moe_a2_7b", "mamba2_130m"):
+        cfg = configs.smoke(arch)
+        params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert abs(est - actual) / actual < 0.05, (arch, est, actual)  # small models: norms/conv excluded
+
+
+def test_full_configs_match_assignment():
+    """The full (non-smoke) configs carry the exact published numbers."""
+    c = configs.get("deepseek_coder_33b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (62, 7168, 56, 8, 19200, 32256)
+    c = configs.get("tinyllama_1_1b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (22, 2048, 32, 4, 5632, 32000)
+    c = configs.get("minicpm3_4b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == \
+        (62, 2560, 40, 6400, 73448)
+    assert c.attn_kind == "mla"
+    c = configs.get("qwen2_1_5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (28, 1536, 12, 2, 8960, 151936)
+    assert c.qkv_bias
+    c = configs.get("recurrentgemma_9b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (38, 4096, 16, 1, 12288, 256000)
+    assert c.layer_pattern == ("rglru", "rglru", "attn")
+    c = configs.get("mamba2_130m")
+    assert (c.n_layers, c.d_model, c.vocab, c.ssm_state) == \
+        (24, 768, 50280, 128)
+    c = configs.get("qwen2_moe_a2_7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.vocab) == \
+        (24, 2048, 16, 16, 151936)
+    assert (c.n_routed_experts, c.top_k, c.n_shared_experts) == (60, 4, 4)
+    c = configs.get("qwen3_moe_30b_a3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.vocab) == \
+        (48, 2048, 32, 4, 151936)
+    assert (c.n_routed_experts, c.top_k, c.d_expert) == (128, 8, 768)
+    c = configs.get("qwen2_vl_2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (28, 1536, 12, 2, 8960, 151936)
+    assert c.mrope_sections == (16, 24, 24)
+    c = configs.get("musicgen_large")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ff, c.vocab) == \
+        (48, 2048, 32, 32, 8192, 2048)
+    assert c.n_codebooks == 4

@@ -1,0 +1,67 @@
+"""Roofline model + HLO collective parser unit tests."""
+
+import numpy as np
+import pytest
+
+from repro.core import roofline
+
+
+def test_parse_collective_bytes_basic():
+    hlo = """
+  %ag = f32[1024,512]{1,0} all-gather(f32[64,512] %x), dimensions={0}
+  %ar.1 = bf16[256,256]{1,0} all-reduce(bf16[256,256] %y), to_apply=%add
+  %rs = f32[32,128]{1,0} reduce-scatter(f32[512,128] %z), dimensions={0}
+  %a2a = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-to-all(f32[8,128] %p, f32[8,128] %q)
+  %cp = f32[16,16]{1,0} collective-permute(f32[16,16] %w), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(f32[128,64] %a, f32[64,128] %b)
+"""
+    got = roofline.parse_collective_bytes(hlo)
+    assert got["all-gather"] == 1024 * 512 * 4
+    assert got["all-reduce"] == 256 * 256 * 2
+    assert got["reduce-scatter"] == 32 * 128 * 4
+    assert got["all-to-all"] == 2 * 8 * 128 * 4
+    assert got["collective-permute"] == 16 * 16 * 4
+    assert "dot" not in got
+
+
+def test_parse_collective_start_done_dedup():
+    hlo = """
+  %ags = f32[64,64]{1,0} all-gather-start(f32[4,64] %x), dimensions={0}
+  %agd = f32[64,64]{1,0} all-gather-done(f32[64,64] %ags)
+"""
+    got = roofline.parse_collective_bytes(hlo)
+    assert got["all-gather"] == 64 * 64 * 4  # counted once (at -start)
+
+
+def test_roofline_terms_bounds():
+    t = roofline.RooflineTerms(flops=197e12, hbm_bytes=819e9,
+                               collective_bytes=50e9, chips=1,
+                               model_flops=98.5e12)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.collective_s == pytest.approx(1.0)
+    assert t.useful_flops_ratio == pytest.approx(0.5)
+    assert t.step_time_s == pytest.approx(1.0)
+
+
+def test_dense_vs_lscd_terms():
+    m = k = 9216
+    for n in (8, 64):
+        d = roofline.dense_gemm_terms(m, k, n)
+        s = roofline.lscd_kernel_terms(m, k, n, 0.8)
+        assert d.bound == "memory"
+        # LSCD reduces only the A-bytes term
+        assert s.hbm_bytes < d.hbm_bytes
+        assert s.flops == d.flops  # compute-as-dense
+    # index overhead makes low sparsity LOSE (paper: crossover ~60%)
+    s40 = roofline.lscd_kernel_terms(m, k, 8, 0.4)
+    d = roofline.dense_gemm_terms(m, k, 8)
+    assert s40.hbm_bytes > d.hbm_bytes
+
+
+def test_ci_eq1_eq2():
+    # Eq.1: CI <= min(M, N)
+    assert roofline.dense_gemm_ci(1 << 20, 16) <= 16
+    # Eq.2 at beta=0 reduces to Eq.1
+    assert roofline.lscd_ci(4096, 16, 0.0) == pytest.approx(
+        roofline.dense_gemm_ci(4096, 16))

@@ -1,0 +1,79 @@
+"""Serving: generation, sampling, continuous batching scheduler."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.serving import batching, engine
+
+
+def test_generate_greedy_deterministic():
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 6), 0, cfg.vocab)
+    out1 = engine.generate(params, prompt, cfg, max_new_tokens=5, jit=False)
+    out2 = engine.generate(params, prompt, cfg, max_new_tokens=5, jit=False)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (2, 11)
+
+
+def test_generate_matches_stepwise_full_forward():
+    """Greedy generate == argmax over repeated full forwards (no cache)."""
+    cfg = configs.smoke("qwen2_1_5b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (1, 5), 0, cfg.vocab)
+    out = engine.generate(params, prompt, cfg, max_new_tokens=4, jit=False)
+    # reference: recompute from scratch each step
+    cur = prompt
+    for _ in range(4):
+        logits, _, _ = transformer.forward(params, {"tokens": cur}, cfg,
+                                           mode="train")
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        cur = jnp.concatenate([cur, nxt], axis=1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(cur))
+
+
+def test_sampling_modes():
+    logits = jnp.asarray([[1.0, 5.0, 2.0, 0.1]])
+    assert int(engine.sample(logits, jax.random.PRNGKey(0))[0]) == 1
+    tok = engine.sample(logits, jax.random.PRNGKey(0), temperature=1.0,
+                        top_k=2)
+    assert int(tok[0]) in (1, 2)
+
+
+def test_continuous_batching_matches_sequential():
+    """The batcher must produce exactly what one-request-at-a-time greedy
+    generation produces."""
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, rng.integers(3, 7)).astype(np.int64)
+               for _ in range(5)]
+    want = {}
+    for uid, p in enumerate(prompts):
+        out = engine.generate(params, jnp.asarray(p[None]), cfg,
+                              max_new_tokens=4, jit=False)
+        want[uid] = np.asarray(out)[0, len(p):].tolist()
+
+    b = batching.ContinuousBatcher(params, cfg, n_slots=2, max_len=32)
+    for uid, p in enumerate(prompts):
+        b.submit(uid, p, max_new_tokens=4)
+    got = b.run_to_completion()
+    assert set(got) == set(want)
+    for uid in want:
+        assert got[uid] == want[uid], (uid, got[uid], want[uid])
+
+
+def test_batcher_slot_reuse():
+    cfg = configs.smoke("qwen2_1_5b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    b = batching.ContinuousBatcher(params, cfg, n_slots=1, max_len=24)
+    rng = np.random.default_rng(1)
+    for uid in range(3):
+        b.submit(uid, rng.integers(0, cfg.vocab, 4).astype(np.int64), 3)
+    out = b.run_to_completion()
+    assert len(out) == 3
+    assert all(len(v) == 3 for v in out.values())

@@ -1,0 +1,143 @@
+"""Tiled-CSL format: roundtrip, reorder invariants, padding accounting.
+
+Property tests (hypothesis) + targeted unit tests.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiled_csl
+
+
+def _random_sparse(rng, m, k, sparsity):
+    a = rng.standard_normal((m, k), dtype=np.float32)
+    a[rng.random((m, k)) < sparsity] = 0.0
+    return a
+
+
+# ---------------------------------------------------------------------------
+# unit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k", [(128, 128), (256, 384), (512, 128)])
+@pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.8, 0.99])
+@pytest.mark.parametrize("reorder", ["interleave", "none", "greedy"])
+def test_roundtrip(m, k, sparsity, reorder):
+    rng = np.random.default_rng(42)
+    a = _random_sparse(rng, m, k, sparsity)
+    t = tiled_csl.encode(a, reorder=reorder)
+    dec = tiled_csl.decode(t)
+    # bf16 value rounding only; zero/nonzero pattern must be exact
+    assert ((dec != 0) == (a != 0)).all() or sparsity == 0.0
+    rel = np.max(np.abs(dec - a)) / (np.max(np.abs(a)) + 1e-12)
+    assert rel < 0.01
+    assert t.n_nonzero == int((a != 0).sum())
+
+
+def test_decode_jax_matches_numpy():
+    rng = np.random.default_rng(0)
+    a = _random_sparse(rng, 256, 256, 0.8)
+    t = tiled_csl.encode(a)
+    np.testing.assert_allclose(np.asarray(tiled_csl.decode_jax(t),
+                                          dtype=np.float32),
+                               tiled_csl.decode(t), atol=1e-6)
+
+
+def test_reorder_improves_conflict_score():
+    rng = np.random.default_rng(1)
+    a = _random_sparse(rng, 128, 128, 0.8)
+    t_i = tiled_csl.encode(a, reorder="interleave")
+    t_n = tiled_csl.encode(a, reorder="none")
+    t_g = tiled_csl.encode(a, reorder="greedy")
+    nz = int(np.asarray(t_i.nnz)[0, 0])
+    s_i = tiled_csl.sublane_conflict_score(np.asarray(t_i.words)[0, 0], nz, 128)
+    s_n = tiled_csl.sublane_conflict_score(np.asarray(t_n.words)[0, 0], nz, 128)
+    s_g = tiled_csl.sublane_conflict_score(np.asarray(t_g.words)[0, 0], nz, 128)
+    assert s_i > s_n * 2          # interleave is much better than row-major
+    assert s_g > s_n * 2          # Alg.3 greedy too
+    assert s_i > 7.0              # near conflict-free at this density
+
+
+def test_reorder_preserves_nonzero_set():
+    """The AOT reorder is a permutation *within* each tile (paper §4.3.3:
+    changes global-memory placement only)."""
+    rng = np.random.default_rng(2)
+    a = _random_sparse(rng, 256, 256, 0.7)
+    for reorder in ("interleave", "greedy"):
+        t = tiled_csl.encode(a, reorder=reorder)
+        np.testing.assert_allclose(
+            tiled_csl.decode(t), tiled_csl.decode(tiled_csl.encode(a, reorder="none")),
+            atol=0.0)
+
+
+def test_pack_unpack_inverse():
+    rng = np.random.default_rng(3)
+    vals = rng.standard_normal(1000).astype(np.float32)
+    locs = rng.integers(0, 2 ** 14, 1000)
+    w = tiled_csl.pack_words(vals, locs)
+    v2, l2 = tiled_csl.unpack_words(w)
+    assert (l2 == locs).all()
+    rel = np.abs(v2 - vals) / (np.abs(vals) + 1e-12)
+    assert rel.max() < 0.008      # bf16 mantissa
+
+def test_padding_word_is_exact_noop():
+    """Padding words are (val=+0.0, loc=0): scatter-add contributes nothing."""
+    w = np.zeros(4, np.uint32)
+    vals, locs = tiled_csl.unpack_words(w)
+    assert (vals == 0.0).all() and (locs == 0).all()
+
+
+def test_pad_overhead_bounded():
+    rng = np.random.default_rng(4)
+    a = _random_sparse(rng, 1024, 1024, 0.8)
+    t = tiled_csl.encode(a)
+    assert t.pad_overhead < 0.10   # PAD_QUANTUM=128 keeps waste small
+    assert t.nbytes_sparse < 0.55 * t.nbytes_dense
+
+
+def test_misaligned_shape_raises():
+    with pytest.raises(ValueError):
+        tiled_csl.encode(np.zeros((100, 128), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# property (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mt=st.integers(1, 3), kt=st.integers(1, 3),
+    sparsity=st.floats(0.0, 0.999),
+    seed=st.integers(0, 2 ** 16),
+    m_tb=st.sampled_from([64, 128]),
+)
+def test_roundtrip_property(mt, kt, sparsity, seed, m_tb):
+    rng = np.random.default_rng(seed)
+    a = _random_sparse(rng, mt * m_tb, kt * 128, sparsity)
+    t = tiled_csl.encode(a, m_tb=m_tb, k_tb=128)
+    dec = tiled_csl.decode(t)
+    assert ((dec != 0) == (a != 0)).all()
+    if (a != 0).any():
+        rel = np.max(np.abs(dec - a)) / np.max(np.abs(a))
+        assert rel < 0.01
+    # derived stats are consistent
+    assert t.n_nonzero == int((a != 0).sum())
+    assert t.words.shape[-1] % tiled_csl.PAD_QUANTUM == 0
+    assert int(np.asarray(t.nnz).max()) <= t.max_nnz
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), sparsity=st.floats(0.3, 0.95))
+def test_conflict_score_property(seed, sparsity):
+    """Interleave reorder never does worse than row-major order."""
+    rng = np.random.default_rng(seed)
+    a = _random_sparse(rng, 128, 128, sparsity)
+    if (a != 0).sum() < 16:
+        return
+    t_i = tiled_csl.encode(a, reorder="interleave")
+    t_n = tiled_csl.encode(a, reorder="none")
+    nz = int(np.asarray(t_i.nnz)[0, 0])
+    s_i = tiled_csl.sublane_conflict_score(np.asarray(t_i.words)[0, 0], nz, 128)
+    s_n = tiled_csl.sublane_conflict_score(np.asarray(t_n.words)[0, 0], nz, 128)
+    assert s_i >= s_n - 1e-9
