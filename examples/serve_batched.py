@@ -3,7 +3,10 @@
 Shows the production serving loop: a queue of requests with ragged prompt
 lengths drained through a fixed pool of decode slots — the throughput
 mechanism the paper's memory savings feed (§6.3: bigger effective batch on
-the same hardware).
+the same hardware). Admission is bucketed (prompts pad to power-of-two
+length buckets) and in-slot (prompt K/V is written straight into the shared
+cache inside the jitted prefill), so mixed-length traffic compiles a
+handful of shapes instead of one per distinct prompt length.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py --arch qwen2_moe_a2_7b
       (any id from repro.configs.ARCH_IDS; smoke-sized weights)
@@ -24,6 +27,9 @@ ap.add_argument("--arch", default="tinyllama_1_1b",
                 choices=configs.ARCH_IDS)
 ap.add_argument("--requests", type=int, default=10)
 ap.add_argument("--slots", type=int, default=3)
+ap.add_argument("--max-len", type=int, default=48)
+ap.add_argument("--eos", type=int, default=None,
+                help="token id that terminates generation early")
 args = ap.parse_args()
 
 cfg = configs.smoke(args.arch)
@@ -31,9 +37,12 @@ if cfg.n_codebooks:
     raise SystemExit("audio archs need codebook prompts; use the engine API")
 params = transformer.init_model(jax.random.PRNGKey(0), cfg)
 
-b = batching.ContinuousBatcher(params, cfg, n_slots=args.slots, max_len=48)
+b = batching.ContinuousBatcher(params, cfg, n_slots=args.slots,
+                               max_len=args.max_len, eos_id=args.eos)
 rng = np.random.default_rng(0)
-lens = rng.integers(3, 12, args.requests)
+lo = min(3, args.max_len - 1)
+hi = max(lo + 1, min(args.max_len // 2, args.max_len - 1))
+lens = rng.integers(lo, hi, args.requests)
 for uid in range(args.requests):
     b.submit(uid, rng.integers(0, cfg.vocab, lens[uid]).astype(np.int64),
              max_new_tokens=int(rng.integers(4, 10)))
@@ -44,10 +53,25 @@ while True:
     finished = b.step()
     steps += 1
     for uid, toks in finished.items():
+        why = b.requests[uid].finish_reason
         print(f"[{time.time() - t0:5.2f}s] request {uid} done "
-              f"({len(toks)} tokens): {toks}")
+              f"({len(toks)} tokens, {why}): {toks}")
     if not b.queue and all(s is None for s in b.slots):
         break
-print(f"{args.requests} ragged requests over {args.slots} slots "
+
+m = b.metrics
+print(f"\n{args.requests} ragged requests over {args.slots} slots "
       f"in {steps} engine steps — slots were reused "
-      f"{args.requests - args.slots} times without pausing the loop")
+      f"{max(args.requests - args.slots, 0)} times without pausing the loop")
+print(f"scheduler: occupancy={m.occupancy:.2f}  "
+      f"mean_queue_wait={m.mean_queue_wait_steps:.1f} steps  "
+      f"prefill={m.prefill_tokens} tok (+{m.prefill_padding_overhead:.0%} "
+      f"bucket/group padding)  decode={m.decode_tokens} tok")
+why = ("(vs one per distinct prompt length without bucketing)"
+       if b.buckets is not None else
+       "(recurrent arch: exact-length admission, buckets disabled)")
+print(f"admission: {m.prefill_calls} prefill calls over buckets "
+      f"{sorted(m.bucket_admits)} -> {b.prefill_compiles} compiled shapes "
+      f"{why}")
+print(f"time split: admit {m.admit_time_s:.2f}s (incl. compiles) / "
+      f"decode {m.decode_time_s:.2f}s")

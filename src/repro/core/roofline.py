@@ -154,6 +154,18 @@ def parse_collective_bytes(hlo_text: str) -> Dict[str, float]:
     return {k: v for k, v in out.items() if v > 0}
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    jax >= 0.5 returns a flat dict; 0.4.x returns a one-element list of
+    dicts (one per partitioned executable). Always hand back a dict.
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def from_cost_analysis(cost: dict, hlo_text: str, chips: int, *,
                        label: str = "", model_flops: float = 0.0
                        ) -> RooflineTerms:

@@ -17,6 +17,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax >= 0.6 renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_tiles: int):
     k = pl.program_id(2)
@@ -55,7 +60,7 @@ def dense_gemm(a: jax.Array, b: jax.Array, *, m_tb: int = 128,
         out_specs=pl.BlockSpec((m_tb, n_tb), lambda mi, ni, ki: (mi, ni)),
         scratch_shapes=[pltpu.VMEM((m_tb, n_tb), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

@@ -91,7 +91,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
                 }
             except Exception as e:  # CPU backend may not implement it
                 mem_rec = {"unavailable": str(e)}
-            cost = compiled.cost_analysis()
+            cost = roofline.cost_analysis_dict(compiled)
             hlo = compiled.as_text()
             coll = roofline.parse_collective_bytes(hlo)
             # scan-corrected costs via unrolled probe extrapolation
@@ -164,7 +164,8 @@ def _probe_costs(cfg, shape, mesh, *, weight_mode, sparsity, remat,
         compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                            donate_argnums=cell.donate) \
             .lower(*cell.args).compile()
-        cost = {k: float(v) for k, v in dict(compiled.cost_analysis()).items()
+        cost = {k: float(v)
+                for k, v in roofline.cost_analysis_dict(compiled).items()
                 if isinstance(v, (int, float))}
         coll = roofline.parse_collective_bytes(compiled.as_text())
         vals[li] = (cost, coll)
@@ -177,7 +178,8 @@ def _probe_costs(cfg, shape, mesh, *, weight_mode, sparsity, remat,
         compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
                            donate_argnums=cell.donate) \
             .lower(*cell.args).compile()
-        cost = {k: float(v) for k, v in dict(compiled.cost_analysis()).items()
+        cost = {k: float(v)
+                for k, v in roofline.cost_analysis_dict(compiled).items()
                 if isinstance(v, (int, float))}
         coll = roofline.parse_collective_bytes(compiled.as_text())
         return cost, coll, {"mode": "unrolled_full"}

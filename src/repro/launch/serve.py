@@ -78,6 +78,12 @@ def main() -> None:
     n_tokens = sum(len(v) for v in done.values())
     print(f"served {len(done)} requests / {n_tokens} tokens in {dt:.2f}s "
           f"({n_tokens / dt:.1f} tok/s, params={n_dense / 1e6:.1f}M)")
+    m = b.metrics
+    print(f"scheduler: occupancy={m.occupancy:.2f} "
+          f"queue_wait={m.mean_queue_wait_steps:.1f} steps "
+          f"prefill/decode={m.prefill_tokens}/{m.decode_tokens} tok "
+          f"prefill_shapes={b.prefill_compiles} "
+          f"admit/decode time={m.admit_time_s:.2f}/{m.decode_time_s:.2f}s")
     for uid in sorted(done)[:3]:
         print(f"  req {uid}: {done[uid][:8]}...")
 

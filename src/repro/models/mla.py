@@ -195,7 +195,21 @@ def mla_decode(params: dict, x: jax.Array, cache: dict, pos: jax.Array,
     q_lat = jnp.einsum("bshd,hdr->bshr", q_nope.astype(jnp.float32), w_uk)
     cdt = ckv.dtype
     scale = (dn + cfg.qk_rope_dim) ** -0.5
-    scores = (nn.einsum_f32acc("bshr,btr->bhst", q_lat.astype(cdt), ckv)
+    # Rounding q_lat straight to the cache dtype loses ~8 mantissa bits that
+    # the prefill path (f32 scores over expanded latents) keeps — measured as
+    # the decode-vs-full-forward drift on minicpm3. Compensated split: carry
+    # the rounding residual as a second cache-dtype q row, so the q side
+    # recovers ~f32 precision while the score einsum stays in the MXU-native
+    # low-precision x low-precision -> f32 mode. The hi/lo rows stack on the
+    # s axis so the einsum remains ONE contraction — the latent cache is
+    # streamed once, not twice (it is the decode-bandwidth term, §Perf 8).
+    S = q_lat.shape[1]
+    q_lat_hi = q_lat.astype(cdt)
+    q_lat_lo = (q_lat - q_lat_hi.astype(jnp.float32)).astype(cdt)
+    s_pair = nn.einsum_f32acc("bshr,btr->bhst",
+                              jnp.concatenate([q_lat_hi, q_lat_lo], axis=1),
+                              ckv)                           # [B,h,2S,T]
+    scores = (s_pair[:, :, :S] + s_pair[:, :, S:]
               + nn.einsum_f32acc("bshd,btd->bhst", q_rope.astype(cdt),
                                  ckrope)) * scale
     mask = (jnp.arange(T)[None, :] <= pos_vec[:, None])[:, None, None, :]

@@ -189,6 +189,47 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+def cache_slot_axis(cfg: ModelConfig) -> int:
+    """Axis of the batch (decode-slot) dim in every cache leaf.
+
+    Scan-stacked caches are [L, B, ...] (slot axis 1); unrolled stacks are
+    lists of [B, ...] leaves (slot axis 0).
+    """
+    return 1 if _use_scan(cfg) else 0
+
+
+def scatter_cache_slots(cfg: ModelConfig, full: Any, part: Any,
+                        slots: jax.Array) -> Any:
+    """Write a small per-request cache into slot rows of the shared cache.
+
+    ``part`` is a cache tree built for ``k`` requests (``init_cache(cfg, k,
+    S)``); ``slots [k]`` names the target rows in ``full`` (the
+    ``[n_slots, max_len]``-shaped serving cache). Every other axis writes
+    its leading region — e.g. attention K/V leaves fill positions
+    ``[0, S)`` of the slot, recurrent-state leaves (no length axis)
+    overwrite the slot row entirely. Duplicate slot indices are allowed iff
+    the duplicated rows carry identical data (used to pad admission groups
+    to a static batch).
+
+    Jit-compatible: shapes are static, the scatter is a single
+    ``.at[].set`` per leaf.
+    """
+    axis = cache_slot_axis(cfg)
+
+    def leaf(f, p):
+        idx = []
+        for ax in range(f.ndim):
+            if ax == axis:
+                idx.append(slots)
+            elif p.shape[ax] != f.shape[ax]:
+                idx.append(slice(0, p.shape[ax]))
+            else:
+                idx.append(slice(None))
+        return f.at[tuple(idx)].set(p.astype(f.dtype))
+
+    return jax.tree.map(leaf, full, part)
+
+
 def _embed_tokens(params: Params, inputs: Dict[str, jax.Array],
                   cfg: ModelConfig, compute_dtype) -> jax.Array:
     if "embeds" in inputs and inputs["embeds"] is not None:

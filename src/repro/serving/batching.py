@@ -6,18 +6,38 @@ dense). This scheduler is the piece that converts that memory headroom into
 tokens/GPU-second: a fixed pool of B decode slots; finished/empty slots are
 refilled from a request queue without stopping the decode loop.
 
-Single-token-step continuous batching: each engine step decodes one token
-for every active slot; new requests are prefilled into their slot's cache
-region when admitted. Slot caches are per-slot trees stacked on the batch
-axis, so admission is a dynamic-update on axis 0 and the decode step is the
-ordinary batched ``serve_step``.
+Admission path (the part traffic diversity stresses):
+
+* **Bucketed prefill** — prompts are right-padded to a small set of static
+  power-of-two length buckets (``engine.length_buckets``), so the jitted
+  prefill compiles at most ``ceil(log2(max_len))`` times no matter how many
+  distinct prompt lengths arrive. Pure-attention stacks only; recurrent
+  stacks (ssm/rglru) degrade to exact-length buckets because pad tokens
+  would pollute the carried state.
+* **In-slot prefill** — ``engine.prefill_into_slots`` computes the prompt
+  K/V in a small ``[k, bucket]`` scratch cache and scatter-writes it into
+  the shared ``[n_slots, max_len]`` cache at the target slots *inside the
+  jit* — no throwaway ``[1, max_len]`` cache, no host-side tree splice.
+* **Batched admission** — up to ``admit_k`` queued requests from the same
+  bucket are prefillled in one call; groups are padded to a static ``k`` by
+  duplicating a real row (duplicate slot scatter with identical data is
+  well-defined), so ``k`` never adds compile shapes.
+
+Decode is the ordinary batched ``serve_step`` regime: one token for every
+slot per engine step, each slot at its own absolute position. Requests
+terminate on EOS / stop tokens, on their ``max_new_tokens`` budget, or when
+the slot's cache region is exhausted (``max_len`` truncation).
+``SchedulerMetrics`` counts what the loop did (occupancy, queue wait,
+prefill vs decode tokens, padding overhead, compile count) — surfaced by
+``benchmarks/e2e_throughput.py`` and ``examples/serve_batched.py``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,23 +55,109 @@ class Request:
     max_new_tokens: int
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    pending: bool = True            # still queued (not yet taken for admission)
+    finish_reason: str = ""         # "stop" | "max_new_tokens" | "max_len"
+    submit_step: int = 0            # engine step at submit (queue-wait metric)
+    admit_step: int = -1
+
+
+@dataclasses.dataclass
+class SchedulerMetrics:
+    """Counters the serving loop maintains; all host-side, no device sync."""
+
+    steps: int = 0
+    admitted: int = 0
+    completed: int = 0
+    eos_terminated: int = 0
+    truncated: int = 0
+    prefill_calls: int = 0
+    prefill_tokens: int = 0          # real prompt tokens
+    padded_prefill_tokens: int = 0   # incl. bucket padding + group padding
+    decode_tokens: int = 0
+    queue_wait_steps: int = 0        # summed over admitted requests
+    active_slot_steps: int = 0       # occupancy numerator
+    slot_steps: int = 0              # n_slots * steps
+    admit_time_s: float = 0.0
+    decode_time_s: float = 0.0
+    bucket_admits: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def occupancy(self) -> float:
+        return self.active_slot_steps / max(self.slot_steps, 1)
+
+    @property
+    def prefill_padding_overhead(self) -> float:
+        """Fraction of prefilled tokens that were bucket/group padding."""
+        return 1.0 - self.prefill_tokens / max(self.padded_prefill_tokens, 1)
+
+    @property
+    def mean_queue_wait_steps(self) -> float:
+        return self.queue_wait_steps / max(self.admitted, 1)
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["occupancy"] = self.occupancy
+        d["prefill_padding_overhead"] = self.prefill_padding_overhead
+        d["mean_queue_wait_steps"] = self.mean_queue_wait_steps
+        return d
 
 
 class ContinuousBatcher:
-    """Slot-based continuous batching over a fixed decode batch B."""
+    """Slot-based continuous batching over a fixed decode batch B.
+
+    eos_id / stop_ids: generation stops when the model emits any of these
+    (the stop token is kept in ``generated``). ``admit_k`` is the static
+    admission batch — up to that many same-bucket requests prefill in one
+    call. ``min_bucket`` floors the bucket ladder so tiny prompts share one
+    compile.
+    """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
-                 max_len: int, backend: str = "auto"):
+                 max_len: int, backend: str = "auto",
+                 eos_id: Optional[int] = None,
+                 stop_ids: Sequence[int] = (),
+                 admit_k: Optional[int] = None, min_bucket: int = 8,
+                 request_history: int = 1024):
+        if cfg.n_codebooks:
+            raise ValueError("codebook (audio) archs need [n_cb, S] prompts; "
+                             "drive engine.generate directly")
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
         self.backend = backend
+        self.stop_ids = frozenset(
+            ([] if eos_id is None else [int(eos_id)])
+            + [int(t) for t in stop_ids])
+        self.admit_k = max(1, min(admit_k or min(n_slots, 4), n_slots))
+        # Recurrent state (ssm/rglru) cannot absorb pad tokens — bucket
+        # padding is exact only for pure-attention stacks. Others degrade to
+        # exact-length "buckets" (one compile per distinct length, as before
+        # this scheduler existed — never worse, attention archs far better).
+        self._pure_attn = all(cfg.layer_kind(i) == "attn"
+                              for i in range(cfg.n_layers))
+        self.buckets: Optional[Tuple[int, ...]] = (
+            engine.length_buckets(max_len, min_bucket) if self._pure_attn
+            else None)
+        # FIFO arrival order (head-of-line fairness) + per-bucket index so a
+        # same-bucket admission group is O(group), not a full-queue rebuild.
+        # Entries admitted via the bucket index go stale in ``queue`` and are
+        # lazily purged from its head (O(1) amortized).
         self.queue: Deque[Request] = deque()
+        self._by_bucket: Dict[int, Deque[Request]] = {}
+        # uid -> Request for introspection; finished entries are evicted
+        # beyond ``request_history`` so a long-running server stays bounded.
+        self.requests: Dict[int, Request] = {}
+        self._done_uids: Deque[int] = deque()
+        self._request_history = request_history
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.pos = np.zeros(n_slots, np.int32)      # per-slot next position
         self.cache = transformer.init_cache(cfg, n_slots, max_len)
         self.last_token = np.zeros(n_slots, np.int64)
+        self.metrics = SchedulerMetrics()
+        self._prefill = jax.jit(
+            lambda p, c, t, s, l: engine.prefill_into_slots(
+                p, c, t, s, l, self.cfg, backend=self.backend))
         self._decode = jax.jit(
             lambda p, c, t, pos: self._decode_step(p, c, t, pos))
 
@@ -69,56 +175,159 @@ class ContinuousBatcher:
         return logits[:, -1], cache
 
     # -- public API ---------------------------------------------------------
+    @property
+    def prefill_compiles(self) -> int:
+        """Distinct prefill shapes compiled so far (one per bucket hit)."""
+        try:
+            return int(self._prefill._cache_size())
+        except Exception:  # jit internals moved — fall back to buckets seen
+            return len(self.metrics.bucket_admits)
+
     def submit(self, uid: int, prompt: np.ndarray, max_new_tokens: int):
-        self.queue.append(Request(uid, prompt, max_new_tokens))
+        prompt = np.asarray(prompt)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(f"prompt must be a non-empty 1-D token array, "
+                             f"got shape {prompt.shape}")
+        if prompt.size > self.max_len - 1:
+            raise ValueError(f"prompt length {prompt.size} needs "
+                             f">= {prompt.size + 1} cache positions; "
+                             f"max_len is {self.max_len}")
+        cur = self.requests.get(uid)
+        if cur is not None and not cur.done:
+            raise ValueError(f"request uid {uid} is still queued or active")
+        req = Request(uid, prompt, max_new_tokens,
+                      submit_step=self.metrics.steps)
+        self.queue.append(req)
+        self._by_bucket.setdefault(self._bucket(req), deque()).append(req)
+        self.requests[uid] = req
 
-    def _admit(self):
-        # Scan-stacked caches are [L, B, ...] (slot axis 1); unrolled stacks
-        # are lists of [B, ...] trees (slot axis 0).
-        stacked = self.cfg.scan_layers and self.cfg.uniform_layers
-        for s in range(self.n_slots):
-            if self.slots[s] is None and self.queue:
-                req = self.queue.popleft()
-                # prefill this request alone, then splice into slot s
-                tok = jnp.asarray(req.prompt[None, :])
-                logits, cache1 = engine.prefill(
-                    self.params, tok, self.cfg, self.max_len,
-                    backend=self.backend)
-                nxt = int(np.asarray(jnp.argmax(logits, axis=-1))[0])
+    def _bucket(self, req: Request) -> int:
+        if self.buckets is None:
+            return len(req.prompt)
+        return engine.bucket_for(len(req.prompt), self.buckets)
 
-                def splice(full, one):
-                    starts = ((0, s) + (0,) * (one.ndim - 2) if stacked
-                              else (s,) + (0,) * (one.ndim - 1))
-                    return jax.lax.dynamic_update_slice(
-                        full, one.astype(full.dtype), starts)
+    def _finish(self, req: Request, slot: int, reason: str,
+                finished: Dict[int, List[int]]):
+        req.done = True
+        req.finish_reason = reason
+        finished[req.uid] = req.generated
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.last_token[slot] = 0
+        self.metrics.completed += 1
+        if reason == "stop":
+            self.metrics.eos_terminated += 1
+        elif reason == "max_len":
+            self.metrics.truncated += 1
+        self._done_uids.append(req.uid)
+        while len(self._done_uids) > self._request_history:
+            old = self._done_uids.popleft()
+            cur = self.requests.get(old)
+            if cur is not None and cur.done:   # uid may have been resubmitted
+                del self.requests[old]
 
-                self.cache = jax.tree.map(splice, self.cache, cache1)
+    def _check_done(self, req: Request, slot: int, tok: int,
+                    finished: Dict[int, List[int]]) -> None:
+        """Termination, in priority order: stop token, token budget, cache
+        capacity (per-request max_len truncation)."""
+        if tok in self.stop_ids:
+            self._finish(req, slot, "stop", finished)
+        elif len(req.generated) >= req.max_new_tokens:
+            self._finish(req, slot, "max_new_tokens", finished)
+        elif self.pos[slot] >= self.max_len:
+            self._finish(req, slot, "max_len", finished)
+
+    def _purge_admitted(self):
+        """Drop already-admitted (stale) entries from the queue head, so
+        ``queue`` emptiness keeps meaning "nothing left to admit"."""
+        while self.queue and not self.queue[0].pending:
+            self.queue.popleft()
+
+    def _take_group(self, limit: int) -> List[Request]:
+        """Pop up to ``limit`` same-bucket requests, FIFO: the group takes
+        the head-of-line request's bucket (via the per-bucket index, O(group));
+        non-matching requests keep their relative order."""
+        head_bucket = self._bucket(self.queue[0])
+        bq = self._by_bucket[head_bucket]
+        group: List[Request] = []
+        while bq and len(group) < limit:
+            req = bq.popleft()
+            req.pending = False
+            group.append(req)
+        if not bq:
+            del self._by_bucket[head_bucket]
+        self._purge_admitted()
+        return group
+
+    def _admit(self, finished: Dict[int, List[int]]):
+        m = self.metrics
+        self._purge_admitted()
+        while self.queue:
+            free = [s for s in range(self.n_slots) if self.slots[s] is None]
+            if not free:
+                return
+            group = self._take_group(min(len(free), self.admit_k))
+            bucket = self._bucket(group[0])
+            k = self.admit_k
+            # Static [k, bucket] batch: right-pad prompts to the bucket,
+            # pad the group to k by duplicating its last real row (same
+            # slot + same data -> the duplicate scatter writes are
+            # identical, hence exact; works for recurrent state too since
+            # no pad *tokens* are introduced).
+            tokens = np.zeros((k, bucket), np.int64)
+            slots_arr = np.empty(k, np.int32)
+            lens = np.empty(k, np.int32)
+            for i in range(k):
+                req = group[min(i, len(group) - 1)]
+                tokens[i, :len(req.prompt)] = req.prompt
+                slots_arr[i] = free[min(i, len(group) - 1)]
+                lens[i] = len(req.prompt)
+            logits, self.cache = self._prefill(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(slots_arr), jnp.asarray(lens))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            m.prefill_calls += 1
+            m.padded_prefill_tokens += k * bucket
+            m.bucket_admits[bucket] = m.bucket_admits.get(bucket, 0) + 1
+            for i, req in enumerate(group):
+                s = free[i]
                 self.slots[s] = req
                 self.pos[s] = len(req.prompt)
-                self.last_token[s] = nxt
-                req.generated.append(nxt)
+                self.last_token[s] = int(nxt[i])
+                req.generated.append(int(nxt[i]))
+                req.admit_step = m.steps
+                m.admitted += 1
+                m.prefill_tokens += len(req.prompt)
+                m.queue_wait_steps += m.steps - req.submit_step
+                self._check_done(req, s, int(nxt[i]), finished)
 
     def step(self) -> Dict[int, List[int]]:
         """Admit + decode one token for all active slots. Returns finished."""
-        self._admit()
-        active = [s for s in range(self.n_slots) if self.slots[s] is not None]
+        m = self.metrics
         finished: Dict[int, List[int]] = {}
+        t0 = time.monotonic()
+        self._admit(finished)
+        m.admit_time_s += time.monotonic() - t0
+        active = [s for s in range(self.n_slots) if self.slots[s] is not None]
+        m.steps += 1
+        m.slot_steps += self.n_slots
+        m.active_slot_steps += len(active)
         if not active:
             return finished
+        t0 = time.monotonic()
         tokens = jnp.asarray(self.last_token[:, None])
         pos_vec = jnp.asarray(self.pos)
         logits, self.cache = self._decode(self.params, self.cache, tokens,
                                           pos_vec)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        m.decode_time_s += time.monotonic() - t0
+        m.decode_tokens += len(active)
         for s in active:
             req = self.slots[s]
             req.generated.append(int(nxt[s]))
             self.pos[s] += 1
             self.last_token[s] = int(nxt[s])
-            if len(req.generated) >= req.max_new_tokens:
-                req.done = True
-                finished[req.uid] = req.generated
-                self.slots[s] = None
+            self._check_done(req, s, int(nxt[s]), finished)
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:

@@ -38,6 +38,70 @@ def prefill(params, tokens: jax.Array, cfg: ModelConfig, max_len: int,
     return logits[:, -1], cache
 
 
+def length_buckets(max_len: int, min_bucket: int = 8) -> Tuple[int, ...]:
+    """Static prompt-length buckets: powers of two up to ``max_len``.
+
+    Admission pads each prompt to its bucket so the jitted prefill compiles
+    once per bucket — at most ``ceil(log2(max_len))`` shapes — instead of
+    once per distinct prompt length in the traffic mix.
+    """
+    if max_len < 1:
+        raise ValueError(f"max_len must be >= 1, got {max_len}")
+    buckets = []
+    b = min(min_bucket, max_len)
+    while b < max_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_len)
+    return tuple(buckets)
+
+
+def bucket_for(length: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket that fits ``length``."""
+    for b in buckets:
+        if length <= b:
+            return b
+    raise ValueError(f"prompt length {length} exceeds largest bucket "
+                     f"{buckets[-1]}")
+
+
+def prefill_into_slots(params, cache, tokens: jax.Array, slots: jax.Array,
+                       lengths: jax.Array, cfg: ModelConfig, *,
+                       backend: str = "auto") -> Tuple[jax.Array, Any]:
+    """Bucketed in-slot prefill: process ``k`` right-padded prompts and
+    write their K/V (or recurrent state) directly into rows ``slots`` of
+    the shared ``[n_slots, max_len]`` serving cache.
+
+    tokens:  [k, S] prompt ids, right-padded to the bucket length S
+    slots:   [k] target cache rows (duplicates allowed for identical rows —
+             admission pads its group to a static k this way)
+    lengths: [k] true prompt lengths (1 <= lengths <= S)
+
+    Returns (logits at each prompt's last real token [k, vocab], updated
+    shared cache). The whole function is jit-compatible; under jit it
+    compiles once per (k, S) — admission keeps k static and S bucketed.
+
+    Right-padding is exact for attention stacks: the causal mask keeps real
+    positions from attending pad positions, and the pad K/V written at
+    positions [length, S) are overwritten by decode at position p before
+    the mask ``t <= p`` first exposes them. It is NOT exact for recurrent
+    state (ssm/rglru), where pad tokens would pollute the carried state —
+    callers must pass exact-length tokens for those stacks (the batcher
+    degrades buckets to exact lengths there).
+    """
+    k = tokens.shape[0]
+    S = tokens.shape[-1]
+    scratch = transformer.init_cache(cfg, k, S)
+    logits, scratch, _ = transformer.forward(
+        params, {"tokens": tokens}, cfg, mode="prefill", cache=scratch,
+        backend=backend)
+    idx = (lengths.astype(jnp.int32) - 1).reshape(
+        (k,) + (1,) * (logits.ndim - 1))
+    last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+    cache = transformer.scatter_cache_slots(cfg, cache, scratch, slots)
+    return last, cache
+
+
 def serve_step(params, cache, token: jax.Array, pos: jax.Array,
                cfg: ModelConfig, *, backend: str = "auto"
                ) -> Tuple[jax.Array, Any]:

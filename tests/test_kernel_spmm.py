@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import tiled_csl
 from repro.kernels import ops, ref
@@ -115,16 +114,26 @@ def test_vjp_through_spmm_diff():
 
 
 # ---------------------------------------------------------------------------
-# property sweep (hypothesis)
+# property sweep (deterministic; formerly hypothesis-driven)
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=12, deadline=None)
-@given(
-    mt=st.integers(1, 2), kt=st.integers(1, 3),
-    n=st.sampled_from([1, 8, 24, 64]),
-    sparsity=st.floats(0.0, 0.99),
-    seed=st.integers(0, 2 ** 16),
-)
+# Same space the hypothesis sweep drew from — mt x kt x n x sparsity with a
+# seeded RNG per case — pinned to a fixed 12-case grid so the tier-1 suite
+# needs no optional deps (see requirements-dev.txt for the extras).
+@pytest.mark.parametrize("mt,kt,n,sparsity,seed", [
+    (1, 1, 1, 0.0, 101),
+    (1, 1, 8, 0.37, 202),
+    (1, 2, 24, 0.5, 303),
+    (1, 3, 64, 0.62, 404),
+    (2, 1, 1, 0.75, 505),
+    (2, 1, 64, 0.8, 606),
+    (2, 2, 8, 0.9, 707),
+    (2, 3, 24, 0.95, 808),
+    (1, 2, 1, 0.99, 909),
+    (2, 3, 64, 0.99, 1010),
+    (1, 3, 8, 0.13, 1111),
+    (2, 2, 24, 0.88, 1212),
+])
 def test_kernel_property(mt, kt, n, sparsity, seed):
     rng = np.random.default_rng(seed)
     a, t = _make(rng, mt * 128, kt * 128, sparsity)

@@ -77,3 +77,128 @@ def test_batcher_slot_reuse():
     out = b.run_to_completion()
     assert len(out) == 3
     assert all(len(v) == 3 for v in out.values())
+    # the single slot was reused for every request, back to back
+    assert b.metrics.admitted == 3 and b.metrics.completed == 3
+    assert b.slots == [None]
+
+
+def test_mixed_bucket_admission_matches_sequential():
+    """Ragged prompts spanning several length buckets produce exactly the
+    sequential greedy outputs (bucket padding must be numerically inert)."""
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    lengths = [3, 9, 14, 5, 12, 4]          # buckets 8 and 16 (max_len 32)
+    prompts = [rng.integers(0, cfg.vocab, L).astype(np.int64)
+               for L in lengths]
+    want = {}
+    for uid, p in enumerate(prompts):
+        out = engine.generate(params, jnp.asarray(p[None]), cfg,
+                              max_new_tokens=4, jit=False)
+        want[uid] = np.asarray(out)[0, len(p):].tolist()
+
+    b = batching.ContinuousBatcher(params, cfg, n_slots=3, max_len=32)
+    for uid, p in enumerate(prompts):
+        b.submit(uid, p, max_new_tokens=4)
+    got = b.run_to_completion()
+    assert got == want
+    assert set(b.metrics.bucket_admits) == {8, 16}
+
+
+def test_bucketed_admission_compile_count():
+    """N distinct prompt lengths compile at most ceil(log2(max_len)) prefill
+    shapes — and once every bucket is warm, new lengths compile NOTHING
+    (asserted via a jax.monitoring compile-event listener)."""
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    max_len = 32
+    b = batching.ContinuousBatcher(params, cfg, n_slots=2, max_len=max_len)
+    rng = np.random.default_rng(4)
+    # phase 1: one request per bucket (8, 16, 32) warms every prefill shape
+    for uid, L in enumerate((5, 12, 20)):
+        b.submit(uid, rng.integers(0, cfg.vocab, L).astype(np.int64), 2)
+    b.run_to_completion()
+    bound = int(np.ceil(np.log2(max_len)))
+    assert b.prefill_compiles <= bound, (b.prefill_compiles, bound)
+
+    events = []
+    jax.monitoring.register_event_listener(
+        lambda name, **kw: events.append(name))
+    try:
+        # phase 2: 12 new distinct lengths — zero fresh compiles
+        for uid, L in enumerate(range(3, 15), start=100):
+            b.submit(uid, rng.integers(0, cfg.vocab, L).astype(np.int64), 2)
+        out = b.run_to_completion()
+    finally:
+        jax.monitoring.clear_event_listeners()
+    assert len(out) == 12
+    compile_events = [e for e in events if "compil" in e]
+    assert not compile_events, compile_events
+    assert b.prefill_compiles <= bound
+
+
+def test_batcher_eos_termination():
+    """Generation stops at the stop token (kept in the output)."""
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab, 6).astype(np.int64)
+    # learn what greedy decoding emits, then replay with eos = 3rd token
+    probe = batching.ContinuousBatcher(params, cfg, n_slots=1, max_len=32)
+    probe.submit(0, prompt, max_new_tokens=6)
+    free_run = probe.run_to_completion()[0]
+    eos = free_run[2]
+
+    b = batching.ContinuousBatcher(params, cfg, n_slots=1, max_len=32,
+                                   eos_id=eos)
+    b.submit(0, prompt, max_new_tokens=6)
+    out = b.run_to_completion()
+    stop_at = free_run.index(eos)            # eos may repeat earlier too
+    assert out[0] == free_run[:stop_at + 1]  # stops AT the stop token
+    assert out[0][-1] == eos
+    assert len(out[0]) < len(free_run)
+    assert b.requests[0].finish_reason == "stop"
+    assert b.metrics.eos_terminated == 1
+
+
+def test_batcher_max_len_truncation():
+    """A request whose budget exceeds the slot's cache region is truncated
+    at max_len instead of scribbling out of bounds."""
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    b = batching.ContinuousBatcher(params, cfg, n_slots=1, max_len=16)
+    b.submit(0, rng.integers(0, cfg.vocab, 6).astype(np.int64), 100)
+    out = b.run_to_completion()
+    # prefill gives 1 token at pos 6; decode fills positions 6..15
+    assert len(out[0]) == 1 + (16 - 6)
+    assert b.requests[0].finish_reason == "max_len"
+    assert b.metrics.truncated == 1
+    # over-long prompts are rejected up front
+    with pytest.raises(ValueError):
+        b.submit(1, rng.integers(0, cfg.vocab, 16).astype(np.int64), 1)
+
+
+def test_batcher_metrics_accounting():
+    """Counter invariants: every generated token is either the prefill's
+    first token or one decode token; queue-wait and occupancy move."""
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, rng.integers(3, 12)).astype(np.int64)
+               for _ in range(7)]
+    b = batching.ContinuousBatcher(params, cfg, n_slots=2, max_len=32)
+    for uid, p in enumerate(prompts):
+        b.submit(uid, p, max_new_tokens=4)
+    out = b.run_to_completion()
+    m = b.metrics
+    assert m.admitted == m.completed == len(prompts)
+    assert sum(len(v) for v in out.values()) == m.admitted + m.decode_tokens
+    assert m.prefill_tokens == sum(len(p) for p in prompts)
+    assert m.padded_prefill_tokens >= m.prefill_tokens
+    assert 0.0 < m.occupancy <= 1.0
+    assert m.queue_wait_steps > 0        # 7 requests over 2 slots must wait
+    assert m.prefill_calls >= 1 and m.decode_time_s >= 0.0
+    d = m.as_dict()
+    assert d["occupancy"] == m.occupancy
+    assert d["completed"] == len(prompts)

@@ -1,11 +1,11 @@
 """Tiled-CSL format: roundtrip, reorder invariants, padding accounting.
 
-Property tests (hypothesis) + targeted unit tests.
+Deterministic property sweeps (seeded grids over the same space the old
+hypothesis strategies drew from) + targeted unit tests.
 """
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import tiled_csl
 
@@ -102,16 +102,31 @@ def test_misaligned_shape_raises():
 
 
 # ---------------------------------------------------------------------------
-# property (hypothesis)
+# property sweeps (deterministic; formerly hypothesis-driven)
 # ---------------------------------------------------------------------------
 
-@settings(max_examples=20, deadline=None)
-@given(
-    mt=st.integers(1, 3), kt=st.integers(1, 3),
-    sparsity=st.floats(0.0, 0.999),
-    seed=st.integers(0, 2 ** 16),
-    m_tb=st.sampled_from([64, 128]),
-)
+@pytest.mark.parametrize("mt,kt,sparsity,seed,m_tb", [
+    (1, 1, 0.0, 11, 128),
+    (1, 1, 0.999, 12, 64),
+    (1, 2, 0.25, 13, 128),
+    (1, 3, 0.5, 14, 64),
+    (2, 1, 0.6, 15, 128),
+    (2, 2, 0.7, 16, 64),
+    (2, 3, 0.8, 17, 128),
+    (3, 1, 0.85, 18, 64),
+    (3, 2, 0.9, 19, 128),
+    (3, 3, 0.95, 20, 64),
+    (1, 1, 0.5, 21, 64),
+    (2, 2, 0.99, 22, 128),
+    (3, 3, 0.999, 23, 128),
+    (1, 3, 0.33, 24, 64),
+    (3, 1, 0.05, 25, 128),
+    (2, 1, 0.97, 26, 64),
+    (1, 2, 0.77, 27, 64),
+    (2, 3, 0.42, 28, 128),
+    (3, 2, 0.66, 29, 64),
+    (2, 2, 0.15, 30, 128),
+])
 def test_roundtrip_property(mt, kt, sparsity, seed, m_tb):
     rng = np.random.default_rng(seed)
     a = _random_sparse(rng, mt * m_tb, kt * 128, sparsity)
@@ -127,8 +142,11 @@ def test_roundtrip_property(mt, kt, sparsity, seed, m_tb):
     assert int(np.asarray(t.nnz).max()) <= t.max_nnz
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 2 ** 16), sparsity=st.floats(0.3, 0.95))
+@pytest.mark.parametrize("seed,sparsity", [
+    (31, 0.3), (32, 0.35), (33, 0.4), (34, 0.45), (35, 0.5),
+    (36, 0.55), (37, 0.6), (38, 0.65), (39, 0.7), (40, 0.75),
+    (41, 0.8), (42, 0.85), (43, 0.9), (44, 0.93), (45, 0.95),
+])
 def test_conflict_score_property(seed, sparsity):
     """Interleave reorder never does worse than row-major order."""
     rng = np.random.default_rng(seed)
