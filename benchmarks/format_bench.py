@@ -48,4 +48,22 @@ def run(full: bool = False) -> List[str]:
     err = float(np.max(np.abs(tiled_csl.decode(t) - a)))
     rel = err / float(np.max(np.abs(a)))
     rows.append(f"tiledcsl_roundtrip_relerr,{rel * 1e6:.3f},bf16_rounding")
+
+    # grouped encoding (gate+up style): the shared max_nnz costs a little
+    # extra padding vs two independent encodings — measure that delta, since
+    # it is the price of the one-launch grouped kernel (DESIGN.md §8).
+    mats = []
+    for s in (0.8, 0.8):
+        g = rng.standard_normal((1024, 1024), dtype=np.float32)
+        g[rng.random(g.shape) < s] = 0.0
+        mats.append(g)
+    t0 = time.perf_counter()
+    tg = tiled_csl.encode_group(mats)
+    enc_us = (time.perf_counter() - t0) * 1e6
+    solo_bytes = sum(tiled_csl.encode(m).nbytes_sparse for m in mats)
+    rows.append(
+        f"tiledcsl_encode_group_g2_1024x1024_s80,{enc_us:.0f},"
+        f"bytes_ratio={tg.nbytes_sparse / tg.nbytes_dense:.3f};"
+        f"shared_maxnnz_overhead={tg.nbytes_sparse / solo_bytes - 1.0:.4f};"
+        f"pad_overhead={tg.pad_overhead:.3f}")
     return rows

@@ -106,6 +106,32 @@ def bench_shape(m: int, k: int, n: int, sparsity: float, *,
     return rows
 
 
+def bench_fused_group(m: int, k: int, n: int, sparsity: float, *,
+                      group: int, epilogue: str, tag: str, rng) -> List[str]:
+    """Grouped fused-epilogue call vs the pre-fusion execution (G separate
+    kernel calls + an XLA pointwise pass): the HBM bytes the fusion removes
+    and the roofline speedup it buys. Pad overhead is measured from a real
+    encoding, as in :func:`bench_shape`."""
+    _, t = _encoded(m, k, sparsity, rng)
+    pad = t.pad_overhead
+    fused = roofline.lscd_grouped_terms(
+        m, k, n, sparsity, group=group, epilogue=epilogue, fused=True,
+        pad_overhead=pad)
+    unfused = roofline.lscd_grouped_terms(
+        m, k, n, sparsity, group=group, epilogue=epilogue, fused=False,
+        pad_overhead=pad)
+    saved = unfused.hbm_bytes - fused.hbm_bytes
+    name = f"{tag}_m{m}_k{k}_n{n}_s{int(sparsity * 100)}_g{group}"
+    return [
+        f"{name}_roofline_unfused,{unfused.step_time_s * 1e6:.3f},"
+        f"hbm_bytes={unfused.hbm_bytes:.0f}",
+        f"{name}_roofline_fused,{fused.step_time_s * 1e6:.3f},"
+        f"hbm_bytes={fused.hbm_bytes:.0f};saved_bytes={saved:.0f};"
+        f"speedup={unfused.step_time_s / fused.step_time_s:.3f};"
+        f"epilogue={epilogue}",
+    ]
+
+
 def run(full: bool = False) -> List[str]:
     """Fig.9 grid (reduced by default: one model + the paper's sparsities)."""
     rng = np.random.default_rng(0)
@@ -122,6 +148,16 @@ def run(full: bool = False) -> List[str]:
     h = _OPT_HIDDEN["opt-30b"]
     for n in (8, 16, 32, 64, 128, 256, 512, 1024):
         rows += bench_shape(4 * h, h, n, 0.8, measure_wall=False, rng=rng)
+    # Grouped fused-epilogue cells (DESIGN.md §8): SwiGLU gate+up with the
+    # silu_mul binary epilogue (one C write-back instead of three C-sized
+    # transfers) and a grouped QKV launch (B streamed once for G=3).
+    for n in (8, 32) if not full else (8, 16, 32, 64):
+        rows += bench_fused_group(4 * h, h, n, 0.8, group=2,
+                                  epilogue="silu_mul", tag="swiglu", rng=rng)
+        rows += bench_fused_group(h, h, n, 0.8, group=3, epilogue="none",
+                                  tag="qkv", rng=rng)
+        rows += bench_fused_group(4 * h, h, n, 0.8, group=1, epilogue="gelu",
+                                  tag="mlp1_gelu", rng=rng)
     # Wall-clock sanity cell (small, CPU-measurable)
     rows += bench_shape(4096, 4096, 16, 0.8, measure_wall=True, rng=rng)
     return rows

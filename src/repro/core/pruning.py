@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import tiled_csl
+from repro.core import sparse_linear, tiled_csl
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +131,66 @@ def sparsify_matrix(w: jax.Array, sparsity: float, *,
         t = tiled_csl.TiledCSL(words=words, nnz=t.nnz, shape=t.shape,
                                m_tb=t.m_tb, k_tb=t.k_tb, dtype=t.dtype)
     return t
+
+
+def _pregroupable(ws) -> bool:
+    """Same-shape TiledCSLs (plain or sharing one scan stack) → one group,
+    subject to the same max_nnz balance cap as call-time grouping (a group
+    shares one pad target; wildly uneven members would bloat the stream)."""
+    if not all(isinstance(w, tiled_csl.TiledCSL) for w in ws):
+        return False
+    key = (ws[0].shape, ws[0].m_tb, ws[0].k_tb, ws[0].words.ndim,
+           ws[0].words.shape[0] if ws[0].words.ndim == 4 else None)
+    return all((w.shape, w.m_tb, w.k_tb, w.words.ndim,
+                w.words.shape[0] if w.words.ndim == 4 else None) == key
+               for w in ws) and sparse_linear.balanced_group(ws)
+
+
+def group_projections(params: Any) -> Any:
+    """Pre-group same-shape Tiled-CSL projection pairs at reformat time.
+
+    Walks a (possibly scan-stacked) params tree and rewrites, in place of
+    the per-weight encodings:
+
+    * ``{gate: {w}, up: {w}}``     → ``{gate_up: {w: grouped G=2}}``
+      (SwiGLU; consumed by ``layers.swiglu_mlp`` via the ``silu_mul``
+      binary epilogue)
+    * ``{wq: {w}, wk: {w}, wv: {w}}`` → ``{wqkv: {w: grouped G=3}, ...}``
+      (QKV; biases stay on the original dicts — only the weights group)
+
+    whenever the members share one padded shape and tile geometry
+    (scan-stacked leaves group along axis 1; ``lax.scan`` slices the layer
+    axis back off). This is the production counterpart of
+    ``sparse_linear.linear_grouped``'s call-time stacking: grouping happens
+    ONCE here, so the jitted serving step streams the grouped words with no
+    per-step pad+stack traffic (DESIGN.md §8). Dense or shape-mismatched
+    projections are left untouched.
+    """
+    if not isinstance(params, dict):
+        if isinstance(params, (list, tuple)):
+            return type(params)(group_projections(p) for p in params)
+        return params
+    out = {k: group_projections(v) for k, v in params.items()}
+
+    def w_of(name):
+        sub = out.get(name)
+        return sub.get("w") if isinstance(sub, dict) else None
+
+    gate_up = [w_of("gate"), w_of("up")]
+    if all(w is not None for w in gate_up) and _pregroupable(gate_up):
+        out["gate_up"] = {"w": tiled_csl.group_stack(gate_up)}
+        del out["gate"]["w"], out["up"]["w"]
+        for name in ("gate", "up"):
+            if not out[name]:
+                del out[name]
+    qkv = [w_of(n) for n in ("wq", "wk", "wv")]
+    if all(w is not None for w in qkv) and _pregroupable(qkv):
+        out["wqkv"] = {"w": tiled_csl.group_stack(qkv)}
+        for name in ("wq", "wk", "wv"):
+            del out[name]["w"]
+            if not out[name]:
+                del out[name]
+    return out
 
 
 def sparsify_params(params: Any, sparsity: float,

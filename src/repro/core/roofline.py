@@ -229,3 +229,71 @@ def lscd_kernel_terms(m: int, k: int, n: int, sparsity: float, *,
     flops = 2.0 * m * k * n
     return RooflineTerms(flops=flops, hbm_bytes=bytes_, collective_bytes=0.0,
                          chips=chips, label=label, model_flops=flops)
+
+
+def _epilogue_is_binary(name: str) -> bool:
+    """Single-source the epilogue registry from the kernel (lazy import so
+    this module stays numpy-only at import time); unknown names raise the
+    same ValueError the op layer would."""
+    from repro.kernels import spmm as _spmm
+    if name in _spmm._BINARY_EPILOGUES:
+        return True
+    if name in _spmm._EPILOGUES:
+        return False
+    _spmm.epilogue_kind(name)  # raises with the known-names message
+    return False
+
+
+def lscd_grouped_terms(m: int, k: int, n: int, sparsity: float, *,
+                       group: int = 1, epilogue: str = "none",
+                       fused: bool = True, pad_overhead: float = 0.0,
+                       chips: int = 1, label: str = "lscd_grouped"
+                       ) -> RooflineTerms:
+    """Analytic roofline of G same-shape LSCD projections + epilogue.
+
+    ``fused=True`` models one grouped kernel launch (DESIGN.md §8): the G
+    compressed-A streams, B streamed **once**, and the epilogue applied in
+    VMEM — C is one [M, N] write-back for binary epilogues
+    (silu_mul/gelu_mul; the SwiGLU fusion) or G write-backs for unary ones.
+
+    ``fused=False`` models the pre-fusion execution the model stack used to
+    pay: G separate kernel calls (each re-streaming B and writing its
+    pre-activation C), plus — when an epilogue is requested — an XLA
+    pointwise pass that reads the pre-activation C's back from HBM and
+    writes the activated result. The delta between the two is the traffic
+    the grouped fused path removes; ``benchmarks/kernel_bench.py`` reports
+    it per paper shape.
+    """
+    binary = _epilogue_is_binary(epilogue)
+    if binary and group != 2:
+        raise ValueError(f"binary epilogue {epilogue!r} needs group=2")
+    nnz = m * k * (1.0 - sparsity)
+    a_bytes = group * nnz * 4.0 / max(1.0 - pad_overhead, 1e-9)
+    c_one = 2.0 * m * n                     # one bf16 [M, N] block
+    if fused:
+        b_bytes = 2.0 * k * n               # B streamed once for all G
+        c_bytes = c_one if binary else group * c_one
+    else:
+        b_bytes = group * 2.0 * k * n       # one B stream per call
+        c_bytes = group * c_one             # pre-activation writes
+        if epilogue != "none":
+            # separate pointwise pass: read the pre-activations back, write
+            # the activated result (one combined C for binary epilogues).
+            c_bytes += group * c_one + (c_one if binary else group * c_one)
+    flops = group * 2.0 * m * k * n
+    return RooflineTerms(flops=flops, hbm_bytes=a_bytes + b_bytes + c_bytes,
+                         collective_bytes=0.0, chips=chips, label=label,
+                         model_flops=flops)
+
+
+def fused_epilogue_saved_bytes(m: int, k: int, n: int, sparsity: float, *,
+                               group: int = 1, epilogue: str = "none",
+                               pad_overhead: float = 0.0) -> float:
+    """HBM bytes per call the grouped fused path avoids vs unfused."""
+    unfused = lscd_grouped_terms(m, k, n, sparsity, group=group,
+                                 epilogue=epilogue, fused=False,
+                                 pad_overhead=pad_overhead)
+    fused = lscd_grouped_terms(m, k, n, sparsity, group=group,
+                               epilogue=epilogue, fused=True,
+                               pad_overhead=pad_overhead)
+    return unfused.hbm_bytes - fused.hbm_bytes

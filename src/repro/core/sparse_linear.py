@@ -8,53 +8,195 @@ the weight's runtime type:
   * dense jax.Array         → XLA dot (the "cuBLAS" path)
   * tiled_csl.TiledCSL      → LSCD SpMM (Pallas on TPU / XLA-ref elsewhere)
 
+plus ``linear_grouped()`` for G same-shape projections (gate+up, q/k/v)
+through one grouped kernel launch, optionally fused with a unary or binary
+epilogue (DESIGN.md §8) so decode-time skinny MatMuls skip the pointwise
+HBM round-trip.
+
 Orientation is the paper's: weights are stored ``[out, in]`` = A[M, K]; the
 activation matrix is transposed to ``[in, tokens]`` = B[K, N] so that N is
 the (skinny) token/batch dimension — §2.2's "Skinny MatMul".
+
+Out-dim contract: Tiled-CSL pads the out dim to the tile multiple; every
+entry point slices the result back to an explicit ``declared_out``
+(defaulting to the bias length, else the padded dim), so the bias and
+no-bias paths return the same shape.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import tiled_csl
-from repro.kernels import ops
+from repro.kernels import ops, spmm as spmm_mod
+
+Weight = Union[jax.Array, tiled_csl.TiledCSL]
 
 
-def linear(w, x: jax.Array, b: Optional[jax.Array] = None,
-           *, backend: str = "auto") -> jax.Array:
-    """y[..., out] = x[..., in] @ W^T + b.
+def _to_skinny_b(x: jax.Array, k_pad: int) -> jax.Array:
+    """[..., in] → B[in_padded, tokens] (the paper's skinny orientation)."""
+    k_in = x.shape[-1]
+    xt = x.reshape(-1, k_in).T
+    if k_pad != k_in:
+        xt = jnp.pad(xt, ((0, k_pad - k_in), (0, 0)))
+    return xt
+
+
+def _pad_bias(b: Optional[jax.Array], m_pad: int) -> Optional[jax.Array]:
+    """Zero-pad a bias to the tile-padded out dim (padded rows are sliced
+    off after the kernel, so their bias value is irrelevant)."""
+    if b is None or b.shape[0] == m_pad:
+        return b
+    return jnp.pad(b, (0, m_pad - b.shape[0]))
+
+
+def linear(w: Weight, x: jax.Array, b: Optional[jax.Array] = None,
+           *, declared_out: Optional[int] = None, epilogue: str = "none",
+           backend: str = "auto") -> jax.Array:
+    """y[..., declared_out] = epilogue(x[..., in] @ W^T + b).
 
     ``w`` is either a dense [out, in] array or a TiledCSL of logical shape
-    [out_padded, in_padded] (tile-aligned; padding sliced off here).
+    [out_padded, in_padded] (tile-aligned). ``declared_out`` names the
+    logical out dim to slice to (default: the bias length if a bias is
+    given, else the weight's stored out dim). For TiledCSL weights the bias
+    and the (unary) epilogue are fused into the kernel flush; the dense
+    path applies them as plain XLA ops in the activation dtype.
     """
+    spmm_mod.epilogue_kind(epilogue)  # unknown/binary names raise here too
     if isinstance(w, tiled_csl.TiledCSL):
+        if w.group is not None:
+            raise ValueError("grouped TiledCSL: use linear_grouped")
         lead = x.shape[:-1]
-        k_in = x.shape[-1]
-        xt = x.reshape(-1, k_in).T                       # B = [in, tokens]
-        if t_needs_pad := (w.shape[1] != k_in):
-            xt = jnp.pad(xt, ((0, w.shape[1] - k_in), (0, 0)))
+        xt = _to_skinny_b(x, w.shape[1])                 # B = [in, tokens]
         y = ops.spmm(w, xt.astype(x.dtype), out_dtype=x.dtype,
-                     backend=backend)                    # [out_pad, tokens]
+                     backend=backend, epilogue=epilogue,
+                     bias=_pad_bias(b, w.shape[0]))      # [out_pad, tokens]
         y = y.T.reshape(*lead, w.shape[0])
-        out_dim = b.shape[0] if b is not None else None
-        if out_dim is not None and out_dim != w.shape[0]:
-            y = y[..., :out_dim]
-        return y + b.astype(y.dtype) if b is not None else y
-    # dense path
+        out_dim = declared_out if declared_out is not None else (
+            b.shape[0] if b is not None else w.shape[0])
+        return y[..., :out_dim] if out_dim != w.shape[0] else y
+    # dense path (the "cuBLAS" baseline): same math, XLA pointwise epilogue
+    # in the activation dtype (matching the pre-fusion layer behaviour).
     y = jnp.dot(x, w.T.astype(x.dtype))
-    return y + b.astype(y.dtype) if b is not None else y
-
-
-def linear_logical_out(w, declared_out: int, x: jax.Array,
-                       b: Optional[jax.Array] = None, *,
-                       backend: str = "auto") -> jax.Array:
-    """Like :func:`linear` but slices the output to ``declared_out`` even
-    without a bias present (TiledCSL pads out-dim to the tile multiple)."""
-    y = linear(w, x, b, backend=backend)
-    if y.shape[-1] != declared_out:
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    y = spmm_mod.apply_epilogue(epilogue, y)
+    if declared_out is not None and declared_out != y.shape[-1]:
         y = y[..., :declared_out]
     return y
+
+
+def linear_logical_out(w: Weight, declared_out: int, x: jax.Array,
+                       b: Optional[jax.Array] = None, *,
+                       backend: str = "auto") -> jax.Array:
+    """Positional-``declared_out`` convenience wrapper over :func:`linear`."""
+    return linear(w, x, b, declared_out=declared_out, backend=backend)
+
+
+# A group shares one max_nnz, so members pad to the largest stream. Cap the
+# inflation: skip grouping when G·max(max_nnz) exceeds this factor of the
+# summed per-member streams (e.g. smoke-scale GQA, where tile padding makes
+# wq/wk shapes coincide but wk is mostly empty — grouping would stream MORE
+# A bytes than separate calls save on B).
+GROUP_MAX_NNZ_WASTE = 1.25
+
+
+def balanced_group(ws: Sequence[tiled_csl.TiledCSL]) -> bool:
+    """Shared predicate for call-time (groupable) and reformat-time
+    (pruning._pregroupable) grouping: members pad to one max_nnz, so the
+    group is only profitable when their streams are comparable."""
+    mnz = [w.max_nnz for w in ws]
+    return len(ws) * max(mnz) <= GROUP_MAX_NNZ_WASTE * sum(mnz)
+
+
+def groupable(ws: Sequence[Weight]) -> bool:
+    """True iff ``ws`` can ride one grouped LSCD launch profitably: all
+    plain TiledCSL with identical padded shape and tile geometry, and
+    balanced enough that the shared max_nnz does not bloat the A stream."""
+    if not ws or not all(isinstance(w, tiled_csl.TiledCSL) for w in ws):
+        return False
+    if any(w.group is not None for w in ws):
+        return False
+    key = (ws[0].shape, ws[0].m_tb, ws[0].k_tb)
+    return all((w.shape, w.m_tb, w.k_tb) == key for w in ws) and balanced_group(ws)
+
+
+def linear_grouped(ws: Union[tiled_csl.TiledCSL, Sequence[Weight]],
+                   x: jax.Array,
+                   bs: Optional[Sequence[Optional[jax.Array]]] = None,
+                   *, declared_outs: Sequence[int], epilogue: str = "none",
+                   backend: str = "auto"
+                   ) -> Union[jax.Array, Tuple[jax.Array, ...]]:
+    """G same-shape projections of one ``x`` through one grouped launch.
+
+    ``ws`` is a grouped TiledCSL (``tiled_csl.encode_group``) or a sequence
+    of G weights; TiledCSL sequences that satisfy :func:`groupable` are
+    stacked on the fly, anything else falls back to per-weight
+    :func:`linear` calls (dense weights keep the baseline XLA math).
+
+    Returns a tuple of G arrays, each sliced to its ``declared_outs`` entry
+    (unary epilogues, applied per group), or a single combined array for
+    binary epilogues (``silu_mul``/``gelu_mul``; G == 2 — the SwiGLU
+    fusion, one C-sized write-back instead of three).
+    """
+    douts = tuple(declared_outs)
+
+    if isinstance(ws, tiled_csl.TiledCSL):
+        grouped = ws
+        if grouped.group is None:
+            raise ValueError("linear_grouped needs a grouped TiledCSL")
+        n_w = grouped.group
+    else:
+        ws = tuple(ws)
+        n_w = len(ws)
+        # Call-time stacking is a per-step pad+stack of the compressed
+        # streams; TPU serving should pre-group at reformat time
+        # (tiled_csl.encode_group) and pass the grouped TiledCSL directly.
+        grouped = tiled_csl.group_stack(ws) if groupable(ws) else None
+    # Validate epilogue-vs-arity up front so the dense/mixed fallback raises
+    # the same ValueError the grouped kernel would (a binary epilogue with
+    # G != 2 must never silently drop projections).
+    binary = spmm_mod.epilogue_kind(epilogue, groups=n_w) == "binary"
+    if len(douts) != n_w:
+        raise ValueError(f"declared_outs {douts} does not match G={n_w}")
+    bs = tuple(bs) if bs is not None else (None,) * n_w
+    if len(bs) != n_w:
+        raise ValueError(f"{len(bs)} biases for G={n_w}")
+    if binary and len(set(douts)) != 1:
+        raise ValueError(f"binary epilogue pair must share declared_out, "
+                         f"got {douts}")
+
+    if grouped is None:
+        # Ungrouped fallback (dense / mixed / shape-mismatched weights):
+        # per-weight projections, epilogue as plain XLA ops in the
+        # activation dtype — the exact pre-fusion layer math.
+        ys = [linear(w, x, b, declared_out=do, backend=backend)
+              for w, b, do in zip(ws, bs, douts)]
+        if binary:
+            return spmm_mod.apply_epilogue(epilogue, ys[0], ys[1])
+        if epilogue != "none":
+            ys = [spmm_mod.apply_epilogue(epilogue, y) for y in ys]
+        return tuple(ys)
+
+    lead = x.shape[:-1]
+    m_pad = grouped.shape[0]
+    xt = _to_skinny_b(x, grouped.shape[1])
+    bias = None
+    if any(b is not None for b in bs):
+        bias = jnp.stack([
+            jnp.zeros((m_pad,), jnp.float32) if b is None
+            else _pad_bias(b.astype(jnp.float32), m_pad)
+            for b in bs])
+    y = ops.spmm_grouped(grouped, xt.astype(x.dtype), out_dtype=x.dtype,
+                         backend=backend, epilogue=epilogue, bias=bias)
+    if binary:
+        out = y.T.reshape(*lead, m_pad)
+        return out[..., :douts[0]] if douts[0] != m_pad else out
+    outs = []
+    for g, do in enumerate(douts):
+        og = y[g].T.reshape(*lead, m_pad)
+        outs.append(og[..., :do] if do != m_pad else og)
+    return tuple(outs)

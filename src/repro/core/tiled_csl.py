@@ -23,12 +23,20 @@ TPU adaptation (see DESIGN.md §2):
 
 The format is sharding-transparent: encoding is generated per TP shard, and
 tiles never cross shard boundaries (shards are tile-aligned by construction).
+
+Grouped encodings (:func:`encode_group` / :func:`group_stack`) stack G
+same-shape matrices on a leading group axis of ``words``/``nnz`` with one
+shared ``max_nnz``, so the grouped LSCD kernel can produce all G outputs in
+a single launch that streams the activation matrix once (DESIGN.md §8).
+Per-layer scan stacks (``pruning.sparsify_params`` on [L, M, K] leaves) use
+the same representation — a group is just "independent same-shape matrices
+sharing one pad target".
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -51,9 +59,15 @@ class TiledCSL:
 
     Attributes:
       words:  uint32[mt, kt, max_nnz] — packed (bf16 value | 16-bit location)
-              words per tile, AOT-reordered, zero-padded.
-      nnz:    int32[mt, kt] — true non-zero count per tile (<= max_nnz).
-      shape:  logical dense shape (m, k); m % m_tb == 0 and k % k_tb == 0.
+              words per tile, AOT-reordered, zero-padded. A *grouped*
+              encoding (see :func:`encode_group`) carries a leading group
+              axis: uint32[G, mt, kt, max_nnz] — G same-shape matrices
+              sharing one ``max_nnz`` so a single kernel launch can stream
+              all G weight streams against one activation block.
+      nnz:    int32[mt, kt] (or int32[G, mt, kt]) — true non-zero count per
+              tile (<= max_nnz).
+      shape:  logical dense shape (m, k) of *each* matrix;
+              m % m_tb == 0 and k % k_tb == 0.
       m_tb, k_tb: tile geometry.
       dtype:  dtype of the dense reconstruction (bf16 or f32 source).
     """
@@ -71,6 +85,19 @@ class TiledCSL:
         return int(self.words.shape[-1])
 
     @property
+    def group(self) -> Optional[int]:
+        """Number of grouped matrices, or None for a plain 2-D encoding.
+
+        Caveat: grouped-ness is inferred from ``words.ndim == 4``, which is
+        the SAME layout scan/expert stacks use ([L, ...] / [E, ...] leaves
+        from ``pruning.sparsify_params``) — "G independent same-shape
+        matrices sharing one pad target" is one representation. Callers
+        that hold a *stack* must slice the lead axis (scan does; MoE vmaps)
+        before treating a leaf as a projection group; the grouped ops
+        cannot tell a stack from a group on their own."""
+        return int(self.words.shape[0]) if self.words.ndim == 4 else None
+
+    @property
     def grid(self) -> Tuple[int, int]:
         return (self.shape[0] // self.m_tb, self.shape[1] // self.k_tb)
 
@@ -85,8 +112,11 @@ class TiledCSL:
 
     @property
     def nbytes_dense(self) -> int:
-        """Bytes of the dense bf16 counterpart."""
-        return int(np.prod(self.shape)) * 2
+        """Bytes of the dense bf16 counterpart — counting every matrix in
+        the leading word axes (group and/or scan-stack), to match what
+        ``nbytes_sparse`` streams."""
+        n_mats = int(np.prod(self.words.shape[:-3], dtype=np.int64))
+        return int(np.prod(self.shape)) * 2 * n_mats
 
     @property
     def pad_overhead(self) -> float:
@@ -207,6 +237,13 @@ def encode(dense: np.ndarray | jax.Array,
     m, k = a.shape
     if m % m_tb or k % k_tb:
         raise ValueError(f"shape {(m, k)} not tile-aligned to ({m_tb},{k_tb})")
+    if m_tb * k_tb > 65536:
+        # The packed word carries a 16-bit intra-tile location; a larger tile
+        # would silently wrap ``loc & 0xFFFF`` in pack_words and corrupt the
+        # weight placement.
+        raise ValueError(
+            f"tile geometry ({m_tb},{k_tb}) needs {m_tb * k_tb} intra-tile "
+            f"locations but the 16-bit loc field holds at most 65536")
     mt, kt = m // m_tb, k // k_tb
     n_tiles = mt * kt
 
@@ -267,8 +304,83 @@ def encode(dense: np.ndarray | jax.Array,
     )
 
 
+def encode_group(weights: Sequence[np.ndarray | jax.Array],
+                 m_tb: int = DEFAULT_M_TB,
+                 k_tb: int = DEFAULT_K_TB,
+                 reorder: str = "interleave",
+                 pad_quantum: int = PAD_QUANTUM) -> TiledCSL:
+    """Encode G same-shape (m, k) matrices as one grouped Tiled-CSL.
+
+    The result stacks per-weight ``words``/``nnz`` along a leading group
+    axis and shares one ``max_nnz`` (the max over the group, re-padded with
+    exact-no-op zero words), so the grouped LSCD kernel can stream every
+    weight with a single static block shape while B is streamed once.
+    Tiles stay per-weight — grouping changes layout, not tiling or math.
+    """
+    if not weights:
+        raise ValueError("encode_group needs at least one weight")
+    ts = [encode(w, m_tb=m_tb, k_tb=k_tb, reorder=reorder,
+                 pad_quantum=pad_quantum) for w in weights]
+    shapes = {t.shape for t in ts}
+    if len(shapes) != 1:
+        raise ValueError(f"grouped weights must share one shape, got {shapes}")
+    return group_stack(ts)
+
+
+def group_stack(ts: Sequence[TiledCSL]) -> TiledCSL:
+    """Stack already-encoded same-shape TiledCSLs into a grouped TiledCSL.
+
+    Pads every member's word stream to the group max ``max_nnz`` (padding
+    words are exact no-ops) and stacks ``words``/``nnz``. jit-safe: pure
+    pad/stack, usable at trace time on weights captured as arguments —
+    though the production path pre-groups once at weight-reformat time
+    (:func:`encode_group` / ``pruning.group_projections``) so the serving
+    hot path carries no restacking traffic.
+
+    Members that are themselves layer-stacked scan leaves (words
+    ``[L, mt, kt, w]``, as produced by ``pruning.sparsify_params`` on
+    ``[L, M, K]`` weights) stack on axis 1 → words ``[L, G, mt, kt, w]``;
+    ``lax.scan`` slices the leading L back off, yielding a per-layer
+    grouped TiledCSL inside the scan body.
+    """
+    ts = list(ts)
+    if not ts:
+        raise ValueError("group_stack needs at least one TiledCSL")
+    lead = ts[0].words.ndim - 3
+    if lead not in (0, 1):
+        raise ValueError("group_stack members must be plain or scan-stacked "
+                         f"encodings, got words rank {ts[0].words.ndim}")
+    for t in ts:
+        if t.words.ndim != ts[0].words.ndim or (
+                lead and t.words.shape[0] != ts[0].words.shape[0]):
+            raise ValueError("group_stack members must share the scan stack")
+        if (t.shape, t.m_tb, t.k_tb) != (ts[0].shape, ts[0].m_tb, ts[0].k_tb):
+            raise ValueError("group_stack members must share shape and tile "
+                             f"geometry, got {[(t.shape, t.m_tb, t.k_tb) for t in ts]}")
+    mx = max(t.max_nnz for t in ts)
+    pad = lambda w, d: w if w.shape[-1] == mx else jnp.pad(
+        w, ((0, 0),) * (d - 1) + ((0, mx - w.shape[-1]),))
+    words = jnp.stack([pad(t.words, t.words.ndim) for t in ts], axis=lead)
+    nnz = jnp.stack([t.nnz for t in ts], axis=lead)
+    return TiledCSL(words=words, nnz=nnz, shape=ts[0].shape,
+                    m_tb=ts[0].m_tb, k_tb=ts[0].k_tb, dtype=ts[0].dtype)
+
+
+def group_slice(t: TiledCSL, g: int) -> TiledCSL:
+    """Member ``g`` of a grouped TiledCSL as a plain 2-D encoding."""
+    if t.group is None:
+        raise ValueError("group_slice needs a grouped TiledCSL")
+    return TiledCSL(words=t.words[g], nnz=t.nnz[g], shape=t.shape,
+                    m_tb=t.m_tb, k_tb=t.k_tb, dtype=t.dtype)
+
+
 def decode(t: TiledCSL) -> np.ndarray:
-    """Reconstruct the dense f32 matrix (numpy; the test/debug inverse)."""
+    """Reconstruct the dense f32 matrix (numpy; the test/debug inverse).
+
+    Grouped encodings decode to ``[G, m, k]``.
+    """
+    if t.group is not None:
+        return np.stack([decode(group_slice(t, g)) for g in range(t.group)])
     m, k = t.shape
     mt, kt = t.grid
     words = np.asarray(jax.device_get(t.words)).reshape(mt * kt, t.max_nnz)
@@ -291,7 +403,12 @@ def decode_jax(t: TiledCSL) -> jax.Array:
 
     This is the ``sparse_xla`` full-model path: XLA materialises the dense
     weight in HBM (the round-trip penalty the fused Pallas kernel removes).
+    Grouped encodings decode to ``[G, m, k]`` (vmapped over the group axis).
     """
+    if t.group is not None:
+        return jax.vmap(lambda w, n: decode_jax(TiledCSL(
+            words=w, nnz=n, shape=t.shape, m_tb=t.m_tb, k_tb=t.k_tb,
+            dtype=t.dtype)))(t.words, t.nnz)
     mt, kt = t.grid
     max_nnz = t.max_nnz
     words = t.words.astype(jnp.uint32)

@@ -103,7 +103,11 @@ def _csl_nnz(out_sharded: bool):
 # Which weight families shard out-dim over model (column-parallel) vs
 # in-dim over model (row-parallel, Megatron pairing).
 _COL = ("wq", "wk", "wv", "gate", "up", "w_uq", "w_ukv", "w_dq", "in_proj",
-        "w_x", "w_gate", "wa", "lm_head")
+        "w_x", "w_gate", "wa", "lm_head",
+        # reformat-time grouped projections (pruning.group_projections):
+        # words [*, G, mt, kt, w] — the generic lead-axis handling in
+        # _csl_words leaves the group axis unsharded, mt over model.
+        "gate_up", "wqkv")
 _ROW = ("wo", "down", "out_proj", "w_out")
 
 

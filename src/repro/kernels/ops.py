@@ -1,10 +1,19 @@
-"""Public jit'd wrappers around the LSCD SpMM kernel.
+"""Public jit'd wrappers around the LSCD SpMM kernels.
 
 ``spmm`` is the framework-facing op: handles N padding/tile selection,
 backend dispatch (Pallas on TPU / interpret for validation / XLA reference
-on CPU), and a custom VJP (grad flows to the dense activation only — the
-Tiled-CSL weight is an inference-time format; training uses masked dense
-weights, see ``core/pruning.py``).
+on CPU), fused bias/activation epilogues, and a custom VJP (grad flows to
+the dense activation only — the Tiled-CSL weight is an inference-time
+format; training uses masked dense weights, see ``core/pruning.py``).
+
+``spmm_grouped`` is the grouped entry (G same-shape weights, one launch, B
+streamed once; binary epilogues combine G == 2 pairs — DESIGN.md §8).
+
+Epilogue names are validated here against the kernel registry so a typo
+raises a ``ValueError`` at the op boundary instead of a ``KeyError`` deep
+inside the Pallas trace. Epilogues are elementwise over [M, N] (bias
+broadcasts over N), so they commute with the N-padding slice both wrappers
+apply.
 """
 
 from __future__ import annotations
@@ -43,20 +52,30 @@ def spmm(t: tiled_csl.TiledCSL,
          *,
          out_dtype=None,
          backend: Backend = "auto",
-         n_tb: int | None = None) -> jax.Array:
-    """C[M, N] = A_tiled_csl[M, K] @ B[K, N] (Load-as-Sparse, Compute-as-Dense).
+         n_tb: int | None = None,
+         epilogue: str = "none",
+         bias: jax.Array | None = None) -> jax.Array:
+    """C[M, N] = epilogue(A_tiled_csl[M, K] @ B[K, N] + bias).
 
     backend:
       auto      — Pallas on TPU, XLA reference elsewhere (full-model CPU runs).
       pallas    — force the TPU kernel (interpret=False).
       interpret — Pallas kernel body on CPU (correctness validation).
       xla       — decompress-then-matmul reference path.
+
+    epilogue (unary: none/silu/gelu/relu) and bias ([M]) are fused into the
+    kernel flush (applied by the reference oracle on the xla path) — the
+    activated C is written once instead of write/read/write.
     """
+    if t.group is not None:
+        raise ValueError("grouped TiledCSL: use spmm_grouped")
+    spmm_mod.epilogue_kind(epilogue)  # raises on unknown / binary names
     out_dtype = out_dtype or b.dtype
     if backend == "auto":
         backend = "pallas" if _on_tpu() else "xla"
     if backend == "xla":
-        return ref_mod.spmm_ref(t, b, out_dtype=out_dtype)
+        return ref_mod.spmm_ref(t, b, out_dtype=out_dtype, epilogue=epilogue,
+                                bias=bias)
 
     n = b.shape[1]
     tb = n_tb or _pick_n_tb(n)
@@ -65,8 +84,48 @@ def spmm(t: tiled_csl.TiledCSL,
         b = jnp.pad(b, ((0, 0), (0, n_pad - n)))
     out = spmm_mod.lscd_spmm(
         t, b, n_tb=tb, out_dtype=out_dtype,
-        interpret=(backend == "interpret"))
+        interpret=(backend == "interpret"), epilogue=epilogue, bias=bias)
+    # Epilogues are elementwise, so slicing the padded columns off after the
+    # fused flush equals applying them to the unpadded result.
     return out[:, :n] if n_pad != n else out
+
+
+def spmm_grouped(t: tiled_csl.TiledCSL,
+                 b: jax.Array,
+                 *,
+                 out_dtype=None,
+                 backend: Backend = "auto",
+                 n_tb: int | None = None,
+                 epilogue: str = "none",
+                 bias: jax.Array | None = None) -> jax.Array:
+    """Grouped LSCD SpMM: G same-shape weights against one B, one launch.
+
+    Returns C[G, M, N] (unary epilogues, applied per group; bias is [G, M])
+    or C[M, N] (binary epilogues ``silu_mul``/``gelu_mul`` combining the
+    G == 2 pair in VMEM — the SwiGLU fusion). Backends as in :func:`spmm`.
+    """
+    groups = t.group
+    if groups is None:
+        raise ValueError("ungrouped TiledCSL: use spmm")
+    kind = spmm_mod.epilogue_kind(epilogue, groups=groups)
+    out_dtype = out_dtype or b.dtype
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+    if backend == "xla":
+        return ref_mod.spmm_grouped_ref(t, b, out_dtype=out_dtype,
+                                        epilogue=epilogue, bias=bias)
+
+    n = b.shape[1]
+    tb = n_tb or _pick_n_tb(n)
+    n_pad = -(-n // tb) * tb
+    if n_pad != n:
+        b = jnp.pad(b, ((0, 0), (0, n_pad - n)))
+    out = spmm_mod.lscd_spmm_grouped(
+        t, b, n_tb=tb, out_dtype=out_dtype,
+        interpret=(backend == "interpret"), epilogue=epilogue, bias=bias)
+    if n_pad != n:
+        out = out[:, :n] if kind == "binary" else out[..., :n]
+    return out
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))

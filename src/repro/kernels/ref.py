@@ -1,10 +1,15 @@
 """Pure-jnp oracles for the Flash-LLM LSCD SpMM kernel.
 
-``spmm_ref`` is THE correctness oracle every Pallas sweep asserts against.
-It is also the ``sparse_xla`` full-model execution path on backends where the
-TPU kernel cannot lower (this CPU container): XLA materialises the dense
-weight (HBM round-trip) before the matmul — exactly the traffic penalty the
-fused kernel removes on real hardware.
+``spmm_ref`` / ``spmm_grouped_ref`` are THE correctness oracles every Pallas
+sweep asserts against. They are also the ``sparse_xla`` full-model execution
+path on backends where the TPU kernel cannot lower (this CPU container): XLA
+materialises the dense weight (HBM round-trip) before the matmul — exactly
+the traffic penalty the fused kernel removes on real hardware.
+
+Epilogues mirror the kernel registry (``spmm._EPILOGUES`` /
+``spmm._BINARY_EPILOGUES``) with the same rounding points: bias add and
+activation in f32 on the accumulator, then one cast to ``out_dtype`` — so
+the XLA/CPU path stays bit-comparable to the fused Pallas flush.
 """
 
 from __future__ import annotations
@@ -13,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import tiled_csl
+from repro.kernels import spmm as spmm_mod
 
 
 def spmm_dense_oracle(a_dense: jax.Array, b: jax.Array,
@@ -23,14 +29,44 @@ def spmm_dense_oracle(a_dense: jax.Array, b: jax.Array,
 
 
 def spmm_ref(t: tiled_csl.TiledCSL, b: jax.Array,
-             out_dtype=jnp.float32) -> jax.Array:
-    """C = decode(A_sparse) @ B — decompress-then-matmul reference.
+             out_dtype=jnp.float32,
+             epilogue: str = "none",
+             bias: jax.Array | None = None) -> jax.Array:
+    """C = epilogue(decode(A_sparse) @ B + bias) — decompress-then-matmul.
 
     Numerically this is what the kernel computes (bf16-rounded values,
-    f32 accumulation), so kernel sweeps compare against it with tight
-    tolerances; vs ``spmm_dense_oracle`` only the bf16 value rounding of
-    the encoding differs.
+    f32 accumulation, f32 epilogue before the output cast), so kernel
+    sweeps compare against it with tight tolerances; vs
+    ``spmm_dense_oracle`` only the bf16 value rounding of the encoding
+    differs.
     """
+    spmm_mod.epilogue_kind(epilogue)  # unary only for the single-matrix op
     a = tiled_csl.decode_jax(t).astype(jnp.float32)
-    return jnp.dot(a, b.astype(jnp.float32),
-                   preferred_element_type=jnp.float32).astype(out_dtype)
+    y = jnp.dot(a, b.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[:, None]
+    return spmm_mod.apply_epilogue(epilogue, y).astype(out_dtype)
+
+
+def spmm_grouped_ref(t: tiled_csl.TiledCSL, b: jax.Array,
+                     out_dtype=jnp.float32,
+                     epilogue: str = "none",
+                     bias: jax.Array | None = None) -> jax.Array:
+    """Grouped oracle: C[G, M, N] (unary epilogues, applied per group) or
+    C[M, N] (binary epilogues combining the G == 2 pair).
+
+    ``t`` is a grouped Tiled-CSL; ``bias`` (optional) is [G, M].
+    """
+    groups = t.group
+    if groups is None:
+        raise ValueError("ungrouped TiledCSL: use spmm_ref")
+    kind = spmm_mod.epilogue_kind(epilogue, groups=groups)
+    a = tiled_csl.decode_jax(t).astype(jnp.float32)        # [G, M, K]
+    y = jnp.einsum("gmk,kn->gmn", a, b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[:, :, None]
+    if kind == "binary":
+        return spmm_mod.apply_epilogue(epilogue, y[0], y[1]).astype(out_dtype)
+    return spmm_mod.apply_epilogue(epilogue, y).astype(out_dtype)

@@ -26,12 +26,31 @@ re-derived for the TPU memory hierarchy (DESIGN.md §2, §4):
   gates an all-zero-tile fast path (``pl.when(nnz > 0)``) — a beyond-paper
   micro-optimisation that exactness of padding makes free.
 
-Grid: ``(M/M_TB, N/N_TB, K/K_TB)`` with K innermost ("arbitrary" semantics);
-the f32 accumulator lives in VMEM scratch and is flushed at ``k == Kt-1``.
+Two beyond-paper fusions remove the pointwise HBM round-trips the model
+stack otherwise pays after every projection (DESIGN.md §8):
 
-Validated in ``interpret=True`` mode against ``ref.spmm_ref`` (tests sweep
-shapes × sparsities × dtypes × tile geometries); on-TPU lowering uses the
-same code path with ``interpret=False``.
+* **Fused epilogues** — ``epilogue`` in {silu, gelu, relu} plus an optional
+  [M] ``bias`` are applied to the f32 accumulator in VMEM at the flush, so
+  linear→activation patterns (MLP up + GELU) write the *activated* C once
+  instead of write-preact / read-preact / write-act. ``sparse_linear.linear``
+  and the model MLPs route through this path for Tiled-CSL weights.
+* **Grouped SpMM** (``lscd_spmm_grouped``) — a grouped Tiled-CSL (G
+  same-shape weights, shared ``max_nnz``; ``tiled_csl.encode_group``) adds a
+  fourth, innermost grid dimension. For each (m, n, k) step the G word
+  streams are visited back-to-back while the B block index stays fixed, so
+  the pipeliner streams B *once* for all G outputs. Binary epilogues
+  (``silu_mul``/``gelu_mul``) combine the G=2 group-pair accumulators in
+  VMEM — SwiGLU's ``silu(gate(x)) * up(x)`` flushes as a single C-sized
+  write-back instead of two pre-activation writes plus a pointwise pass.
+
+Grid: ``(M/M_TB, N/N_TB, K/K_TB[, G])`` with K (then G) innermost
+("arbitrary" semantics); the f32 accumulator lives in VMEM scratch and is
+flushed at ``k == Kt-1`` (last group for binary epilogues).
+
+Validated in ``interpret=True`` mode against ``ref.spmm_ref`` /
+``ref.spmm_grouped_ref`` (tests sweep shapes × sparsities × dtypes × tile
+geometries × group sizes × epilogues); on-TPU lowering uses the same code
+path with ``interpret=False``.
 """
 
 from __future__ import annotations
@@ -51,12 +70,60 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
 from repro.core import tiled_csl
 
 
+# Unary epilogues: applied per output in the flush stage (f32, pre-cast).
 _EPILOGUES = {
     "none": lambda x: x,
     "silu": jax.nn.silu,
     "gelu": jax.nn.gelu,
     "relu": lambda x: jnp.maximum(x, 0.0),
 }
+
+# Binary epilogues: combine the two accumulators of a G=2 grouped call into
+# ONE output (gate-style fusions; argument order is (group 0, group 1)).
+_BINARY_EPILOGUES = {
+    "silu_mul": lambda a, b: jax.nn.silu(a) * b,   # SwiGLU: silu(gate)*up
+    "gelu_mul": lambda a, b: jax.nn.gelu(a) * b,   # GeGLU
+}
+
+
+def apply_epilogue(name: str, *accs: jax.Array) -> jax.Array:
+    """Apply a registered epilogue outside the kernel (oracles, dense
+    paths): one accumulator for unary names, the (group 0, group 1) pair
+    for binary names. Keeps the registry encapsulated here."""
+    if name in _BINARY_EPILOGUES:
+        a, b = accs
+        return _BINARY_EPILOGUES[name](a, b)
+    return _EPILOGUES[name](*accs)
+
+
+def epilogue_kind(name: str, *, groups: int = 1) -> str:
+    """Validate ``name`` against the kernel registry → "unary" | "binary".
+
+    Raises ValueError on unknown names (instead of a KeyError deep inside
+    the Pallas trace) and on binary epilogues with a group size != 2.
+    """
+    if name in _EPILOGUES:
+        return "unary"
+    if name in _BINARY_EPILOGUES:
+        if groups != 2:
+            raise ValueError(
+                f"binary epilogue {name!r} combines exactly 2 grouped "
+                f"outputs, got group size {groups}")
+        return "binary"
+    known = sorted(_EPILOGUES) + sorted(_BINARY_EPILOGUES)
+    raise ValueError(f"unknown epilogue {name!r}; known: {known}")
+
+
+def _unpack_scatter(words, m_tb: int, k_tb: int) -> jax.Array:
+    """words uint32[max_nnz] → dense f32[m_tb, k_tb] via VPU scatter-add."""
+    val_bits = (words >> 16).astype(jnp.uint16)
+    vals = jax.lax.bitcast_convert_type(val_bits, jnp.bfloat16)
+    locs = (words & 0xFFFF).astype(jnp.int32)
+    rows = locs // k_tb
+    cols = locs - rows * k_tb
+    a_dense = jnp.zeros((m_tb, k_tb), jnp.float32)
+    # Padding words add +0.0 at (0, 0): exact no-op under scatter-ADD.
+    return a_dense.at[rows, cols].add(vals.astype(jnp.float32))
 
 
 def _lscd_spmm_kernel(nnz_ref,            # SMEM int32[Mt, Kt] (scalar prefetch)
@@ -81,24 +148,18 @@ def _lscd_spmm_kernel(nnz_ref,            # SMEM int32[Mt, Kt] (scalar prefetch)
     @pl.when(nnz > 0)
     def _body():
         # ---- sparse -> dense transform (paper Fig.6b; VPU scatter-add) ----
-        words = words_ref[0, 0, :]
-        val_bits = (words >> 16).astype(jnp.uint16)
-        vals = jax.lax.bitcast_convert_type(val_bits, jnp.bfloat16)
-        locs = (words & 0xFFFF).astype(jnp.int32)
-        rows = locs // k_tb
-        cols = locs - rows * k_tb
-        a_dense = jnp.zeros((m_tb, k_tb), jnp.float32)
-        # Padding words add +0.0 at (0, 0): exact no-op under scatter-ADD.
-        a_dense = a_dense.at[rows, cols].add(vals.astype(jnp.float32))
+        a_dense = _unpack_scatter(words_ref[0, 0, :], m_tb, k_tb)
         # ---- compute-as-dense (MXU) ---------------------------------------
         acc_ref[...] += jnp.dot(a_dense, b_ref[...].astype(jnp.float32),
                                 preferred_element_type=jnp.float32)
 
     @pl.when(k == k_tiles - 1)
     def _flush():
-        # Beyond-paper: fused epilogue — bias + activation applied in VMEM
-        # before the HBM write-back, saving one C-sized HBM round-trip for
-        # the pervasive linear->activation pattern (e.g. MLP up + GELU).
+        # Fused epilogue: bias + activation applied to the f32 accumulator in
+        # VMEM before the HBM write-back — the pervasive linear->activation
+        # pattern (MLP up + GELU) writes the activated C once instead of
+        # write/read/write (wired end-to-end via ops.spmm ->
+        # sparse_linear.linear -> models/layers.py).
         out = acc_ref[...]
         if bias_ref is not None:
             out = out + bias_ref[...].astype(jnp.float32)
@@ -120,6 +181,9 @@ def lscd_spmm(t: tiled_csl.TiledCSL,
 
     ``epilogue`` in {none, silu, gelu, relu} and ``bias`` ([M] vector) fuse
     the post-GEMM pointwise stage into the flush (beyond-paper)."""
+    if t.group is not None:
+        raise ValueError("grouped TiledCSL: use lscd_spmm_grouped")
+    epilogue_kind(epilogue)  # raises on unknown / binary names
     m, k = t.shape
     n = b.shape[1]
     mt, kt = t.grid
@@ -172,3 +236,165 @@ def _lscd_spmm_kernel_bias(nnz_ref, words_ref, b_ref, bias_ref, o_ref,
     _lscd_spmm_kernel(nnz_ref, words_ref, b_ref, o_ref, acc_ref,
                       m_tb=m_tb, k_tb=k_tb, k_tiles=k_tiles,
                       epilogue=epilogue, bias_ref=bias_ref)
+
+
+# ---------------------------------------------------------------------------
+# grouped LSCD SpMM: G same-shape weights, one launch, B streamed once
+# ---------------------------------------------------------------------------
+
+def _lscd_spmm_grouped_kernel(nnz_ref,    # SMEM int32[G, Mt, Kt]
+                              words_ref,  # VMEM uint32[1, 1, 1, max_nnz]
+                              b_ref,      # VMEM bf16/f32[K_TB, N_TB]
+                              o_ref,      # VMEM out[G, M_TB, N_TB] (unary)
+                                          #      or [M_TB, N_TB]   (binary)
+                              acc_ref,    # VMEM scratch f32[G, M_TB, N_TB]
+                              *,
+                              m_tb: int,
+                              k_tb: int,
+                              k_tiles: int,
+                              groups: int,
+                              epilogue: str = "none",
+                              bias_ref=None):
+    m, k, g = pl.program_id(0), pl.program_id(2), pl.program_id(3)
+    binary = epilogue in _BINARY_EPILOGUES
+
+    # g is innermost: for a fixed (m, n) the visit order is
+    # (k=0, g=0..G-1), (k=1, g=0..G-1), ... — every accumulator slot takes
+    # its first contribution during the k==0 sweep, so one zeroing of the
+    # whole scratch at (k==0, g==0) suffices.
+    @pl.when((k == 0) & (g == 0))
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    nnz = nnz_ref[g, m, k]
+
+    @pl.when(nnz > 0)
+    def _body():
+        a_dense = _unpack_scatter(words_ref[0, 0, 0, :], m_tb, k_tb)
+        contrib = jnp.dot(a_dense, b_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        # Static-index stores (unrolled over the small G) — no dynamic VMEM
+        # indexing in the inner loop.
+        for gi in range(groups):
+            @pl.when(g == gi)
+            def _store(gi=gi):
+                acc_ref[gi] += contrib
+
+    def _biased(gi, acc):
+        if bias_ref is not None:
+            return acc + bias_ref[gi].astype(jnp.float32)
+        return acc
+
+    if binary:
+        # One C-sized write-back for the whole group pair (SwiGLU/GeGLU).
+        @pl.when((k == k_tiles - 1) & (g == groups - 1))
+        def _flush_binary():
+            out = _BINARY_EPILOGUES[epilogue](_biased(0, acc_ref[0]),
+                                              _biased(1, acc_ref[1]))
+            o_ref[...] = out.astype(o_ref.dtype)
+    else:
+        @pl.when(k == k_tiles - 1)
+        def _flush():
+            for gi in range(groups):
+                @pl.when(g == gi)
+                def _w(gi=gi):
+                    out = _EPILOGUES[epilogue](_biased(gi, acc_ref[gi]))
+                    o_ref[gi] = out.astype(o_ref.dtype)
+
+
+def _lscd_spmm_grouped_kernel_bias(nnz_ref, words_ref, b_ref, bias_ref,
+                                   o_ref, acc_ref, *, m_tb, k_tb, k_tiles,
+                                   groups, epilogue):
+    """Bias-carrying variant (separate because Pallas positional refs)."""
+    _lscd_spmm_grouped_kernel(nnz_ref, words_ref, b_ref, o_ref, acc_ref,
+                              m_tb=m_tb, k_tb=k_tb, k_tiles=k_tiles,
+                              groups=groups, epilogue=epilogue,
+                              bias_ref=bias_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("n_tb", "out_dtype", "interpret",
+                                              "epilogue"))
+def lscd_spmm_grouped(t: tiled_csl.TiledCSL,
+                      b: jax.Array,
+                      *,
+                      n_tb: int = 128,
+                      out_dtype=jnp.float32,
+                      interpret: bool = True,
+                      epilogue: str = "none",
+                      bias: jax.Array | None = None) -> jax.Array:
+    """Grouped kernel entry: C[G, M, N] (or C[M, N] for binary epilogues).
+
+    ``t`` is a grouped Tiled-CSL (``tiled_csl.encode_group`` /
+    ``group_stack``): G same-shape [M, K] weights sharing one ``max_nnz``.
+    The grid gains an innermost group dimension; consecutive group steps
+    reuse the resident B block, so B is streamed once for all G outputs and
+    the per-(m, n) output block (the full [G, M_TB, N_TB] column for unary
+    epilogues) is written back exactly once.
+
+    ``epilogue``: unary names apply per group (bias [G, M] likewise);
+    ``silu_mul``/``gelu_mul`` need G == 2 and combine the pair's
+    accumulators into a single [M, N] output in VMEM.
+    Requires N % n_tb == 0; see ops.spmm_grouped for padding.
+    """
+    groups = t.group
+    if groups is None:
+        raise ValueError("ungrouped TiledCSL: use lscd_spmm")
+    kind = epilogue_kind(epilogue, groups=groups)
+    m, k = t.shape
+    n = b.shape[1]
+    mt, kt = t.grid
+    if b.shape[0] != k:
+        raise ValueError(f"B rows {b.shape[0]} != K {k}")
+    if n % n_tb:
+        raise ValueError(f"N={n} not a multiple of n_tb={n_tb}")
+    nt = n // n_tb
+
+    grid = (mt, nt, kt, groups)
+    kernel = functools.partial(
+        _lscd_spmm_grouped_kernel, m_tb=t.m_tb, k_tb=t.k_tb, k_tiles=kt,
+        groups=groups, epilogue=epilogue, bias_ref=None)
+    in_specs = [
+        # Group g's compressed A tile (the only A traffic). The B block
+        # index is independent of g, so the pipeliner holds B resident
+        # across the G inner steps.
+        pl.BlockSpec((1, 1, 1, t.max_nnz),
+                     lambda m_, n_, k_, g_, nnz: (g_, m_, k_, 0)),
+        pl.BlockSpec((t.k_tb, n_tb), lambda m_, n_, k_, g_, nnz: (k_, n_)),
+    ]
+    args = [t.nnz, t.words, b]
+    if bias is not None:
+        kernel = functools.partial(
+            _lscd_spmm_grouped_kernel_bias, m_tb=t.m_tb, k_tb=t.k_tb,
+            k_tiles=kt, groups=groups, epilogue=epilogue)
+        in_specs.append(
+            pl.BlockSpec((groups, t.m_tb, 1),
+                         lambda m_, n_, k_, g_, nnz: (0, m_, 0)))
+        args.append(bias.reshape(groups, m, 1).astype(jnp.float32))
+
+    if kind == "binary":
+        out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
+        out_specs = pl.BlockSpec((t.m_tb, n_tb),
+                                 lambda m_, n_, k_, g_, nnz: (m_, n_))
+    else:
+        # The whole [G, M_TB, N_TB] column is one block: its index is
+        # constant over (k, g), so it is written back once per (m, n).
+        out_shape = jax.ShapeDtypeStruct((groups, m, n), out_dtype)
+        out_specs = pl.BlockSpec((groups, t.m_tb, n_tb),
+                                 lambda m_, n_, k_, g_, nnz: (0, m_, n_))
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[pltpu.VMEM((groups, t.m_tb, n_tb), jnp.float32)],
+        ),
+        out_shape=out_shape,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*args)

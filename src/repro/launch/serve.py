@@ -55,13 +55,21 @@ def main() -> None:
                 k in n for k in ("'wq'", "'wk'", "'wv'", "'wo'", "'gate'",
                                  "'up'", "'down'")),
             balanced=args.balanced)
+        params = pruning.group_projections(params)
         csl = [l for l in jax.tree.leaves(
             params, is_leaf=lambda x: isinstance(x, tiled_csl.TiledCSL))
             if isinstance(l, tiled_csl.TiledCSL)]
+        grouped = sum(
+            1 for p, l in jax.tree_util.tree_flatten_with_path(
+                params, is_leaf=lambda x: isinstance(x, tiled_csl.TiledCSL))[0]
+            if isinstance(l, tiled_csl.TiledCSL)
+            and any(k in jax.tree_util.keystr(p)
+                    for k in ("'gate_up'", "'wqkv'")))
         sp_bytes = sum(t.nbytes_sparse for t in csl)
         de_bytes = sum(t.nbytes_dense for t in csl)
         print(f"reformatted {len(csl)} weights to Tiled-CSL in "
-              f"{time.time() - t0:.1f}s: {de_bytes / 2 ** 20:.1f} MiB dense "
+              f"{time.time() - t0:.1f}s ({grouped} grouped): "
+              f"{de_bytes / 2 ** 20:.1f} MiB dense "
               f"-> {sp_bytes / 2 ** 20:.1f} MiB sparse "
               f"({sp_bytes / de_bytes:.2f}x)")
 

@@ -52,12 +52,36 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def _project_qkv(params, x, cfg: ModelConfig, backend: str):
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
-    q = sparse_linear.linear_logical_out(
-        params["wq"]["w"], h * hd, x, params["wq"].get("b"), backend=backend)
-    k = sparse_linear.linear_logical_out(
-        params["wk"]["w"], kv * hd, x, params["wk"].get("b"), backend=backend)
-    v = sparse_linear.linear_logical_out(
-        params["wv"]["w"], kv * hd, x, params["wv"].get("b"), backend=backend)
+    bs = tuple(params.get(n, {}).get("b") for n in ("wq", "wk", "wv"))
+    outs = (h * hd, kv * hd, kv * hd)
+    if "wqkv" in params:
+        # Reformat-time pre-grouped q/k/v (pruning.group_projections): one
+        # launch, no per-step restack; biases stay on the per-name dicts.
+        q, k, v = sparse_linear.linear_grouped(
+            params["wqkv"]["w"], x, bs, declared_outs=outs, backend=backend)
+        return _split_heads(q, k, v, x, cfg)
+    ws = tuple(params[n]["w"] for n in ("wq", "wk", "wv"))
+    if sparse_linear.groupable(ws):
+        # One grouped LSCD launch for q/k/v (MHA, or GQA whose padded out
+        # dims coincide): B is streamed once for all three projections
+        # (DESIGN.md §8). Biases ride the fused flush.
+        q, k, v = sparse_linear.linear_grouped(
+            ws, x, bs, declared_outs=outs, backend=backend)
+    elif sparse_linear.groupable(ws[1:]):
+        # GQA: wk/wv share a shape even when wq does not.
+        q = sparse_linear.linear(ws[0], x, bs[0], declared_out=outs[0],
+                                 backend=backend)
+        k, v = sparse_linear.linear_grouped(
+            ws[1:], x, bs[1:], declared_outs=outs[1:], backend=backend)
+    else:
+        q, k, v = (sparse_linear.linear(w, x, b, declared_out=o,
+                                        backend=backend)
+                   for w, b, o in zip(ws, bs, outs))
+    return _split_heads(q, k, v, x, cfg)
+
+
+def _split_heads(q, k, v, x, cfg: ModelConfig):
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     B, S = x.shape[0], x.shape[1]
     q = q.reshape(B, S, h, hd)
     k = k.reshape(B, S, kv, hd)

@@ -58,14 +58,30 @@ def init_swiglu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
 
 def swiglu_mlp(params: dict, x: jax.Array, *, d_ff: int, d_model: int,
                backend: str = "auto") -> jax.Array:
-    g = sparse_linear.linear_logical_out(params["gate"]["w"], d_ff, x,
-                                         backend=backend)
-    u = sparse_linear.linear_logical_out(params["up"]["w"], d_ff, x,
-                                         backend=backend)
-    h = jax.nn.silu(g) * u
+    # Grouped fused path (DESIGN.md §8): gate+up stream B once in one LSCD
+    # launch and silu(g)*u combines in VMEM — one C write-back instead of
+    # two pre-activation writes plus a pointwise pass. "gate_up" is the
+    # reformat-time pre-grouped weight (pruning.group_projections — no
+    # per-step restack); per-weight TiledCSL pairs group at call time.
+    if "gate_up" in params:
+        h = sparse_linear.linear_grouped(
+            params["gate_up"]["w"], x, declared_outs=(d_ff, d_ff),
+            epilogue="silu_mul", backend=backend)
+    else:
+        gw, uw = params["gate"]["w"], params["up"]["w"]
+        if sparse_linear.groupable((gw, uw)):
+            h = sparse_linear.linear_grouped(
+                (gw, uw), x, declared_outs=(d_ff, d_ff),
+                epilogue="silu_mul", backend=backend)
+        else:
+            g = sparse_linear.linear(gw, x, declared_out=d_ff,
+                                     backend=backend)
+            u = sparse_linear.linear(uw, x, declared_out=d_ff,
+                                     backend=backend)
+            h = jax.nn.silu(g) * u
     h = dist_sharding.constrain(h, "batch", None, "model")
-    return sparse_linear.linear_logical_out(params["down"]["w"], d_model, h,
-                                            backend=backend)
+    return sparse_linear.linear(params["down"]["w"], h,
+                                declared_out=d_model, backend=backend)
 
 
 def init_gelu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32,
@@ -83,13 +99,16 @@ def init_gelu_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32,
 
 def gelu_mlp(params: dict, x: jax.Array, *, d_ff: int, d_model: int,
              backend: str = "auto") -> jax.Array:
-    h = sparse_linear.linear_logical_out(
-        params["up"]["w"], d_ff, x, params["up"].get("b"), backend=backend)
-    h = jax.nn.gelu(h)
+    # Fused epilogue (DESIGN.md §8): bias + GELU ride the kernel flush for
+    # Tiled-CSL weights, so the activated h is written once; dense weights
+    # get the identical math as plain XLA ops inside linear().
+    h = sparse_linear.linear(
+        params["up"]["w"], x, params["up"].get("b"), declared_out=d_ff,
+        epilogue="gelu", backend=backend)
     h = dist_sharding.constrain(h, "batch", None, "model")
-    return sparse_linear.linear_logical_out(
-        params["down"]["w"], d_model, h, params["down"].get("b"),
-        backend=backend)
+    return sparse_linear.linear(
+        params["down"]["w"], h, params["down"].get("b"),
+        declared_out=d_model, backend=backend)
 
 
 # ---------------------------------------------------------------------------

@@ -87,8 +87,13 @@ class SchedulerMetrics:
 
     @property
     def prefill_padding_overhead(self) -> float:
-        """Fraction of prefilled tokens that were bucket/group padding."""
-        return 1.0 - self.prefill_tokens / max(self.padded_prefill_tokens, 1)
+        """Fraction of prefilled tokens that were bucket/group padding.
+
+        0.0 before any prefill has happened (not the 100% overhead the
+        ``max(·, 1)`` denominator guard used to report)."""
+        if self.padded_prefill_tokens == 0:
+            return 0.0
+        return 1.0 - self.prefill_tokens / self.padded_prefill_tokens
 
     @property
     def mean_queue_wait_steps(self) -> float:

@@ -218,3 +218,140 @@ def test_moe_experts_with_tiled_csl_weights():
     # sparse path runs the vmapped CSL decode end to end
     assert y_sparse.shape == y_dense.shape
     assert bool(jnp.isfinite(y_sparse).all())
+
+
+# ---------------------------------------------------------------------------
+# grouped SpMM + fused epilogues (DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+def _make_group(rng, g, m, k, sparsities):
+    mats = []
+    for s in sparsities[:g]:
+        a = rng.standard_normal((m, k), dtype=np.float32)
+        a[rng.random((m, k)) < s] = 0.0
+        mats.append(a)
+    return mats, tiled_csl.encode_group(mats)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (128, 128, 8),       # single tile, skinny
+    (256, 384, 16),      # multi-tile, skinny (paper's regime)
+    (384, 128, 7),       # ragged N -> padding path
+])
+@pytest.mark.parametrize("g", [1, 2, 3])
+@pytest.mark.parametrize("epilogue", ["none", "relu"])
+def test_grouped_kernel_matches_ref(m, k, n, g, epilogue):
+    rng = np.random.default_rng(hash((m, k, n, g)) % 2 ** 31)
+    _, tg = _make_group(rng, g, m, k, (0.5, 0.8, 0.95))
+    b = jnp.asarray(rng.standard_normal((k, n), dtype=np.float32))
+    got = ops.spmm_grouped(tg, b, backend="interpret", out_dtype=jnp.float32,
+                           epilogue=epilogue)
+    want = ref.spmm_grouped_ref(tg, b, out_dtype=jnp.float32,
+                                epilogue=epilogue)
+    assert got.shape == (g, m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_grouped_matches_per_matrix_single_calls():
+    """A grouped launch computes exactly what G separate launches do."""
+    rng = np.random.default_rng(70)
+    _, tg = _make_group(rng, 3, 256, 256, (0.6, 0.8, 0.9))
+    b = jnp.asarray(rng.standard_normal((256, 16), dtype=np.float32))
+    got = ops.spmm_grouped(tg, b, backend="interpret", out_dtype=jnp.float32)
+    for g in range(3):
+        single = ops.spmm(tiled_csl.group_slice(tg, g), b,
+                          backend="interpret", out_dtype=jnp.float32)
+        np.testing.assert_allclose(np.asarray(got[g]), np.asarray(single),
+                                   rtol=0.0, atol=0.0)
+
+
+@pytest.mark.parametrize("epilogue", ["silu_mul", "gelu_mul"])
+@pytest.mark.parametrize("n", [16, 7])   # 7 exercises the N-padding slice
+def test_binary_epilogue_matches_ref(epilogue, n):
+    """silu_mul/gelu_mul combine the G=2 pair into ONE output; epilogues
+    must commute with the N-padding slice ops.spmm_grouped applies."""
+    rng = np.random.default_rng(71)
+    mats, tg = _make_group(rng, 2, 256, 128, (0.8, 0.8))
+    b = jnp.asarray(rng.standard_normal((128, n), dtype=np.float32))
+    got = ops.spmm_grouped(tg, b, backend="interpret", out_dtype=jnp.float32,
+                           epilogue=epilogue)
+    want = ref.spmm_grouped_ref(tg, b, out_dtype=jnp.float32,
+                                epilogue=epilogue)
+    assert got.shape == (256, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+    # the ref itself equals the composed unfused math
+    y0 = ref.spmm_ref(tiled_csl.group_slice(tg, 0), b, out_dtype=jnp.float32)
+    y1 = ref.spmm_ref(tiled_csl.group_slice(tg, 1), b, out_dtype=jnp.float32)
+    act = jax.nn.silu if epilogue == "silu_mul" else jax.nn.gelu
+    np.testing.assert_allclose(np.asarray(want), np.asarray(act(y0) * y1),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("epilogue", ["none", "silu", "silu_mul"])
+def test_grouped_bias_fused(epilogue):
+    rng = np.random.default_rng(72)
+    _, tg = _make_group(rng, 2, 128, 128, (0.7, 0.7))
+    b = jnp.asarray(rng.standard_normal((128, 8), dtype=np.float32))
+    bias = jnp.asarray(rng.standard_normal((2, 128)), jnp.float32)
+    got = ops.spmm_grouped(tg, b, backend="interpret", out_dtype=jnp.float32,
+                           epilogue=epilogue, bias=bias)
+    want = ref.spmm_grouped_ref(tg, b, out_dtype=jnp.float32,
+                                epilogue=epilogue, bias=bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_single_spmm_fused_epilogue_with_n_padding():
+    """ops.spmm pads N to the tile and slices after the fused flush — the
+    epilogue (elementwise) must commute with that slice."""
+    rng = np.random.default_rng(73)
+    a, t = _make(rng, 256, 256, 0.8)
+    b = jnp.asarray(rng.standard_normal((256, 5), dtype=np.float32))
+    bias = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    got = ops.spmm(t, b, backend="interpret", out_dtype=jnp.float32,
+                   epilogue="gelu", bias=bias)
+    want = jax.nn.gelu(ref.spmm_ref(t, b, out_dtype=jnp.float32)
+                       + bias[:, None])
+    assert got.shape == (256, 5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_unknown_epilogue_raises_at_op_boundary():
+    """Regression: a typo'd epilogue used to surface as a KeyError deep in
+    the Pallas trace (or be silently dropped by ops.spmm)."""
+    rng = np.random.default_rng(74)
+    _, t = _make(rng, 128, 128, 0.8)
+    b = jnp.ones((128, 8), jnp.float32)
+    with pytest.raises(ValueError, match="unknown epilogue"):
+        ops.spmm(t, b, backend="interpret", epilogue="gelu_typo")
+    with pytest.raises(ValueError, match="unknown epilogue"):
+        ref.spmm_ref(t, b, epilogue="gelu_typo")
+    # binary epilogues need the grouped op with G == 2
+    with pytest.raises(ValueError, match="binary epilogue"):
+        ops.spmm(t, b, backend="interpret", epilogue="silu_mul")
+    _, tg3 = _make_group(rng, 3, 128, 128, (0.8, 0.8, 0.8))
+    with pytest.raises(ValueError, match="binary epilogue"):
+        ops.spmm_grouped(tg3, b, backend="interpret", epilogue="silu_mul")
+    # grouped/ungrouped ops reject the other encoding
+    with pytest.raises(ValueError, match="grouped"):
+        ops.spmm(tg3, b, backend="interpret")
+    with pytest.raises(ValueError, match="ungrouped"):
+        ops.spmm_grouped(t, b, backend="interpret")
+
+
+def test_grouped_xla_backend_matches_interpret():
+    """The xla (CPU full-model) grouped path and the Pallas interpret path
+    agree — the backend-dispatch contract of ops.spmm_grouped."""
+    rng = np.random.default_rng(75)
+    _, tg = _make_group(rng, 2, 256, 128, (0.8, 0.9))
+    b = jnp.asarray(rng.standard_normal((128, 12), dtype=np.float32))
+    for epi in ("none", "silu_mul"):
+        xla = ops.spmm_grouped(tg, b, backend="xla", out_dtype=jnp.float32,
+                               epilogue=epi)
+        itp = ops.spmm_grouped(tg, b, backend="interpret",
+                               out_dtype=jnp.float32, epilogue=epi)
+        np.testing.assert_allclose(np.asarray(xla), np.asarray(itp),
+                                   rtol=1e-5, atol=1e-4)

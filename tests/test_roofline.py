@@ -65,3 +65,42 @@ def test_ci_eq1_eq2():
     # Eq.2 at beta=0 reduces to Eq.1
     assert roofline.lscd_ci(4096, 16, 0.0) == pytest.approx(
         roofline.dense_gemm_ci(4096, 16))
+
+
+def test_grouped_fused_terms_reduce_bytes():
+    """The grouped fused path removes (a) per-call B re-streaming and
+    (b) the pointwise epilogue's C round-trips; FLOPs stay dense."""
+    m, k, n = 4 * 9216, 9216, 16
+    # SwiGLU pair: fused silu_mul writes ONE C instead of 2 preacts + a
+    # read-read-write pointwise pass.
+    fused = roofline.lscd_grouped_terms(m, k, n, 0.8, group=2,
+                                        epilogue="silu_mul", fused=True)
+    unfused = roofline.lscd_grouped_terms(m, k, n, 0.8, group=2,
+                                          epilogue="silu_mul", fused=False)
+    assert fused.hbm_bytes < unfused.hbm_bytes
+    assert fused.flops == unfused.flops
+    saved = roofline.fused_epilogue_saved_bytes(m, k, n, 0.8, group=2,
+                                                epilogue="silu_mul")
+    # B once saves (G-1)*2kn; epilogue fusion saves 4 C-sized transfers
+    expect = 2 * k * n + 4 * (2 * m * n)
+    assert saved == pytest.approx(expect)
+    # G=1 consistency: fused 'none' == the single-kernel terms
+    t1 = roofline.lscd_grouped_terms(m, k, n, 0.8, group=1, fused=True)
+    t0 = roofline.lscd_kernel_terms(m, k, n, 0.8)
+    assert t1.hbm_bytes == pytest.approx(t0.hbm_bytes)
+    assert t1.flops == pytest.approx(t0.flops)
+
+
+def test_grouped_unary_terms_and_validation():
+    m = k = 9216
+    # G=3 QKV with no epilogue: the only saving is streaming B once.
+    saved = roofline.fused_epilogue_saved_bytes(m, k, 8, 0.8, group=3,
+                                                epilogue="none")
+    assert saved == pytest.approx(2 * (2 * k * 8))
+    # unary epilogue at G=1: fusion saves one C round-trip (read + write)
+    saved1 = roofline.fused_epilogue_saved_bytes(m, k, 8, 0.8, group=1,
+                                                 epilogue="gelu")
+    assert saved1 == pytest.approx(2 * (2 * m * 8))
+    with pytest.raises(ValueError, match="group=2"):
+        roofline.lscd_grouped_terms(m, k, 8, 0.8, group=3,
+                                    epilogue="silu_mul")

@@ -202,3 +202,13 @@ def test_batcher_metrics_accounting():
     d = m.as_dict()
     assert d["occupancy"] == m.occupancy
     assert d["completed"] == len(prompts)
+
+
+def test_metrics_padding_overhead_zero_before_prefill():
+    """Regression: a fresh SchedulerMetrics used to report 100% prefill
+    padding overhead (1.0) because of the max(denominator, 1) guard."""
+    m = batching.SchedulerMetrics()
+    assert m.prefill_padding_overhead == 0.0
+    assert m.as_dict()["prefill_padding_overhead"] == 0.0
+    m.prefill_tokens, m.padded_prefill_tokens = 6, 8
+    assert m.prefill_padding_overhead == pytest.approx(0.25)

@@ -159,3 +159,90 @@ def test_conflict_score_property(seed, sparsity):
     s_i = tiled_csl.sublane_conflict_score(np.asarray(t_i.words)[0, 0], nz, 128)
     s_n = tiled_csl.sublane_conflict_score(np.asarray(t_n.words)[0, 0], nz, 128)
     assert s_i >= s_n - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# 16-bit location field overflow guard
+# ---------------------------------------------------------------------------
+
+def test_loc_overflow_tile_geometry_raises():
+    """Regression: m_tb*k_tb > 65536 used to silently wrap ``loc & 0xFFFF``
+    in pack_words and corrupt weight placement; encode must refuse."""
+    a = np.zeros((512, 512), np.float32)
+    a[511, 511] = 1.0
+    with pytest.raises(ValueError, match="16-bit loc"):
+        tiled_csl.encode(a, m_tb=512, k_tb=512)
+    with pytest.raises(ValueError, match="16-bit loc"):
+        tiled_csl.encode(np.zeros((256, 512), np.float32), m_tb=256, k_tb=512)
+
+
+def test_loc_boundary_geometry_roundtrips():
+    """m_tb*k_tb == 65536 is the largest legal tile: the bottom-right
+    element (loc 65535) must survive the roundtrip exactly."""
+    a = np.zeros((256, 256), np.float32)
+    a[0, 0] = 2.0
+    a[255, 255] = 1.0        # loc = 255*256 + 255 = 65535
+    t = tiled_csl.encode(a, m_tb=256, k_tb=256)
+    dec = tiled_csl.decode(t)
+    np.testing.assert_allclose(dec, a, atol=0.0)
+
+
+# ---------------------------------------------------------------------------
+# grouped encoding
+# ---------------------------------------------------------------------------
+
+def _group_mats(rng, g, m, k, sparsities):
+    return [_random_sparse(rng, m, k, s) for s in sparsities[:g]]
+
+
+@pytest.mark.parametrize("g", [1, 2, 3])
+def test_encode_group_roundtrip(g):
+    rng = np.random.default_rng(50 + g)
+    mats = _group_mats(rng, g, 256, 128, (0.5, 0.8, 0.95))
+    tg = tiled_csl.encode_group(mats)
+    assert tg.group == g
+    assert tg.words.shape[:3] == (g, 2, 1)
+    assert tg.nnz.shape == (g, 2, 1)
+    dec = tiled_csl.decode(tg)
+    dec_j = np.asarray(tiled_csl.decode_jax(tg), np.float32)
+    assert dec.shape == (g, 256, 128)
+    np.testing.assert_allclose(dec_j, dec, atol=1e-6)
+    for i, a in enumerate(mats):
+        assert ((dec[i] != 0) == (a != 0)).all()
+        per = tiled_csl.decode(tiled_csl.group_slice(tg, i))
+        np.testing.assert_allclose(per, dec[i], atol=0.0)
+
+
+def test_encode_group_shares_max_nnz():
+    """The group pads every member to one max_nnz (the stacking invariant
+    the grouped kernel's static block shape needs); padding words stay
+    exact no-ops so per-member decode is unchanged."""
+    rng = np.random.default_rng(60)
+    dense_ish = _random_sparse(rng, 128, 128, 0.3)
+    sparse_ish = _random_sparse(rng, 128, 128, 0.95)
+    tg = tiled_csl.encode_group([dense_ish, sparse_ish])
+    t_solo = tiled_csl.encode(dense_ish)
+    assert tg.max_nnz == t_solo.max_nnz       # max over the group
+    np.testing.assert_allclose(tiled_csl.decode(tg)[1],
+                               tiled_csl.decode(tiled_csl.encode(sparse_ish)),
+                               atol=0.0)
+
+
+def test_group_stack_matches_encode_group():
+    rng = np.random.default_rng(61)
+    mats = _group_mats(rng, 2, 128, 256, (0.7, 0.9))
+    via_group = tiled_csl.encode_group(mats)
+    via_stack = tiled_csl.group_stack([tiled_csl.encode(m) for m in mats])
+    np.testing.assert_array_equal(np.asarray(via_group.words),
+                                  np.asarray(via_stack.words))
+    np.testing.assert_array_equal(np.asarray(via_group.nnz),
+                                  np.asarray(via_stack.nnz))
+
+
+def test_encode_group_rejects_mixed_shapes():
+    rng = np.random.default_rng(62)
+    with pytest.raises(ValueError, match="share one shape"):
+        tiled_csl.encode_group([_random_sparse(rng, 128, 128, 0.5),
+                                _random_sparse(rng, 256, 128, 0.5)])
+    with pytest.raises(ValueError):
+        tiled_csl.encode_group([])
