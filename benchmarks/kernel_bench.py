@@ -14,10 +14,24 @@ This container is CPU-only, so two measurement modes are reported per shape:
     on TPU comes from the Pallas path which cannot lower here.
 
 CSV columns: name,us_per_call,derived.
+
+Run as a module for the JSON perf-trajectory mode (DESIGN.md §9):
+
+  PYTHONPATH=src python -m benchmarks.kernel_bench --json BENCH_kernel.json
+      [--full | --smoke]
+
+``--json`` writes the schedule-sweep accounting (shapes x schedules,
+``roofline.lscd_splitk_terms`` numbers + the selector's pick per cell) so
+the repo accumulates a perf trajectory across PRs. ``--smoke`` restricts
+to tiny shapes AND actually launches the split-K kernels in interpret
+mode against the oracles — the CI bench-smoke step runs this so
+kernel-entry regressions fail fast.
 """
 
 from __future__ import annotations
 
+import argparse
+import json as json_mod
 import time
 from typing import List, Tuple
 
@@ -27,6 +41,7 @@ import numpy as np
 
 from repro.core import roofline, tiled_csl
 from repro.kernels import ops, ref
+from repro.kernels import schedule as schedule_mod
 
 # The paper's four decoder MatMuls (M, K as multiples of hidden h):
 #   QKV-proj: [3h, h]   O-proj: [h, h]   MLP1: [4h, h]   MLP2: [h, 4h]
@@ -132,6 +147,135 @@ def bench_fused_group(m: int, k: int, n: int, sparsity: float, *,
     ]
 
 
+# The ISSUE-3 acceptance cells: one decode-regime shape (skinny N, where
+# the selector must find split_k > 1) and one prefill-regime shape (wide N,
+# where split-K only adds partials traffic and must NOT be picked).
+SCHEDULE_CELLS = [
+    ("decode", 8192, 8192, 8, 0.8),
+    ("prefill", 8192, 8192, 2048, 0.8),
+]
+
+
+def schedule_cell(tag: str, m: int, k: int, n: int, sparsity: float, *,
+                  max_nnz: int | None = None) -> Tuple[List[str], dict]:
+    """One shape's schedule sweep: lscd_splitk_terms for every candidate
+    (n_tb x split_k at the launch-time 128x128 tile geometry) plus the
+    selector's pick. Returns (CSV rows, JSON record)."""
+    # cache=False: the committed JSON must reflect the analytic model, not
+    # whatever REPRO_SCHEDULE_CACHE the generating machine happens to have.
+    sel = schedule_mod.select(m, k, n, sparsity, m_tb=128, k_tb=128,
+                              max_nnz=max_nnz, cache=False)
+    sweep = []
+    for cand in schedule_mod.candidates(m, k, n, m_tb=128, k_tb=128):
+        terms = schedule_mod.predicted(m, k, n, sparsity, cand,
+                                       max_nnz=max_nnz)
+        sweep.append(terms.as_dict())
+    sel_terms = schedule_mod.predicted(m, k, n, sparsity, sel,
+                                       max_nnz=max_nnz)
+    base = schedule_mod.predicted(
+        m, k, n, sparsity,
+        schedule_mod.Schedule(128, 128, sel.n_tb, 1), max_nnz=max_nnz)
+    name = f"sched_{tag}_m{m}_k{k}_n{n}_s{int(sparsity * 100)}"
+    rows = [
+        f"{name}_selected,{sel_terms.effective_s * 1e6:.3f},"
+        f"n_tb={sel.n_tb};split_k={sel.split_k};"
+        f"util={sel_terms.utilization:.3f};"
+        f"parallel_tiles={sel_terms.parallel_tiles};"
+        f"partials_bytes={sel_terms.partials_bytes:.0f};"
+        f"speedup_vs_s1={base.effective_s / sel_terms.effective_s:.3f}",
+    ]
+    record = {
+        "name": name, "m": m, "k": k, "n": n, "sparsity": sparsity,
+        "regime": tag,
+        "selected": sel.as_dict(),
+        "selected_terms": sel_terms.as_dict(),
+        "schedules": sweep,
+    }
+    return rows, record
+
+
+def _smoke_kernel_launches() -> List[dict]:
+    """Tiny-shape interpret-mode launches of every kernel entry (single,
+    split-K incl. ragged Kt/S, grouped unary + binary split-K) vs the ref
+    oracles — the CI tripwire for kernel-entry regressions."""
+    from repro.kernels import spmm as spmm_mod
+    rng = np.random.default_rng(0)
+    results = []
+
+    def _case(name, got, want, atol=1e-3):
+        err = float(np.max(np.abs(np.asarray(got, np.float32)
+                                  - np.asarray(want, np.float32))))
+        results.append({"case": name, "max_abs_err": err, "ok": err < atol})
+        return results[-1]["ok"]
+
+    a = rng.standard_normal((256, 384), dtype=np.float32)
+    a[rng.random((256, 384)) < 0.8] = 0.0
+    t = tiled_csl.encode(a)
+    b = jnp.asarray(rng.standard_normal((384, 8), dtype=np.float32))
+    bias = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    want = ref.spmm_ref(t, b, out_dtype=jnp.float32, epilogue="gelu",
+                        bias=bias)
+    _case("spmm_single_pass",
+          spmm_mod.lscd_spmm(t, b, n_tb=8, interpret=True, epilogue="gelu",
+                             bias=bias), want)
+    for s in (2, 3):  # Kt == 3: s=2 exercises the ragged last slice
+        _case(f"spmm_splitk_s{s}",
+              spmm_mod.lscd_spmm_splitk(t, b, n_tb=8, split_k=s,
+                                        interpret=True, epilogue="gelu",
+                                        bias=bias),
+              ref.spmm_splitk_ref(t, b, s, out_dtype=jnp.float32,
+                                  epilogue="gelu", bias=bias))
+    mats = []
+    for sp_ in (0.7, 0.85):
+        g = rng.standard_normal((256, 384), dtype=np.float32)
+        g[rng.random((256, 384)) < sp_] = 0.0
+        mats.append(g)
+    tg = tiled_csl.encode_group(mats)
+    _case("spmm_splitk_grouped_silu_mul",
+          spmm_mod.lscd_spmm_splitk_grouped(tg, b, n_tb=8, split_k=2,
+                                            interpret=True,
+                                            epilogue="silu_mul"),
+          ref.spmm_splitk_grouped_ref(tg, b, 2, out_dtype=jnp.float32,
+                                      epilogue="silu_mul"))
+    _case("ops_spmm_auto_schedule",
+          ops.spmm(t, b, backend="interpret", out_dtype=jnp.float32),
+          ref.spmm_ref(t, b, out_dtype=jnp.float32))
+    return results
+
+
+def run_json(full: bool = False, smoke: bool = False) -> dict:
+    """Build the BENCH_kernel.json payload: schedule-sweep accounting per
+    cell (+ smoke kernel-launch parity when ``smoke``)."""
+    rng = np.random.default_rng(0)
+    cells = []
+    for tag, m, k, n, s in SCHEDULE_CELLS:
+        # Measured max_nnz (real encoding incl. padding) outside smoke;
+        # the analytic DESIGN.md §4 bound keeps CI smoke fast.
+        max_nnz = None if smoke else _encoded(m, k, s, rng)[1].max_nnz
+        _, record = schedule_cell(tag, m, k, n, s, max_nnz=max_nnz)
+        cells.append(record)
+    if full:
+        for model in _OPT_HIDDEN:
+            for mm_name, m, k in paper_matmul_shapes(model):
+                for n in (8, 64, 512):
+                    _, record = schedule_cell(f"{model}_{mm_name}", m, k, n,
+                                              0.8)
+                    cells.append(record)
+    payload = {
+        "bench": "kernel",
+        "schema": 1,
+        "mode": "smoke" if smoke else ("full" if full else "reduced"),
+        "backend": jax.default_backend(),
+        "latency_hiding_tiles": roofline.LATENCY_HIDING_TILES,
+        "cells": cells,
+    }
+    if smoke:
+        launches = _smoke_kernel_launches()
+        payload["smoke_launches"] = launches
+        payload["smoke_ok"] = all(r["ok"] for r in launches)
+    return payload
+
+
 def run(full: bool = False) -> List[str]:
     """Fig.9 grid (reduced by default: one model + the paper's sparsities)."""
     rng = np.random.default_rng(0)
@@ -158,6 +302,49 @@ def run(full: bool = False) -> List[str]:
                                   tag="qkv", rng=rng)
         rows += bench_fused_group(4 * h, h, n, 0.8, group=1, epilogue="gelu",
                                   tag="mlp1_gelu", rng=rng)
+    # Schedule-selection cells (DESIGN.md §9): decode picks split_k > 1,
+    # prefill stays single-pass; the analytic terms behind the pick.
+    for tag, m, k, n, s in SCHEDULE_CELLS:
+        rows += schedule_cell(tag, m, k, n, s,
+                              max_nnz=_encoded(m, k, s, rng)[1].max_nnz)[0]
     # Wall-clock sanity cell (small, CPU-measurable)
     rows += bench_shape(4096, 4096, 16, 0.8, measure_wall=True, rng=rng)
     return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the schedule-sweep JSON payload here "
+                         "(e.g. BENCH_kernel.json)")
+    ap.add_argument("--full", action="store_true",
+                    help="full paper shape grid in the JSON payload")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + real interpret-mode kernel "
+                         "launches (the CI bench-smoke gate)")
+    args = ap.parse_args()
+    if args.json is None and not args.smoke:
+        print("name,us_per_call,derived")
+        for row in run(full=args.full):
+            print(row)
+        return
+    # --smoke without --json still runs the kernel-parity launches (and
+    # still fails loudly) — it just skips the file write.
+    payload = run_json(full=args.full, smoke=args.smoke)
+    if args.json is not None:
+        with open(args.json, "w") as f:
+            json_mod.dump(payload, f, indent=1, sort_keys=True)
+            f.write("\n")
+        n_sched = sum(len(c["schedules"]) for c in payload["cells"])
+        print(f"wrote {args.json}: {len(payload['cells'])} cells, "
+              f"{n_sched} schedules")
+    if args.smoke:
+        for r in payload["smoke_launches"]:
+            print(f"  smoke {r['case']}: max_abs_err={r['max_abs_err']:.2e} "
+                  f"{'ok' if r['ok'] else 'FAIL'}")
+        if not payload["smoke_ok"]:
+            raise SystemExit("bench smoke: kernel parity check FAILED")
+
+
+if __name__ == "__main__":
+    main()

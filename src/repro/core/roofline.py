@@ -286,6 +286,132 @@ def lscd_grouped_terms(m: int, k: int, n: int, sparsity: float, *,
                          model_flops=flops)
 
 
+# ---------------------------------------------------------------------------
+# split-K schedule-level accounting (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+# Number of independent tile-programs a launch needs before the chip stops
+# being latency-bound: enough (m, n, s) grid cells must be in flight to keep
+# the DMA engines saturating HBM while earlier cells occupy the VPU/MXU, and
+# (on multi-core parts) to give every core work. Below this, achieved
+# bandwidth degrades roughly linearly with available parallelism — the
+# skinny-decode failure mode split-K exists to fix (paper §4.4: at N <= 64
+# the N-tile count is 1 and M-tiles alone cannot fill the machine).
+LATENCY_HIDING_TILES = 128
+
+
+def splitk_partials_bytes(m: int, n_pad: int, split_k: int) -> float:
+    """Extra HBM traffic a split-K schedule pays: the f32 partials buffer
+    ``[S, M, N]`` is written once by the main kernel and read once by the
+    reduce kernel. ``split_k == 1`` dispatches to the fused single-pass
+    kernel (no partials buffer), so the cost is zero there."""
+    if split_k <= 1:
+        return 0.0
+    return 2.0 * 4.0 * split_k * m * n_pad
+
+
+@dataclasses.dataclass
+class SplitKTerms:
+    """Roofline terms of one concrete LSCD schedule (tile geometry + split).
+
+    Unlike :func:`lscd_kernel_terms` (the shape-level ideal: every operand
+    streamed once), this charges what the grid actually moves:
+
+      * A re-streamed once per N-tile (the words block index is independent
+        of n, but the grid revisits every (m, k) for each n-tile);
+      * B re-streamed once per M-tile (symmetrically);
+      * the f32 partials write+read when ``split_k > 1``.
+
+    ``utilization`` models the skinny-regime parallelism cliff: with fewer
+    than LATENCY_HIDING_TILES independent (m, n, s) cells the launch is
+    latency-bound and achieved bandwidth scales with the cell count.
+    ``effective_s = step_time / utilization`` is what the schedule selector
+    minimises.
+    """
+
+    terms: RooflineTerms
+    m_tb: int
+    k_tb: int
+    n_tb: int
+    split_k: int
+    parallel_tiles: int
+    utilization: float
+    partials_bytes: float
+
+    @property
+    def effective_s(self) -> float:
+        return self.terms.step_time_s / max(self.utilization, 1e-9)
+
+    def as_dict(self) -> dict:
+        d = self.terms.as_dict()
+        d.update({
+            "m_tb": self.m_tb, "k_tb": self.k_tb, "n_tb": self.n_tb,
+            "split_k": self.split_k, "parallel_tiles": self.parallel_tiles,
+            "utilization": self.utilization,
+            "partials_bytes": self.partials_bytes,
+            "effective_s": self.effective_s,
+        })
+        return d
+
+
+# Analytic per-tile stream bound when no measured encoding is at hand:
+# tile_elems · (1−s) · IMBALANCE, padded to PAD_QUANTUM words (DESIGN.md §4;
+# IMBALANCE measured for random unstructured masks at 128×128).
+_MAX_NNZ_IMBALANCE = 1.15
+_PAD_QUANTUM_WORDS = 128
+
+
+def analytic_max_nnz(m_tb: int, k_tb: int, sparsity: float) -> int:
+    words = m_tb * k_tb * (1.0 - sparsity) * _MAX_NNZ_IMBALANCE
+    q = _PAD_QUANTUM_WORDS
+    return int(-(-words // q) * q) if words > 0 else q
+
+
+def lscd_splitk_terms(m: int, k: int, n: int, sparsity: float, *,
+                      m_tb: int = 128, k_tb: int = 128, n_tb: int = 8,
+                      split_k: int = 1, group: int = 1,
+                      max_nnz: Optional[int] = None, chips: int = 1,
+                      label: str = "lscd_splitk") -> SplitKTerms:
+    """Schedule-level roofline of the (grouped) LSCD split-K SpMM.
+
+    ``max_nnz`` is the encoding's real padded per-tile stream length when
+    known (``TiledCSL.max_nnz`` — what the kernel actually DMAs); otherwise
+    the DESIGN.md §4 analytic bound is used. ``group`` multiplies the A
+    stream, FLOPs, and C/partials blocks (one output per group member; the
+    binary-epilogue single-C saving is below the selection noise floor and
+    is accounted by :func:`lscd_grouped_terms` instead).
+
+    Returns :class:`SplitKTerms`; the schedule selector minimises its
+    ``effective_s`` (roofline time deflated by the parallelism-utilization
+    factor — the term that makes S > 1 win for skinny N despite the extra
+    partials traffic).
+    """
+    if split_k < 1:
+        raise ValueError(f"split_k must be >= 1, got {split_k}")
+    mt = -(-m // m_tb)
+    kt = -(-k // k_tb)
+    nt = -(-n // n_tb)
+    n_pad = nt * n_tb
+    if max_nnz is None:
+        max_nnz = analytic_max_nnz(m_tb, k_tb, sparsity)
+    a_once = float(group) * mt * kt * (max_nnz * 4.0)     # words stream
+    b_once = 2.0 * k * n_pad                              # bf16 activation
+    c_bytes = float(group) * 2.0 * m * n_pad              # bf16 outputs
+    partials = float(group) * splitk_partials_bytes(m, n_pad, split_k)
+    bytes_ = nt * a_once + mt * b_once + c_bytes + partials
+    flops = float(group) * 2.0 * m * k * n_pad
+    if split_k > 1:                                       # reduce-kernel adds
+        flops += float(group) * split_k * m * n_pad
+    terms = RooflineTerms(flops=flops, hbm_bytes=bytes_, collective_bytes=0.0,
+                          chips=chips, label=label,
+                          model_flops=float(group) * 2.0 * m * k * n)
+    parallel = mt * nt * split_k
+    util = min(1.0, parallel / float(LATENCY_HIDING_TILES))
+    return SplitKTerms(terms=terms, m_tb=m_tb, k_tb=k_tb, n_tb=n_tb,
+                       split_k=split_k, parallel_tiles=parallel,
+                       utilization=util, partials_bytes=partials)
+
+
 def fused_epilogue_saved_bytes(m: int, k: int, n: int, sparsity: float, *,
                                group: int = 1, epilogue: str = "none",
                                pad_overhead: float = 0.0) -> float:

@@ -15,7 +15,11 @@ HBM round-trip.
 
 Orientation is the paper's: weights are stored ``[out, in]`` = A[M, K]; the
 activation matrix is transposed to ``[in, tokens]`` = B[K, N] so that N is
-the (skinny) token/batch dimension — §2.2's "Skinny MatMul".
+the (skinny) token/batch dimension — §2.2's "Skinny MatMul". Because every
+call hands the activation's N through ``ops.spmm``, the schedule selector
+(``kernels/schedule.py``, DESIGN.md §9) sees the true tokens-in-flight
+count per call: the same Tiled-CSL weights get a split-K launch at decode
+(N = 1-8) and a single-pass wide-tile launch at prefill (N = 512+).
 
 Out-dim contract: Tiled-CSL pads the out dim to the tile multiple; every
 entry point slices the result back to an explicit ``declared_out``

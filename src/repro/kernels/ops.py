@@ -1,10 +1,13 @@
 """Public jit'd wrappers around the LSCD SpMM kernels.
 
-``spmm`` is the framework-facing op: handles N padding/tile selection,
-backend dispatch (Pallas on TPU / interpret for validation / XLA reference
-on CPU), fused bias/activation epilogues, and a custom VJP (grad flows to
-the dense activation only — the Tiled-CSL weight is an inference-time
-format; training uses masked dense weights, see ``core/pruning.py``).
+``spmm`` is the framework-facing op: handles N padding, shape-aware
+schedule selection (``kernels/schedule.py`` picks the N tile and the
+split-K factor per (M, K, N, sparsity); ``split_k > 1`` routes to the
+split-K kernel pair — DESIGN.md §9), backend dispatch (Pallas on TPU /
+interpret for validation / XLA reference on CPU), fused bias/activation
+epilogues, and a custom VJP (grad flows to the dense activation and the
+bias only — the Tiled-CSL weight is an inference-time format; training
+uses masked dense weights, see ``core/pruning.py``).
 
 ``spmm_grouped`` is the grouped entry (G same-shape weights, one launch, B
 streamed once; binary epilogues combine G == 2 pairs — DESIGN.md §8).
@@ -26,25 +29,26 @@ import jax.numpy as jnp
 
 from repro.core import tiled_csl
 from repro.kernels import ref as ref_mod
+from repro.kernels import schedule as schedule_mod
 from repro.kernels import spmm as spmm_mod
 
 Backend = Literal["auto", "pallas", "interpret", "xla"]
 
 
-def _pick_n_tb(n: int) -> int:
-    """Tile N like the paper §5: N_TB = 8/16/32/64 for small batch, 128 cap.
-
-    (Paper uses N_TB up to 64 on A100; TPU lanes are 128 wide so we allow a
-    128 cap for large-N shapes.)
-    """
-    for cand in (8, 16, 32, 64, 128):
-        if n <= cand:
-            return cand
-    return 128
-
-
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _pick_schedule(t: tiled_csl.TiledCSL, n: int, backend: str,
+                   n_tb: int | None, split_k: int | None) -> schedule_mod.Schedule:
+    # Sparsity comes from static metadata only (the true nnz sum is a
+    # device value and must not be read under jit); the shared helper keeps
+    # dispatch and autotune cache keys bit-identical.
+    sparsity = schedule_mod.sparsity_from_max_nnz(t.max_nnz, t.m_tb, t.k_tb)
+    return schedule_mod.select(
+        t.shape[0], t.shape[1], n, sparsity,
+        m_tb=t.m_tb, k_tb=t.k_tb, n_tb=n_tb, split_k=split_k,
+        group=t.group or 1, max_nnz=t.max_nnz, backend=backend)
 
 
 def spmm(t: tiled_csl.TiledCSL,
@@ -53,6 +57,7 @@ def spmm(t: tiled_csl.TiledCSL,
          out_dtype=None,
          backend: Backend = "auto",
          n_tb: int | None = None,
+         split_k: int | None = None,
          epilogue: str = "none",
          bias: jax.Array | None = None) -> jax.Array:
     """C[M, N] = epilogue(A_tiled_csl[M, K] @ B[K, N] + bias).
@@ -62,6 +67,11 @@ def spmm(t: tiled_csl.TiledCSL,
       pallas    — force the TPU kernel (interpret=False).
       interpret — Pallas kernel body on CPU (correctness validation).
       xla       — decompress-then-matmul reference path.
+
+    ``n_tb``/``split_k`` pin the schedule; left None, ``schedule.select``
+    picks both per (M, K, N, sparsity) — so the same weights get a split-K
+    launch at decode N and a single-pass one at prefill N. ``split_k > 1``
+    runs the split-K kernel pair (f32 partials + reduce; DESIGN.md §9).
 
     epilogue (unary: none/silu/gelu/relu) and bias ([M]) are fused into the
     kernel flush (applied by the reference oracle on the xla path) — the
@@ -78,13 +88,16 @@ def spmm(t: tiled_csl.TiledCSL,
                                 bias=bias)
 
     n = b.shape[1]
-    tb = n_tb or _pick_n_tb(n)
-    n_pad = -(-n // tb) * tb
+    sched = _pick_schedule(t, n, backend, n_tb, split_k)
+    n_pad = -(-n // sched.n_tb) * sched.n_tb
     if n_pad != n:
         b = jnp.pad(b, ((0, 0), (0, n_pad - n)))
-    out = spmm_mod.lscd_spmm(
-        t, b, n_tb=tb, out_dtype=out_dtype,
-        interpret=(backend == "interpret"), epilogue=epilogue, bias=bias)
+    kern = (spmm_mod.lscd_spmm if sched.split_k == 1
+            else functools.partial(spmm_mod.lscd_spmm_splitk,
+                                   split_k=sched.split_k))
+    out = kern(t, b, n_tb=sched.n_tb, out_dtype=out_dtype,
+               interpret=(backend == "interpret"), epilogue=epilogue,
+               bias=bias)
     # Epilogues are elementwise, so slicing the padded columns off after the
     # fused flush equals applying them to the unpadded result.
     return out[:, :n] if n_pad != n else out
@@ -96,13 +109,16 @@ def spmm_grouped(t: tiled_csl.TiledCSL,
                  out_dtype=None,
                  backend: Backend = "auto",
                  n_tb: int | None = None,
+                 split_k: int | None = None,
                  epilogue: str = "none",
                  bias: jax.Array | None = None) -> jax.Array:
     """Grouped LSCD SpMM: G same-shape weights against one B, one launch.
 
     Returns C[G, M, N] (unary epilogues, applied per group; bias is [G, M])
     or C[M, N] (binary epilogues ``silu_mul``/``gelu_mul`` combining the
-    G == 2 pair in VMEM — the SwiGLU fusion). Backends as in :func:`spmm`.
+    G == 2 pair in VMEM — the SwiGLU fusion). Backends and schedule
+    selection (``n_tb``/``split_k`` pins vs ``schedule.select``) as in
+    :func:`spmm`.
     """
     groups = t.group
     if groups is None:
@@ -116,34 +132,57 @@ def spmm_grouped(t: tiled_csl.TiledCSL,
                                         epilogue=epilogue, bias=bias)
 
     n = b.shape[1]
-    tb = n_tb or _pick_n_tb(n)
-    n_pad = -(-n // tb) * tb
+    sched = _pick_schedule(t, n, backend, n_tb, split_k)
+    n_pad = -(-n // sched.n_tb) * sched.n_tb
     if n_pad != n:
         b = jnp.pad(b, ((0, 0), (0, n_pad - n)))
-    out = spmm_mod.lscd_spmm_grouped(
-        t, b, n_tb=tb, out_dtype=out_dtype,
-        interpret=(backend == "interpret"), epilogue=epilogue, bias=bias)
+    kern = (spmm_mod.lscd_spmm_grouped if sched.split_k == 1
+            else functools.partial(spmm_mod.lscd_spmm_splitk_grouped,
+                                   split_k=sched.split_k))
+    out = kern(t, b, n_tb=sched.n_tb, out_dtype=out_dtype,
+               interpret=(backend == "interpret"), epilogue=epilogue,
+               bias=bias)
     if n_pad != n:
         out = out[:, :n] if kind == "binary" else out[..., :n]
     return out
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
-def spmm_diff(t: tiled_csl.TiledCSL, b: jax.Array) -> jax.Array:
-    """Differentiable-in-B SpMM (weights are a frozen inference format)."""
-    return spmm(t, b)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 2))
+def _spmm_diff(t, b, epilogue, bias):
+    return spmm(t, b, epilogue=epilogue, bias=bias)
 
 
-def _spmm_fwd(t, b):
-    return spmm_diff(t, b), None
+def _spmm_fwd(t, b, epilogue, bias):
+    # The residual is the bias itself: its None-ness is pytree *structure*
+    # (static under jit), which is all the backward needs to know.
+    return spmm(t, b, epilogue=epilogue, bias=bias), bias
 
 
-def _spmm_bwd(t, _res, g):
+def _spmm_bwd(t, epilogue, bias, g):
     # dB = A^T @ dC; use the XLA reference transpose (backward runs on the
     # training path where weights are dense+masked anyway — this exists for
     # API completeness, e.g. activation-gradient probes through a served model).
+    if epilogue != "none":
+        raise ValueError(
+            f"spmm_diff backward does not differentiate through the fused "
+            f"epilogue {epilogue!r}; apply the activation outside spmm_diff "
+            f"(epilogue='none') when gradients are needed")
     a = tiled_csl.decode_jax(t).astype(jnp.float32)
-    return (jnp.dot(a.T, g.astype(jnp.float32)).astype(g.dtype),)
+    gf = g.astype(jnp.float32)
+    db = jnp.dot(a.T, gf).astype(g.dtype)
+    dbias = None if bias is None else jnp.sum(gf, axis=1).astype(bias.dtype)
+    return (db, dbias)
 
 
-spmm_diff.defvjp(_spmm_fwd, _spmm_bwd)
+_spmm_diff.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+def spmm_diff(t: tiled_csl.TiledCSL, b: jax.Array, *,
+              epilogue: str = "none",
+              bias: jax.Array | None = None) -> jax.Array:
+    """Differentiable-in-(B, bias) SpMM (weights are a frozen inference
+    format). ``epilogue``/``bias`` forward to :func:`spmm`; the backward
+    supports only ``epilogue="none"`` and raises a ``ValueError`` otherwise
+    — it must never silently differentiate the pre-activation function."""
+    spmm_mod.epilogue_kind(epilogue)  # unknown/binary names raise up front
+    return _spmm_diff(t, b, epilogue, bias)

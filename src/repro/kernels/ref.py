@@ -1,7 +1,9 @@
 """Pure-jnp oracles for the Flash-LLM LSCD SpMM kernel.
 
 ``spmm_ref`` / ``spmm_grouped_ref`` are THE correctness oracles every Pallas
-sweep asserts against. They are also the ``sparse_xla`` full-model execution
+sweep asserts against (``spmm_splitk_ref`` / ``spmm_splitk_grouped_ref``
+replicate the split-K kernels' per-slice partial-sum association for the
+split-K sweeps). They are also the ``sparse_xla`` full-model execution
 path on backends where the TPU kernel cannot lower (this CPU container): XLA
 materialises the dense weight (HBM round-trip) before the matmul — exactly
 the traffic penalty the fused kernel removes on real hardware.
@@ -46,6 +48,67 @@ def spmm_ref(t: tiled_csl.TiledCSL, b: jax.Array,
                 preferred_element_type=jnp.float32)
     if bias is not None:
         y = y + bias.astype(jnp.float32)[:, None]
+    return spmm_mod.apply_epilogue(epilogue, y).astype(out_dtype)
+
+
+def _splitk_partials(a: jax.Array, b: jax.Array, k_tb: int, kt: int,
+                     split_k: int) -> jax.Array:
+    """Stack the per-slice partial products the split-K grid computes:
+    slice s owns K tiles [s*ceil(Kt/S), (s+1)*ceil(Kt/S)) — the ragged
+    last slice simply covers fewer columns. f32 throughout."""
+    k_chunk = -(-kt // split_k)
+    cols = k_chunk * k_tb
+    parts = []
+    for s in range(split_k):
+        lo = min(s * cols, a.shape[1])
+        hi = min(lo + cols, a.shape[1])
+        parts.append(jnp.dot(a[:, lo:hi], b[lo:hi],
+                             preferred_element_type=jnp.float32))
+    return jnp.stack(parts)                              # [S, M, N]
+
+
+def spmm_splitk_ref(t: tiled_csl.TiledCSL, b: jax.Array,
+                    split_k: int,
+                    out_dtype=jnp.float32,
+                    epilogue: str = "none",
+                    bias: jax.Array | None = None) -> jax.Array:
+    """Split-K oracle: per-K-slice f32 partials summed over the split axis,
+    then bias + epilogue at the single rounding point — the exact
+    association of ``lscd_spmm_splitk``'s partials + reduce pair (vs
+    :func:`spmm_ref`'s one whole-K contraction, which may round
+    differently in the last f32 bit)."""
+    spmm_mod.epilogue_kind(epilogue)
+    a = tiled_csl.decode_jax(t).astype(jnp.float32)
+    _, kt = t.grid
+    y = jnp.sum(_splitk_partials(a, b.astype(jnp.float32), t.k_tb, kt,
+                                 split_k), axis=0)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[:, None]
+    return spmm_mod.apply_epilogue(epilogue, y).astype(out_dtype)
+
+
+def spmm_splitk_grouped_ref(t: tiled_csl.TiledCSL, b: jax.Array,
+                            split_k: int,
+                            out_dtype=jnp.float32,
+                            epilogue: str = "none",
+                            bias: jax.Array | None = None) -> jax.Array:
+    """Grouped split-K oracle, mirroring ``lscd_spmm_splitk_grouped``:
+    C[G, M, N] for unary epilogues (bias [G, M] per group), C[M, N] for
+    binary ones."""
+    groups = t.group
+    if groups is None:
+        raise ValueError("ungrouped TiledCSL: use spmm_splitk_ref")
+    kind = spmm_mod.epilogue_kind(epilogue, groups=groups)
+    a = tiled_csl.decode_jax(t).astype(jnp.float32)      # [G, M, K]
+    _, kt = t.grid
+    bf = b.astype(jnp.float32)
+    y = jnp.stack([
+        jnp.sum(_splitk_partials(a[g], bf, t.k_tb, kt, split_k), axis=0)
+        for g in range(groups)])                         # [G, M, N]
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)[:, :, None]
+    if kind == "binary":
+        return spmm_mod.apply_epilogue(epilogue, y[0], y[1]).astype(out_dtype)
     return spmm_mod.apply_epilogue(epilogue, y).astype(out_dtype)
 
 

@@ -43,9 +43,24 @@ stack otherwise pays after every projection (DESIGN.md §8):
   VMEM — SwiGLU's ``silu(gate(x)) * up(x)`` flushes as a single C-sized
   write-back instead of two pre-activation writes plus a pointwise pass.
 
-Grid: ``(M/M_TB, N/N_TB, K/K_TB[, G])`` with K (then G) innermost
-("arbitrary" semantics); the f32 accumulator lives in VMEM scratch and is
-flushed at ``k == Kt-1`` (last group for binary epilogues).
+Grids (DESIGN.md §4, §9):
+
+* **Single-pass** (``lscd_spmm`` / ``lscd_spmm_grouped``):
+  ``(Mt, Nt, Kt[, G])`` with K (then G) innermost ("arbitrary" semantics);
+  the f32 accumulator lives in VMEM scratch and is flushed — bias +
+  epilogue applied, one cast — at ``k == Kt-1`` (last group for binary
+  epilogues).
+* **Split-K** (``lscd_spmm_splitk`` / ``lscd_spmm_splitk_grouped``, paper
+  §4.4's global-reduction splitting re-derived for the skinny decode
+  regime): a leading *parallel* split dimension partitions the Kt tiles,
+  ``(S, Mt, Nt, ceil(Kt/S)[, G])``; each slice accumulates its K-range in
+  VMEM scratch and writes an f32 partials block ``[S,(G,) M, N]``, and a
+  second lightweight reduce kernel (grid ``(Mt, Nt)``) sums the S partials
+  and applies bias + epilogue at the final flush. Partials stay f32 end to
+  end, so the bias/activation/output-cast rounding points are identical to
+  the single-pass flush. ``kernels/schedule.py`` picks S (and the tile
+  sizes) per shape; at N <= 64 the N-tile count is 1 and S > 1 is the only
+  way to put more than Mt programs in flight.
 
 Validated in ``interpret=True`` mode against ``ref.spmm_ref`` /
 ``ref.spmm_grouped_ref`` (tests sweep shapes × sparsities × dtypes × tile
@@ -194,9 +209,6 @@ def lscd_spmm(t: tiled_csl.TiledCSL,
     nt = n // n_tb
 
     grid = (mt, nt, kt)
-    kernel = functools.partial(
-        _lscd_spmm_kernel, m_tb=t.m_tb, k_tb=t.k_tb, k_tiles=kt,
-        epilogue=epilogue, bias_ref=None)
     in_specs = [
         # Compressed A tile: the ONLY A traffic (load-as-sparse).
         pl.BlockSpec((1, 1, t.max_nnz), lambda m_, n_, k_, nnz: (m_, k_, 0)),
@@ -204,11 +216,12 @@ def lscd_spmm(t: tiled_csl.TiledCSL,
         pl.BlockSpec((t.k_tb, n_tb), lambda m_, n_, k_, nnz: (k_, n_)),
     ]
     args = [t.nnz, t.words, b]
-    if bias is not None:
+    body = dict(m_tb=t.m_tb, k_tb=t.k_tb, k_tiles=kt, epilogue=epilogue)
+    if bias is None:
+        kernel = functools.partial(_lscd_spmm_kernel, bias_ref=None, **body)
+    else:
         # bias tile rides along as [M_TB, 1] broadcast in the epilogue
-        kernel = functools.partial(
-            _lscd_spmm_kernel_bias, m_tb=t.m_tb, k_tb=t.k_tb, k_tiles=kt,
-            epilogue=epilogue)
+        kernel = functools.partial(_lscd_spmm_kernel_bias, **body)
         in_specs.append(
             pl.BlockSpec((t.m_tb, 1), lambda m_, n_, k_, nnz: (m_, 0)))
         args.append(bias.reshape(m, 1).astype(jnp.float32))
@@ -350,9 +363,6 @@ def lscd_spmm_grouped(t: tiled_csl.TiledCSL,
     nt = n // n_tb
 
     grid = (mt, nt, kt, groups)
-    kernel = functools.partial(
-        _lscd_spmm_grouped_kernel, m_tb=t.m_tb, k_tb=t.k_tb, k_tiles=kt,
-        groups=groups, epilogue=epilogue, bias_ref=None)
     in_specs = [
         # Group g's compressed A tile (the only A traffic). The B block
         # index is independent of g, so the pipeliner holds B resident
@@ -362,10 +372,13 @@ def lscd_spmm_grouped(t: tiled_csl.TiledCSL,
         pl.BlockSpec((t.k_tb, n_tb), lambda m_, n_, k_, g_, nnz: (k_, n_)),
     ]
     args = [t.nnz, t.words, b]
-    if bias is not None:
-        kernel = functools.partial(
-            _lscd_spmm_grouped_kernel_bias, m_tb=t.m_tb, k_tb=t.k_tb,
-            k_tiles=kt, groups=groups, epilogue=epilogue)
+    body = dict(m_tb=t.m_tb, k_tb=t.k_tb, k_tiles=kt, groups=groups,
+                epilogue=epilogue)
+    if bias is None:
+        kernel = functools.partial(_lscd_spmm_grouped_kernel, bias_ref=None,
+                                   **body)
+    else:
+        kernel = functools.partial(_lscd_spmm_grouped_kernel_bias, **body)
         in_specs.append(
             pl.BlockSpec((groups, t.m_tb, 1),
                          lambda m_, n_, k_, g_, nnz: (0, m_, 0)))
@@ -395,6 +408,306 @@ def lscd_spmm_grouped(t: tiled_csl.TiledCSL,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary",
                                  "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# split-K LSCD SpMM: partials over K slices + a global-reduce flush kernel
+# (paper §4.4, re-derived for the skinny decode regime — DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _splitk_chunk(kt: int, split_k: int) -> int:
+    """K tiles per split slice. The last slice may own fewer real tiles
+    (Kt % S != 0); its out-of-range steps clamp their block index and are
+    predicated off via the nnz gate, contributing exact zeros."""
+    return -(-kt // split_k)
+
+
+def _lscd_spmm_splitk_kernel(nnz_ref,      # SMEM int32[Mt, Kt]
+                             words_ref,    # VMEM uint32[1, 1, max_nnz]
+                             b_ref,        # VMEM bf16/f32[K_TB, N_TB]
+                             p_ref,        # VMEM f32[1, M_TB, N_TB] partials
+                             acc_ref,      # VMEM scratch f32[M_TB, N_TB]
+                             *,
+                             m_tb: int,
+                             k_tb: int,
+                             k_tiles: int,
+                             k_chunk: int):
+    m, kl = pl.program_id(1), pl.program_id(3)
+    k = pl.program_id(0) * k_chunk + kl    # global K-tile index of this step
+
+    @pl.when(kl == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Steps past the end of K (ragged last slice) read a clamped-index block
+    # but are masked off here — the partial stays an exact zero.
+    nnz = jnp.where(k < k_tiles,
+                    nnz_ref[m, jnp.minimum(k, k_tiles - 1)], 0)
+
+    @pl.when(nnz > 0)
+    def _body():
+        a_dense = _unpack_scatter(words_ref[0, 0, :], m_tb, k_tb)
+        acc_ref[...] += jnp.dot(a_dense, b_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(kl == k_chunk - 1)
+    def _flush_partial():
+        # f32 partials, NO epilogue/cast: the single rounding point stays in
+        # the reduce kernel's flush.
+        p_ref[0] = acc_ref[...]
+
+
+def _splitk_reduce_kernel(p_ref,           # VMEM f32[S, M_TB, N_TB]
+                          o_ref,           # VMEM out[M_TB, N_TB]
+                          *, epilogue: str, bias_ref=None):
+    out = jnp.sum(p_ref[...], axis=0)      # f32 global reduction over S
+    if bias_ref is not None:
+        out = out + bias_ref[...].astype(jnp.float32)
+    o_ref[...] = _EPILOGUES[epilogue](out).astype(o_ref.dtype)
+
+
+def _splitk_reduce_kernel_bias(p_ref, bias_ref, o_ref, *, epilogue):
+    _splitk_reduce_kernel(p_ref, o_ref, epilogue=epilogue, bias_ref=bias_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("n_tb", "split_k", "out_dtype",
+                                              "interpret", "epilogue"))
+def lscd_spmm_splitk(t: tiled_csl.TiledCSL,
+                     b: jax.Array,
+                     *,
+                     n_tb: int = 128,
+                     split_k: int = 2,
+                     out_dtype=jnp.float32,
+                     interpret: bool = True,
+                     epilogue: str = "none",
+                     bias: jax.Array | None = None) -> jax.Array:
+    """Split-K kernel entry: grid ``(S, Mt, Nt, ceil(Kt/S))`` + a reduce.
+
+    Each split slice accumulates its K-tile range into VMEM scratch and
+    writes one f32 partials block; the reduce kernel (grid ``(Mt, Nt)``)
+    sums the S partials and applies bias + epilogue at the one flush, so
+    numerics match :func:`lscd_spmm` apart from the (f32) partial-sum
+    association. ``split_k == 1`` is the identical computation in two
+    launches. Requires N % n_tb == 0; see ops.spmm for padding.
+    """
+    if t.group is not None:
+        raise ValueError("grouped TiledCSL: use lscd_spmm_splitk_grouped")
+    epilogue_kind(epilogue)
+    m, k = t.shape
+    n = b.shape[1]
+    mt, kt = t.grid
+    if b.shape[0] != k:
+        raise ValueError(f"B rows {b.shape[0]} != K {k}")
+    if n % n_tb:
+        raise ValueError(f"N={n} not a multiple of n_tb={n_tb}")
+    if not 1 <= split_k <= kt:
+        raise ValueError(f"split_k={split_k} not in [1, Kt={kt}]")
+    nt = n // n_tb
+    k_chunk = _splitk_chunk(kt, split_k)
+
+    kernel = functools.partial(
+        _lscd_spmm_splitk_kernel, m_tb=t.m_tb, k_tb=t.k_tb, k_tiles=kt,
+        k_chunk=k_chunk)
+    k_ix = lambda s_, kl_: jnp.minimum(s_ * k_chunk + kl_, kt - 1)
+    partials = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(split_k, mt, nt, k_chunk),
+            in_specs=[
+                pl.BlockSpec((1, 1, t.max_nnz),
+                             lambda s_, m_, n_, kl_, nnz: (m_, k_ix(s_, kl_),
+                                                           0)),
+                pl.BlockSpec((t.k_tb, n_tb),
+                             lambda s_, m_, n_, kl_, nnz: (k_ix(s_, kl_),
+                                                           n_)),
+            ],
+            out_specs=pl.BlockSpec((1, t.m_tb, n_tb),
+                                   lambda s_, m_, n_, kl_, nnz: (s_, m_, n_)),
+            scratch_shapes=[pltpu.VMEM((t.m_tb, n_tb), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((split_k, m, n), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(t.nnz, t.words, b)
+
+    in_specs = [pl.BlockSpec((split_k, t.m_tb, n_tb),
+                             lambda m_, n_: (0, m_, n_))]
+    args = [partials]
+    if bias is None:
+        red = functools.partial(_splitk_reduce_kernel, epilogue=epilogue,
+                                bias_ref=None)
+    else:
+        red = functools.partial(_splitk_reduce_kernel_bias, epilogue=epilogue)
+        in_specs.append(pl.BlockSpec((t.m_tb, 1), lambda m_, n_: (m_, 0)))
+        args.append(bias.reshape(m, 1).astype(jnp.float32))
+    return pl.pallas_call(
+        red,
+        grid=(mt, nt),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((t.m_tb, n_tb), lambda m_, n_: (m_, n_)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(*args)
+
+
+def _lscd_spmm_splitk_grouped_kernel(nnz_ref,    # SMEM int32[G, Mt, Kt]
+                                     words_ref,  # VMEM uint32[1,1,1,max_nnz]
+                                     b_ref,      # VMEM bf16/f32[K_TB, N_TB]
+                                     p_ref,      # VMEM f32[1, G, M_TB, N_TB]
+                                     acc_ref,    # scratch f32[G, M_TB, N_TB]
+                                     *,
+                                     m_tb: int,
+                                     k_tb: int,
+                                     k_tiles: int,
+                                     k_chunk: int,
+                                     groups: int):
+    m = pl.program_id(1)
+    kl, g = pl.program_id(3), pl.program_id(4)
+    k = pl.program_id(0) * k_chunk + kl
+
+    @pl.when((kl == 0) & (g == 0))
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    nnz = jnp.where(k < k_tiles,
+                    nnz_ref[g, m, jnp.minimum(k, k_tiles - 1)], 0)
+
+    @pl.when(nnz > 0)
+    def _body():
+        a_dense = _unpack_scatter(words_ref[0, 0, 0, :], m_tb, k_tb)
+        contrib = jnp.dot(a_dense, b_ref[...].astype(jnp.float32),
+                          preferred_element_type=jnp.float32)
+        for gi in range(groups):
+            @pl.when(g == gi)
+            def _store(gi=gi):
+                acc_ref[gi] += contrib
+
+    @pl.when((kl == k_chunk - 1) & (g == groups - 1))
+    def _flush_partial():
+        p_ref[0] = acc_ref[...]
+
+
+def _splitk_reduce_grouped_kernel(p_ref,   # VMEM f32[S, G, M_TB, N_TB]
+                                  o_ref,   # VMEM out[G, M_TB, N_TB] (unary)
+                                           #      or [M_TB, N_TB]   (binary)
+                                  *, epilogue: str, bias_ref=None):
+    acc = jnp.sum(p_ref[...], axis=0)      # f32 [G, M_TB, N_TB]
+    if bias_ref is not None:
+        acc = acc + bias_ref[...].astype(jnp.float32)
+    if epilogue in _BINARY_EPILOGUES:
+        out = _BINARY_EPILOGUES[epilogue](acc[0], acc[1])
+    else:
+        out = _EPILOGUES[epilogue](acc)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _splitk_reduce_grouped_kernel_bias(p_ref, bias_ref, o_ref, *, epilogue):
+    _splitk_reduce_grouped_kernel(p_ref, o_ref, epilogue=epilogue,
+                                  bias_ref=bias_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("n_tb", "split_k", "out_dtype",
+                                              "interpret", "epilogue"))
+def lscd_spmm_splitk_grouped(t: tiled_csl.TiledCSL,
+                             b: jax.Array,
+                             *,
+                             n_tb: int = 128,
+                             split_k: int = 2,
+                             out_dtype=jnp.float32,
+                             interpret: bool = True,
+                             epilogue: str = "none",
+                             bias: jax.Array | None = None) -> jax.Array:
+    """Grouped split-K entry: grid ``(S, Mt, Nt, ceil(Kt/S), G)`` + reduce.
+
+    Semantics match :func:`lscd_spmm_grouped` — C[G, M, N] for unary
+    epilogues (bias [G, M] applied per group), C[M, N] for binary ones —
+    with the K reduction split exactly as in :func:`lscd_spmm_splitk`: f32
+    partials [S, G, M, N], bias + epilogue at the reduce kernel's flush.
+    B still streams once per (s, m, n) for all G groups.
+    """
+    groups = t.group
+    if groups is None:
+        raise ValueError("ungrouped TiledCSL: use lscd_spmm_splitk")
+    kind = epilogue_kind(epilogue, groups=groups)
+    m, k = t.shape
+    n = b.shape[1]
+    mt, kt = t.grid
+    if b.shape[0] != k:
+        raise ValueError(f"B rows {b.shape[0]} != K {k}")
+    if n % n_tb:
+        raise ValueError(f"N={n} not a multiple of n_tb={n_tb}")
+    if not 1 <= split_k <= kt:
+        raise ValueError(f"split_k={split_k} not in [1, Kt={kt}]")
+    nt = n // n_tb
+    k_chunk = _splitk_chunk(kt, split_k)
+
+    kernel = functools.partial(
+        _lscd_spmm_splitk_grouped_kernel, m_tb=t.m_tb, k_tb=t.k_tb,
+        k_tiles=kt, k_chunk=k_chunk, groups=groups)
+    k_ix = lambda s_, kl_: jnp.minimum(s_ * k_chunk + kl_, kt - 1)
+    partials = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(split_k, mt, nt, k_chunk, groups),
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, t.max_nnz),
+                             lambda s_, m_, n_, kl_, g_, nnz:
+                             (g_, m_, k_ix(s_, kl_), 0)),
+                pl.BlockSpec((t.k_tb, n_tb),
+                             lambda s_, m_, n_, kl_, g_, nnz:
+                             (k_ix(s_, kl_), n_)),
+            ],
+            out_specs=pl.BlockSpec((1, groups, t.m_tb, n_tb),
+                                   lambda s_, m_, n_, kl_, g_, nnz:
+                                   (s_, 0, m_, n_)),
+            scratch_shapes=[pltpu.VMEM((groups, t.m_tb, n_tb), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((split_k, groups, m, n), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(t.nnz, t.words, b)
+
+    if kind == "binary":
+        out_shape = jax.ShapeDtypeStruct((m, n), out_dtype)
+        out_specs = pl.BlockSpec((t.m_tb, n_tb), lambda m_, n_: (m_, n_))
+    else:
+        out_shape = jax.ShapeDtypeStruct((groups, m, n), out_dtype)
+        out_specs = pl.BlockSpec((groups, t.m_tb, n_tb),
+                                 lambda m_, n_: (0, m_, n_))
+    in_specs = [pl.BlockSpec((split_k, groups, t.m_tb, n_tb),
+                             lambda m_, n_: (0, 0, m_, n_))]
+    args = [partials]
+    if bias is None:
+        red = functools.partial(_splitk_reduce_grouped_kernel,
+                                epilogue=epilogue, bias_ref=None)
+    else:
+        red = functools.partial(_splitk_reduce_grouped_kernel_bias,
+                                epilogue=epilogue)
+        in_specs.append(pl.BlockSpec((groups, t.m_tb, 1),
+                                     lambda m_, n_: (0, m_, 0)))
+        args.append(bias.reshape(groups, m, 1).astype(jnp.float32))
+    return pl.pallas_call(
+        red,
+        grid=(mt, nt),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
     )(*args)

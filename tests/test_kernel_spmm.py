@@ -342,6 +342,184 @@ def test_unknown_epilogue_raises_at_op_boundary():
         ops.spmm_grouped(t, b, backend="interpret")
 
 
+# ---------------------------------------------------------------------------
+# split-K SpMM: partials + global reduce (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 8])                 # decode regime
+@pytest.mark.parametrize("m_tb,k_tb", [(128, 128), (64, 128), (128, 64)])
+@pytest.mark.parametrize("split_k", [1, 2, 3])
+def test_splitk_decode_parity_sweep(n, m_tb, k_tb, split_k):
+    """The ISSUE-3 sweep: N in {1, 2, 8} x tile geometries x split factors
+    through the public op (padding + dispatch). k_tb=128 gives Kt=3, so
+    split_k=2 exercises the ragged last slice (Kt % S != 0) and split_k=3
+    the one-tile-per-slice extreme; S=1 routes to the single-pass kernel.
+    """
+    m, k = 256, 384
+    rng = np.random.default_rng(
+        hash((n, m_tb, k_tb, split_k)) % 2 ** 31)
+    a, t = _make(rng, m, k, 0.8, m_tb=m_tb, k_tb=k_tb)
+    b = jnp.asarray(rng.standard_normal((k, n), dtype=np.float32))
+    got = ops.spmm(t, b, backend="interpret", out_dtype=jnp.float32,
+                   split_k=split_k)
+    want = ref.spmm_ref(t, b, out_dtype=jnp.float32)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_splitk_s1_bitmatches_single_pass():
+    """split_k == 1 is the identical computation (same accumulation order,
+    same flush rounding points) in two launches — bit-exact, epilogue and
+    bias included."""
+    from repro.kernels import spmm as spmm_mod
+    rng = np.random.default_rng(80)
+    a, t = _make(rng, 256, 384, 0.8)
+    b = jnp.asarray(rng.standard_normal((384, 8), dtype=np.float32))
+    bias = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    base = spmm_mod.lscd_spmm(t, b, n_tb=8, interpret=True,
+                              epilogue="gelu", bias=bias)
+    s1 = spmm_mod.lscd_spmm_splitk(t, b, n_tb=8, split_k=1, interpret=True,
+                                   epilogue="gelu", bias=bias)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(s1))
+
+
+@pytest.mark.parametrize("split_k", [2, 3])
+def test_splitk_matches_splitk_ref_association(split_k):
+    """spmm_splitk_ref replicates the kernel's per-slice partial-sum
+    association (partials summed over S, then bias + epilogue once)."""
+    from repro.kernels import spmm as spmm_mod
+    rng = np.random.default_rng(81)
+    a, t = _make(rng, 256, 384, 0.8)
+    b = jnp.asarray(rng.standard_normal((384, 16), dtype=np.float32))
+    bias = jnp.asarray(rng.standard_normal(256), jnp.float32)
+    got = spmm_mod.lscd_spmm_splitk(t, b, n_tb=16, split_k=split_k,
+                                    interpret=True, epilogue="silu",
+                                    bias=bias)
+    want = ref.spmm_splitk_ref(t, b, split_k, out_dtype=jnp.float32,
+                               epilogue="silu", bias=bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+    # and the split association itself equals the plain oracle to roundoff
+    plain = ref.spmm_ref(t, b, out_dtype=jnp.float32, epilogue="silu",
+                         bias=bias)
+    np.testing.assert_allclose(np.asarray(want), np.asarray(plain),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("g", [2, 3])
+@pytest.mark.parametrize("epilogue", ["none", "relu"])
+def test_splitk_grouped_matches_ref(g, epilogue):
+    rng = np.random.default_rng(82 + g)
+    _, tg = _make_group(rng, g, 256, 384, (0.5, 0.8, 0.95))
+    b = jnp.asarray(rng.standard_normal((384, 8), dtype=np.float32))
+    bias = jnp.asarray(rng.standard_normal((g, 256)), jnp.float32)
+    got = ops.spmm_grouped(tg, b, backend="interpret",
+                           out_dtype=jnp.float32, split_k=2,
+                           epilogue=epilogue, bias=bias)
+    want = ref.spmm_splitk_grouped_ref(tg, b, 2, out_dtype=jnp.float32,
+                                       epilogue=epilogue, bias=bias)
+    assert got.shape == (g, 256, 8)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("epilogue", ["silu_mul", "gelu_mul"])
+@pytest.mark.parametrize("n", [16, 7])   # 7 exercises the N-padding slice
+def test_splitk_binary_epilogue_matches_ref(epilogue, n):
+    """Binary epilogues combine the G=2 pair at the split-K reduce flush;
+    they must commute with the N-padding slice as in the fused path."""
+    rng = np.random.default_rng(83)
+    _, tg = _make_group(rng, 2, 256, 256, (0.8, 0.8))
+    b = jnp.asarray(rng.standard_normal((256, n), dtype=np.float32))
+    got = ops.spmm_grouped(tg, b, backend="interpret",
+                           out_dtype=jnp.float32, split_k=2,
+                           epilogue=epilogue)
+    want = ref.spmm_grouped_ref(tg, b, out_dtype=jnp.float32,
+                                epilogue=epilogue)
+    assert got.shape == (256, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_splitk_grouped_s1_bitmatches_grouped():
+    from repro.kernels import spmm as spmm_mod
+    rng = np.random.default_rng(84)
+    _, tg = _make_group(rng, 2, 128, 256, (0.7, 0.9))
+    b = jnp.asarray(rng.standard_normal((256, 8), dtype=np.float32))
+    base = spmm_mod.lscd_spmm_grouped(tg, b, n_tb=8, interpret=True,
+                                      epilogue="silu_mul")
+    s1 = spmm_mod.lscd_spmm_splitk_grouped(tg, b, n_tb=8, split_k=1,
+                                           interpret=True,
+                                           epilogue="silu_mul")
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(s1))
+
+
+def test_splitk_invalid_split_raises():
+    from repro.kernels import spmm as spmm_mod
+    rng = np.random.default_rng(85)
+    _, t = _make(rng, 128, 256, 0.8)     # Kt = 2
+    b = jnp.ones((256, 8), jnp.float32)
+    with pytest.raises(ValueError, match="split_k"):
+        spmm_mod.lscd_spmm_splitk(t, b, n_tb=8, split_k=0, interpret=True)
+    with pytest.raises(ValueError, match="split_k"):
+        spmm_mod.lscd_spmm_splitk(t, b, n_tb=8, split_k=3, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# spmm_diff: explicit epilogue/bias forwarding
+# ---------------------------------------------------------------------------
+
+def test_spmm_diff_forwards_epilogue_and_bias():
+    rng = np.random.default_rng(86)
+    _, t = _make(rng, 128, 128, 0.7)
+    b = jnp.asarray(rng.standard_normal((128, 4), dtype=np.float32))
+    bias = jnp.asarray(rng.standard_normal(128), jnp.float32)
+    got = ops.spmm_diff(t, b, epilogue="silu", bias=bias)
+    want = ref.spmm_ref(t, b, out_dtype=b.dtype, epilogue="silu", bias=bias)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+    with pytest.raises(ValueError, match="unknown epilogue"):
+        ops.spmm_diff(t, b, epilogue="nope")
+
+
+def test_spmm_diff_bias_grad_matches_ref():
+    rng = np.random.default_rng(87)
+    _, t = _make(rng, 128, 128, 0.7)
+    b = jnp.asarray(rng.standard_normal((128, 4), dtype=np.float32))
+    bias = jnp.asarray(rng.standard_normal(128), jnp.float32)
+
+    def f_custom(b_, bb):
+        return jnp.sum(ops.spmm_diff(t, b_, bias=bb) ** 2)
+
+    def f_ref(b_, bb):
+        return jnp.sum(ref.spmm_ref(t, b_, out_dtype=jnp.float32,
+                                    bias=bb) ** 2)
+
+    gb, gbias = jax.grad(f_custom, argnums=(0, 1))(b, bias)
+    gb_ref, gbias_ref = jax.grad(f_ref, argnums=(0, 1))(b, bias)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(gb_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gbias), np.asarray(gbias_ref),
+                               rtol=1e-4, atol=1e-4)
+    # works under jit as well (the None-bias structure stays static)
+    g_jit = jax.jit(jax.grad(lambda b_: jnp.sum(ops.spmm_diff(t, b_))))(b)
+    assert g_jit.shape == b.shape
+
+
+def test_spmm_diff_epilogue_grad_raises():
+    """Regression: the bwd must refuse fused epilogues loudly instead of
+    silently differentiating the pre-activation function."""
+    rng = np.random.default_rng(88)
+    _, t = _make(rng, 128, 128, 0.7)
+    b = jnp.asarray(rng.standard_normal((128, 4), dtype=np.float32))
+    # forward-only use is fine...
+    _ = ops.spmm_diff(t, b, epilogue="gelu")
+    # ...but differentiating through it raises
+    with pytest.raises(ValueError, match="epilogue"):
+        jax.grad(lambda b_: jnp.sum(ops.spmm_diff(t, b_, epilogue="gelu")))(b)
+
+
 def test_grouped_xla_backend_matches_interpret():
     """The xla (CPU full-model) grouped path and the Pallas interpret path
     agree — the backend-dispatch contract of ops.spmm_grouped."""
