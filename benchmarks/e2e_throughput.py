@@ -20,13 +20,24 @@ a smoke-sized model with mixed-length traffic and reports its metrics
 the admission machinery is what turns the analytic memory headroom above
 into tokens/s, so its overhead is part of the end-to-end story.
 
-CSV: name,us_per_call,derived.
+A third section exercises the **paged KV cache** (DESIGN.md §10): at one
+fixed KV byte budget it runs dense-slot vs paged-block batchers over a
+unique-prompt and a shared-prefix workload, measuring admitted concurrency,
+tokens/s, prefix-hit rate, block utilization and preemptions — the
+measured form of the paper's memory→batch conversion. The `serving.budget`
+planner section shows the analytic end: at equal total HBM,
+`sparse_pallas` weights afford a multiple of the dense KV block pool.
+
+CSV: name,us_per_call,derived. ``--json`` emits the full structured report
+(committed as BENCH_e2e.json; CI uploads a smoke run per commit).
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
-from typing import List
+from typing import Any, Dict, List
 
 import numpy as np
 
@@ -117,7 +128,108 @@ def _scheduler_rows(full: bool) -> List[str]:
     ]
 
 
-def run(full: bool = False) -> List[str]:
+def _planner_report(block: int = 128) -> Dict[str, Any]:
+    """`serving.budget` at one fixed HBM budget: the sparsity-funded block
+    pool (the acceptance quantity: sparse_pallas > dense blocks)."""
+    from repro.serving import budget
+
+    cfg = configs.get("opt_30b")
+    hbm = int(64e9)                     # 4 x v5e chips
+    plans = {mode: budget.plan(cfg, hbm_budget=hbm, weight_mode=mode,
+                               sparsity=0.8, block=block).as_dict()
+             for mode in ("dense", "sparse_pallas")}
+    return {
+        "arch": cfg.name,
+        "hbm_budget": hbm,
+        "plans": plans,
+        "blocks_ratio": plans["sparse_pallas"]["n_blocks"]
+        / max(plans["dense"]["n_blocks"], 1),
+    }
+
+
+def _run_workload(b, prompts, max_new: int) -> Dict[str, Any]:
+    t0 = time.monotonic()
+    for uid, p in enumerate(prompts):
+        b.submit(uid, p, max_new_tokens=max_new)
+    done = b.run_to_completion(max_steps=5000)
+    dt = time.monotonic() - t0
+    m = b.metrics
+    toks = sum(len(v) for v in done.values())
+    out = {
+        "requests": len(done),
+        "tokens": toks,
+        "tok_per_s": toks / max(dt, 1e-9),
+        "steps": m.steps,
+        "peak_concurrency": m.peak_active_slots,
+        "occupancy": m.occupancy,
+        "preemptions": m.preemptions,
+        "prefix_hit_rate": m.prefix_hit_rate,
+        "outputs": {int(u): v for u, v in sorted(done.items())},
+    }
+    if b.paged:
+        out["block_utilization"] = m.peak_blocks_in_use / b.pool.n_blocks
+        out["peak_blocks_in_use"] = m.peak_blocks_in_use
+        b.pool.check_invariants()
+    return out
+
+
+def _paged_scenarios(full: bool) -> Dict[str, Any]:
+    """Dense-slot vs paged-block batchers at ONE fixed KV byte budget.
+
+    The budget buys either ``n_slots_dense`` pre-reserved [max_len] cache
+    rows or the byte-identical pool of ``n_blocks`` blocks; the paged side
+    gets a wide decode batch (slots are compute width, not KV bytes) and
+    converts unused slot tail + shared prefixes into admitted concurrency.
+    """
+    import jax
+    from repro.models import transformer
+    from repro.serving import batching
+
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    max_len, block = 64, 8
+    n_slots_dense = 4
+    n_blocks = n_slots_dense * max_len // block      # same KV bytes
+    n_req = 16 if full else 12
+    max_new = 8
+    rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab, 16).astype(np.int64)
+    workloads = {
+        "unique": [rng.integers(0, cfg.vocab, int(rng.integers(8, 15)))
+                   .astype(np.int64) for _ in range(n_req)],
+        "shared_prefix": [np.concatenate([
+            shared, rng.integers(0, cfg.vocab, int(rng.integers(3, 7)))
+            .astype(np.int64)]) for _ in range(n_req)],
+    }
+    scen: Dict[str, Any] = {}
+    for wname, prompts in workloads.items():
+        bd = batching.ContinuousBatcher(params, cfg,
+                                        n_slots=n_slots_dense,
+                                        max_len=max_len)
+        scen[f"dense_{wname}"] = _run_workload(bd, prompts, max_new)
+        bp = batching.ContinuousBatcher(
+            params, cfg, n_slots=4 * n_slots_dense, max_len=max_len,
+            cache_kind="paged", block_size=block, n_blocks=n_blocks)
+        scen[f"paged_{wname}"] = _run_workload(bp, prompts, max_new)
+        # greedy token-stream parity is part of the bench contract
+        assert (scen[f"paged_{wname}"]["outputs"]
+                == scen[f"dense_{wname}"]["outputs"]), wname
+    gains = {w: scen[f"paged_{w}"]["peak_concurrency"]
+             / max(scen[f"dense_{w}"]["peak_concurrency"], 1)
+             for w in workloads}
+    for s in scen.values():
+        s.pop("outputs")
+    return {
+        "config": {"arch": cfg.name, "max_len": max_len, "block": block,
+                   "kv_budget_positions": n_blocks * block,
+                   "n_slots_dense": n_slots_dense, "n_blocks": n_blocks,
+                   "requests": n_req, "max_new": max_new},
+        "scenarios": scen,
+        "concurrency_gain": gains,
+    }
+
+
+def _analytic_rows(full: bool = False) -> List[str]:
     rows: List[str] = []
     sparsity = 0.8
     bytes_ratio_sparse = 4 * (1 - sparsity) * 1.05 / 2  # words/dense-bf16
@@ -149,5 +261,69 @@ def run(full: bool = False) -> List[str]:
                 f"chips={chips_s};tok_per_chip_s={tps_s:.0f};"
                 f"mem_gb={(w_sparse + cache + act) / 1e9:.1f};"
                 f"speedup_per_chip={tps_s / tps_d:.2f}")
-    rows.extend(_scheduler_rows(full))
     return rows
+
+
+def run(full: bool = False) -> List[str]:
+    rows = _analytic_rows(full)
+    rows.extend(_scheduler_rows(full))
+    paged = _paged_scenarios(full)
+    for name, s in paged["scenarios"].items():
+        extra = (f";hit_rate={s['prefix_hit_rate']:.2f}"
+                 f";block_util={s['block_utilization']:.2f}"
+                 f";preempt={s['preemptions']}"
+                 if "block_utilization" in s else "")
+        rows.append(
+            f"e2e_sched_{name},{s['steps']},"
+            f"tok_per_s={s['tok_per_s']:.1f};"
+            f"peak_concurrency={s['peak_concurrency']}" + extra)
+    for w, g in paged["concurrency_gain"].items():
+        rows.append(f"paged_concurrency_gain_{w},0,x{g:.2f}_at_fixed_kv_budget")
+    plan = _planner_report()
+    rows.append(
+        f"budget_planner_{plan['arch']},0,"
+        f"dense_blocks={plan['plans']['dense']['n_blocks']};"
+        f"sparse_pallas_blocks={plan['plans']['sparse_pallas']['n_blocks']};"
+        f"ratio={plan['blocks_ratio']:.1f}")
+    return rows
+
+
+def report(full: bool = False) -> Dict[str, Any]:
+    """Structured report: analytic rows + budget planner + measured
+    dense-vs-paged scenarios (the committed BENCH_e2e.json)."""
+    return {
+        "bench": "e2e_throughput",
+        "full": full,
+        "analytic_csv": _analytic_rows(full),
+        "planner": _planner_report(),
+        "measured": _paged_scenarios(full),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the structured report (BENCH_e2e.json)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.json:
+        rep = report(args.full)
+        with open(args.json, "w") as f:
+            json.dump(rep, f, indent=1, sort_keys=True)
+        meas = rep["measured"]
+        gains = meas["concurrency_gain"]
+        print(f"wrote {args.json}: concurrency gain "
+              + ", ".join(f"{w}=x{g:.2f}" for w, g in gains.items())
+              + f"; planner blocks ratio "
+                f"x{rep['planner']['blocks_ratio']:.1f}")
+        if gains["shared_prefix"] < 2.0:
+            raise SystemExit(
+                f"shared-prefix concurrency gain {gains['shared_prefix']:.2f}"
+                " < 2.0 at fixed KV budget (acceptance regression)")
+    else:
+        for row in run(args.full):
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -30,6 +30,10 @@ ap.add_argument("--slots", type=int, default=3)
 ap.add_argument("--max-len", type=int, default=48)
 ap.add_argument("--eos", type=int, default=None,
                 help="token id that terminates generation early")
+ap.add_argument("--paged", action="store_true",
+                help="paged block-pool KV cache with prefix sharing")
+ap.add_argument("--block-size", type=int, default=8)
+ap.add_argument("--n-blocks", type=int, default=None)
 args = ap.parse_args()
 
 cfg = configs.smoke(args.arch)
@@ -37,8 +41,10 @@ if cfg.n_codebooks:
     raise SystemExit("audio archs need codebook prompts; use the engine API")
 params = transformer.init_model(jax.random.PRNGKey(0), cfg)
 
-b = batching.ContinuousBatcher(params, cfg, n_slots=args.slots,
-                               max_len=args.max_len, eos_id=args.eos)
+b = batching.ContinuousBatcher(
+    params, cfg, n_slots=args.slots, max_len=args.max_len, eos_id=args.eos,
+    cache_kind="paged" if args.paged else "dense",
+    block_size=args.block_size, n_blocks=args.n_blocks)
 rng = np.random.default_rng(0)
 lo = min(3, args.max_len - 1)
 hi = max(lo + 1, min(args.max_len // 2, args.max_len - 1))
@@ -75,3 +81,7 @@ print(f"admission: {m.prefill_calls} prefill calls over buckets "
       f"{why}")
 print(f"time split: admit {m.admit_time_s:.2f}s (incl. compiles) / "
       f"decode {m.decode_time_s:.2f}s")
+if args.paged:
+    print(f"paged cache: {b.pool.n_blocks} blocks x {b.block_size} tok, "
+          f"prefix_hit_rate={m.prefix_hit_rate:.2f}  "
+          f"peak_active={m.peak_active_slots}  preemptions={m.preemptions}")

@@ -22,7 +22,7 @@ from repro import configs
 from repro.core import pruning, tiled_csl
 from repro.distributed import fault_tolerance as ft
 from repro.models import transformer, nn
-from repro.serving import batching
+from repro.serving import batching, budget
 
 
 def main() -> None:
@@ -38,6 +38,18 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--ckpt", default=None, help="restore params from dir")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache with prefix sharing (DESIGN.md §10)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV block positions (paged cache)")
+    ap.add_argument("--n-blocks", type=int, default=None,
+                    help="usable KV blocks; default: dense byte-equivalent "
+                         "or derived from --hbm-budget-gb")
+    ap.add_argument("--hbm-budget-gb", type=float, default=None,
+                    help="size the block pool from an HBM budget via "
+                         "serving.budget.plan (weights + workspace + KV)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -73,8 +85,26 @@ def main() -> None:
               f"-> {sp_bytes / 2 ** 20:.1f} MiB sparse "
               f"({sp_bytes / de_bytes:.2f}x)")
 
-    b = batching.ContinuousBatcher(params, cfg, n_slots=args.slots,
-                                   max_len=args.max_len)
+    n_blocks = args.n_blocks
+    if args.paged and args.hbm_budget_gb is not None and n_blocks is None:
+        # Spend the Tiled-CSL weight savings on KV blocks: the sparse mode
+        # provably affords a larger pool at equal budget (DESIGN.md §10).
+        mode = "sparse_pallas" if args.sparsity else "dense"
+        p = budget.plan(cfg, hbm_budget=int(args.hbm_budget_gb * 1e9),
+                        weight_mode=mode, sparsity=args.sparsity or 0.8,
+                        block=args.block_size)
+        n_blocks = p.n_blocks
+        print(f"budget: {args.hbm_budget_gb:.1f} GB -> weights "
+              f"{p.weight_bytes / 1e9:.2f} GB ({mode}), "
+              f"{p.n_blocks} KV blocks x {p.block} tok "
+              f"({p.kv_bytes / 1e9:.2f} GB KV; dense-slot baseline "
+              f"{p.n_dense_slots(args.max_len)} slots at max_len)")
+
+    b = batching.ContinuousBatcher(
+        params, cfg, n_slots=args.slots, max_len=args.max_len,
+        cache_kind="paged" if args.paged else "dense",
+        block_size=args.block_size, n_blocks=n_blocks,
+        temperature=args.temperature, top_k=args.top_k, seed=args.seed)
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
         plen = int(rng.integers(4, min(16, args.max_len - args.max_new)))
@@ -92,6 +122,11 @@ def main() -> None:
           f"prefill/decode={m.prefill_tokens}/{m.decode_tokens} tok "
           f"prefill_shapes={b.prefill_compiles} "
           f"admit/decode time={m.admit_time_s:.2f}/{m.decode_time_s:.2f}s")
+    if args.paged:
+        print(f"paged: prefix_hit_rate={m.prefix_hit_rate:.2f} "
+              f"peak_active={m.peak_active_slots} "
+              f"preemptions={m.preemptions} "
+              f"pool={b.pool.blocks_in_use}/{b.pool.n_blocks} in use")
     for uid in sorted(done)[:3]:
         print(f"  req {uid}: {done[uid][:8]}...")
 

@@ -98,6 +98,24 @@ def sparse_params_struct(cfg: ModelConfig, sparsity: float,
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def struct_weight_bytes(params) -> int:
+    """HBM bytes of a params struct tree: TiledCSL leaves count their
+    encoded streams (4 B/word + 4 B/nnz-counter, = `tiled_csl.nbytes_sparse`),
+    dense leaves their array bytes. Works on real trees and on
+    `params_struct` / `sparse_params_struct` ShapeDtypeStruct stand-ins —
+    the basis of `serving.budget`'s weight term."""
+    total = 0
+    leaves = jax.tree.leaves(
+        params, is_leaf=lambda x: isinstance(x, tiled_csl.TiledCSL))
+    for leaf in leaves:
+        if isinstance(leaf, tiled_csl.TiledCSL):
+            total += int(np.prod(leaf.words.shape)) * 4
+            total += int(np.prod(leaf.nnz.shape)) * 4
+        else:
+            total += int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
 def cache_struct(cfg: ModelConfig, batch: int, max_len: int):
     return jax.eval_shape(
         functools.partial(transformer.init_cache, cfg=cfg, batch=batch,

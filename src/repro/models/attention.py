@@ -50,6 +50,19 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     }
 
 
+def init_paged_cache(cfg: ModelConfig, n_physical: int, block: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Block-pool K/V: ``[n_physical, block, kv, hd]`` (DESIGN.md §10).
+
+    Requests map onto the pool through per-request block tables; physical
+    block 0 is the reserved trash block (`serving.paged_cache`)."""
+    kv, hd = cfg.n_kv, cfg.head_dim
+    return {
+        "k": jnp.zeros((n_physical, block, kv, hd), dtype),
+        "v": jnp.zeros((n_physical, block, kv, hd), dtype),
+    }
+
+
 def _project_qkv(params, x, cfg: ModelConfig, backend: str):
     h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     bs = tuple(params.get(n, {}).get("b") for n in ("wq", "wk", "wv"))
@@ -225,6 +238,56 @@ def attention(params: dict, x: jax.Array, positions: jax.Array,
     return y, new_cache
 
 
+def write_decode_token(buf: jax.Array, new: jax.Array, slot_vec: jax.Array,
+                       *, uniform: bool) -> jax.Array:
+    """Write one decode token per batch row: ``buf[b, slot_vec[b]] = new[b, 0]``.
+
+    ``buf`` is [B, T, ...]; ``new`` is [B, 1, ...]. Both the GQA K/V cache
+    and the MLA latent cache funnel their decode writes through here, so
+    the scalar-pos and per-slot-pos branches exist exactly once.
+    """
+    if uniform:
+        # Uniform position (plain serving / dry-run): dynamic_update_slice
+        # partitions cleanly under GSPMD (scatter does not).
+        start = (0, slot_vec[0]) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, new.astype(buf.dtype), start)
+    return buf.at[jnp.arange(buf.shape[0]), slot_vec].set(
+        new[:, 0].astype(buf.dtype))
+
+
+def write_decode_token_paged(pool: jax.Array, new: jax.Array,
+                             phys: jax.Array, off: jax.Array) -> jax.Array:
+    """Paged decode write: ``pool[phys[b], off[b]] = new[b, 0]``.
+
+    ``pool`` is [n_physical, block, ...]; the scheduler's copy-on-write rule
+    guarantees every (phys, off) target is private to its request, so
+    duplicate scatter indices cannot occur across live rows.
+    """
+    return pool.at[phys, off].set(new[:, 0].astype(pool.dtype))
+
+
+def _masked_decode_attend(q, ck, cv, pos_vec, slot, cfg: ModelConfig,
+                          ring_len: Optional[int]) -> jax.Array:
+    """Scores + validity mask + weighted sum for one-token decode over a
+    [B, T, KV, D] key/value sequence (contiguous cache or block-table
+    gather — paged pools may round T up to whole blocks; the extra columns
+    mask to exact softmax zeros)."""
+    T = ck.shape[1]
+    scores = _gqa_scores(q, ck, cfg)                     # [B,KV,G,1,T]
+    idx = jnp.arange(T)[None, :]                         # [1,T]
+    if ring_len is not None:
+        # ring buffer: slot i holds absolute position p with p % W == i and
+        # p in (pos-W, pos]; valid iff that p >= 0 i.e. filled.
+        age = jnp.mod(slot[:, None] - idx, ring_len)     # [B,T] distance back
+        abs_pos = pos_vec[:, None] - age
+        valid = (abs_pos >= 0) & (idx < ring_len)
+    else:
+        valid = idx <= pos_vec[:, None]                  # [B,T]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(w, cv, cfg)
+
+
 def attention_decode(params: dict, x: jax.Array, cache: dict,
                      pos: jax.Array, cfg: ModelConfig, *,
                      backend: str = "auto") -> Tuple[jax.Array, dict]:
@@ -246,33 +309,62 @@ def attention_decode(params: dict, x: jax.Array, cache: dict,
     q, k = _rope_q_k(q, k, positions_rope, cfg)
 
     W = cache["k"].shape[1]
-    slot = jnp.mod(pos_vec, W) if cfg.local_window is not None else pos_vec
-    if pos.ndim == 0:
-        # Uniform position (plain serving / dry-run): dynamic_update_slice
-        # partitions cleanly under GSPMD (scatter does not).
-        s0 = slot[0]
-        ck = jax.lax.dynamic_update_slice(
-            cache["k"], k.astype(cache["k"].dtype), (0, s0, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache["v"], v.astype(cache["v"].dtype), (0, s0, 0, 0))
-    else:
-        barange = jnp.arange(B)
-        ck = cache["k"].at[barange, slot].set(k[:, 0].astype(cache["k"].dtype))
-        cv = cache["v"].at[barange, slot].set(v[:, 0].astype(cache["v"].dtype))
+    ring = cfg.local_window is not None
+    slot = jnp.mod(pos_vec, W) if ring else pos_vec
+    ck = write_decode_token(cache["k"], k, slot, uniform=pos.ndim == 0)
+    cv = write_decode_token(cache["v"], v, slot, uniform=pos.ndim == 0)
 
-    scores = _gqa_scores(q, ck, cfg)                     # [B,KV,G,1,W]
-    idx = jnp.arange(W)[None, :]                         # [1,W]
-    if cfg.local_window is not None:
-        # ring buffer: slot i holds absolute position p with p % W == i and
-        # p in (pos-W, pos]; valid iff that p >= 0 i.e. filled.
-        age = jnp.mod(slot[:, None] - idx, W)            # [B,W] distance back
-        abs_pos = pos_vec[:, None] - age
-        valid = abs_pos >= 0
+    o = _masked_decode_attend(q, ck, cv, pos_vec, slot, cfg,
+                              W if ring else None).astype(x.dtype)
+    y = sparse_linear.linear_logical_out(params["wo"]["w"], cfg.d_model, o,
+                                         backend=backend)
+    return y, {"k": ck, "v": cv}
+
+
+def attention_decode_paged(params: dict, x: jax.Array, cache: dict,
+                           block_tables: jax.Array, pos: jax.Array,
+                           cfg: ModelConfig, *,
+                           ring_len: Optional[int] = None,
+                           backend: str = "auto") -> Tuple[jax.Array, dict]:
+    """Single-token decode against a paged block-pool cache (DESIGN.md §10).
+
+    x: [B, 1, d]; cache leaves are ``[n_physical, block, kv, hd]`` pools;
+    ``block_tables`` is [B, blocks_per_seq] int32 physical block ids (padded
+    entries point at the trash block and are masked); pos is per-slot [B].
+    Sliding-window configs pass ``ring_len`` = min(max_len, window): logical
+    positions live at ring residue ``pos % ring_len`` exactly as in the
+    dense ring cache, so blocks are overwritten cyclically and the pool
+    cost per request is capped at ``ceil(ring_len / block)`` blocks.
+    """
+    B = x.shape[0]
+    pos_vec = jnp.asarray(pos, jnp.int32)
+    if pos_vec.ndim == 0:
+        pos_vec = jnp.broadcast_to(pos_vec, (B,))
+    positions = pos_vec[:, None]
+    if cfg.mrope_sections is not None:
+        positions_rope = jnp.broadcast_to(positions[None], (3, B, 1))
     else:
-        valid = idx <= pos_vec[:, None]                  # [B,W]
-    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
-    w = jax.nn.softmax(scores, axis=-1)
-    o = _gqa_out(w, cv, cfg).astype(x.dtype)
+        positions_rope = positions
+    if cfg.local_window is not None and ring_len is None:
+        raise ValueError("sliding-window paged decode needs ring_len")
+    q, k, v = _project_qkv(params, x, cfg, backend)
+    q, k = _rope_q_k(q, k, positions_rope, cfg)
+
+    blk = cache["k"].shape[1]
+    ring = cfg.local_window is not None
+    slot = jnp.mod(pos_vec, ring_len) if ring else pos_vec
+    logical = slot // blk
+    phys = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
+    ck = write_decode_token_paged(cache["k"], k, phys, slot % blk)
+    cv = write_decode_token_paged(cache["v"], v, phys, slot % blk)
+
+    # Gather each request's K/V through its block table: [B, nblk, blk, ...]
+    # -> [B, T, ...] with T = nblk * blk (position order == gather order).
+    kv_heads, hd = ck.shape[-2], ck.shape[-1]
+    kg = jnp.take(ck, block_tables, axis=0).reshape(B, -1, kv_heads, hd)
+    vg = jnp.take(cv, block_tables, axis=0).reshape(B, -1, kv_heads, hd)
+    o = _masked_decode_attend(q, kg, vg, pos_vec, slot, cfg,
+                              ring_len if ring else None).astype(x.dtype)
     y = sparse_linear.linear_logical_out(params["wo"]["w"], cfg.d_model, o,
                                          backend=backend)
     return y, {"k": ck, "v": cv}

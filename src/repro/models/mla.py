@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sparse_linear
-from repro.models import nn, rope
+from repro.models import attention, nn, rope
 from repro.models.attention import NEG_INF
 from repro.models.config import ModelConfig
 
@@ -44,6 +44,17 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {
         "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
         "krope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def init_paged_mla_cache(cfg: ModelConfig, n_physical: int, block: int,
+                         dtype=jnp.bfloat16) -> dict:
+    """Block-pool latent cache ``[n_physical, block, kvr / dr]`` — the MLA
+    memory win compounds with paging: each block holds ``block`` latent
+    rows instead of full K/V heads (DESIGN.md §10)."""
+    return {
+        "ckv": jnp.zeros((n_physical, block, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((n_physical, block, cfg.qk_rope_dim), dtype),
     }
 
 
@@ -164,18 +175,58 @@ def mla_decode(params: dict, x: jax.Array, cache: dict, pos: jax.Array,
     pos_vec = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos
     positions = pos_vec[:, None]
     q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg, backend)
-    if pos.ndim == 0:
-        # c_kv / k_rope are [B, 1, *]: slice-update at the shared position.
-        ckv = jax.lax.dynamic_update_slice(
-            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0))
-        ckrope = jax.lax.dynamic_update_slice(
-            cache["krope"], k_rope.astype(cache["krope"].dtype), (0, pos, 0))
-    else:
-        barange = jnp.arange(B)
-        ckv = cache["ckv"].at[barange, pos_vec].set(
-            c_kv[:, 0].astype(cache["ckv"].dtype))
-        ckrope = cache["krope"].at[barange, pos_vec].set(
-            k_rope[:, 0].astype(cache["krope"].dtype))
+    # c_kv / k_rope are [B, 1, *]: one write per row at (shared or per-slot)
+    # position, through the same helper as the GQA K/V cache.
+    ckv = attention.write_decode_token(cache["ckv"], c_kv, pos_vec,
+                                       uniform=pos.ndim == 0)
+    ckrope = attention.write_decode_token(cache["krope"], k_rope, pos_vec,
+                                          uniform=pos.ndim == 0)
+    y = _absorbed_attend(params, x, q_nope, q_rope, ckv, ckrope, pos_vec,
+                         cfg, backend)
+    return y, {"ckv": ckv, "krope": ckrope}
+
+
+def mla_decode_paged(params: dict, x: jax.Array, cache: dict,
+                     block_tables: jax.Array, pos: jax.Array,
+                     cfg: ModelConfig, *, backend: str = "auto"
+                     ) -> Tuple[jax.Array, dict]:
+    """Absorbed-form MLA decode against a paged latent block pool.
+
+    cache leaves are ``[n_physical, block, kvr / dr]``; ``block_tables`` is
+    [B, blocks_per_seq] int32; pos is per-slot [B]. Same gather/mask
+    discipline as `attention.attention_decode_paged` (MLA has no
+    sliding-window configs, so positions map linearly onto blocks).
+    """
+    B = x.shape[0]
+    pos_vec = jnp.asarray(pos, jnp.int32)
+    if pos_vec.ndim == 0:
+        pos_vec = jnp.broadcast_to(pos_vec, (B,))
+    positions = pos_vec[:, None]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg, backend)
+
+    blk = cache["ckv"].shape[1]
+    logical = pos_vec // blk
+    phys = jnp.take_along_axis(block_tables, logical[:, None], axis=1)[:, 0]
+    ckv = attention.write_decode_token_paged(cache["ckv"], c_kv, phys,
+                                             pos_vec % blk)
+    ckrope = attention.write_decode_token_paged(cache["krope"], k_rope, phys,
+                                                pos_vec % blk)
+    ckv_seq = jnp.take(ckv, block_tables, axis=0).reshape(
+        B, -1, cfg.kv_lora_rank)
+    krope_seq = jnp.take(ckrope, block_tables, axis=0).reshape(
+        B, -1, cfg.qk_rope_dim)
+    y = _absorbed_attend(params, x, q_nope, q_rope, ckv_seq, krope_seq,
+                         pos_vec, cfg, backend)
+    return y, {"ckv": ckv, "krope": ckrope}
+
+
+def _absorbed_attend(params: dict, x: jax.Array, q_nope, q_rope, ckv,
+                     ckrope, pos_vec, cfg: ModelConfig, backend: str
+                     ) -> jax.Array:
+    """Absorbed-form attention over a [B, T, *] latent sequence (contiguous
+    cache or block-table gather; padded gather columns mask to exact
+    softmax zeros) followed by the W_UV / W_O output path."""
+    B = x.shape[0]
     T = ckv.shape[1]
     h, dn, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
     kvr = cfg.kv_lora_rank
@@ -219,6 +270,5 @@ def mla_decode(params: dict, x: jax.Array, cache: dict, pos: jax.Array,
                              ckv)                            # [B,1,h,kvr]
     o = jnp.einsum("bshr,hdr->bshd", o_lat, w_uv)            # [B,1,h,dv]
     o = o.reshape(B, 1, h * dv).astype(x.dtype)
-    y = sparse_linear.linear_logical_out(params["wo"]["w"], cfg.d_model, o,
-                                         backend=backend)
-    return y, {"ckv": ckv, "krope": ckrope}
+    return sparse_linear.linear_logical_out(params["wo"]["w"], cfg.d_model, o,
+                                            backend=backend)

@@ -90,9 +90,14 @@ def _mlp_apply(p: Params, x: jax.Array, cfg: ModelConfig, backend: str):
 
 def block_apply(p: Params, x: jax.Array, kind: str, cfg: ModelConfig, *,
                 mode: str, positions=None, cache=None, pos=None,
-                backend: str = "auto"
+                block_tables=None, ring_len=None, backend: str = "auto"
                 ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
-    """Residual block. Returns (x, new_cache, aux_loss)."""
+    """Residual block. Returns (x, new_cache, aux_loss).
+
+    ``block_tables`` (decode only) switches the attention cache access to
+    the paged block-pool path (DESIGN.md §10): cache leaves are pools,
+    tables map each request's logical blocks to physical ones.
+    """
     aux = jnp.zeros((), jnp.float32)
     # Pin the activation layout at every block boundary: without this GSPMD
     # propagates weight shardings into the residual stream and replicates
@@ -102,14 +107,22 @@ def block_apply(p: Params, x: jax.Array, kind: str, cfg: ModelConfig, *,
     h = _norm(cfg, p["pre_norm"], x)
     if kind == "attn":
         if cfg.attn_kind == "mla":
-            if mode == "decode":
+            if mode == "decode" and block_tables is not None:
+                a, new_cache = mla.mla_decode_paged(
+                    p["attn"], h, cache, block_tables, pos, cfg,
+                    backend=backend)
+            elif mode == "decode":
                 a, new_cache = mla.mla_decode(p["attn"], h, cache, pos, cfg,
                                               backend=backend)
             else:
                 a, new_cache = mla.mla_attention(
                     p["attn"], h, positions, cfg, cache=cache, backend=backend)
         else:
-            if mode == "decode":
+            if mode == "decode" and block_tables is not None:
+                a, new_cache = attention.attention_decode_paged(
+                    p["attn"], h, cache, block_tables, pos, cfg,
+                    ring_len=ring_len, backend=backend)
+            elif mode == "decode":
                 a, new_cache = attention.attention_decode(
                     p["attn"], h, cache, pos, cfg, backend=backend)
             else:
@@ -189,6 +202,83 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return caches
 
 
+def init_paged_cache(cfg: ModelConfig, n_physical: int, block: int,
+                     dtype=jnp.bfloat16) -> Any:
+    """Block-pool serving cache: every leaf is ``[n_physical, block, ...]``
+    ([L, n_physical, block, ...] scan-stacked). ``n_physical`` includes the
+    reserved trash block 0 (`serving.paged_cache.BlockPool.physical_blocks`).
+
+    Paging applies to position-indexed caches only: recurrent state
+    (ssm/rglru) has no per-token axis to page, so those stacks keep the
+    dense per-slot cache.
+    """
+    kinds = {cfg.layer_kind(i) for i in range(cfg.n_layers)}
+    if kinds != {"attn"}:
+        raise ValueError(
+            f"paged KV cache requires a pure-attention stack, got {kinds}")
+    mk = (mla.init_paged_mla_cache if cfg.attn_kind == "mla"
+          else attention.init_paged_cache)
+    caches = [mk(cfg, n_physical, block, dtype) for _ in range(cfg.n_layers)]
+    if _use_scan(cfg):
+        return nn.stack_layers(caches)
+    return caches
+
+
+def paged_blocks_per_seq(cfg: ModelConfig, max_len: int, block: int) -> int:
+    """Static per-request block-table width: positions a request can hold
+    (the sliding window caps it — the ring reuses its blocks cyclically)."""
+    positions = max_len
+    if cfg.local_window is not None:
+        positions = min(max_len, cfg.local_window)
+    return -(-positions // block)
+
+
+def scatter_cache_pages(cfg: ModelConfig, full: Any, part: Any,
+                        flat_blocks: jax.Array) -> Any:
+    """Write a ``k``-request scratch cache into pool blocks of the paged
+    serving cache — the paged twin of `scatter_cache_slots`.
+
+    ``part`` leaves are [k, S, ...]; each is padded up to whole blocks,
+    chunked to [k*nblk, block, ...], and scattered to physical rows
+    ``flat_blocks [k*nblk]``. Entries may repeat only where the written
+    data is identical (admission group padding, recomputed shared-prefix
+    content) or where they name the trash block (bucket padding past a
+    prompt's own blocks) — trash contents are junk and never read unmasked.
+    """
+    axis = cache_slot_axis(cfg)
+
+    def leaf(f, p):
+        block = f.shape[axis + 1]
+        lead = p.shape[:axis]                    # scan layer axis, if any
+        k, S = p.shape[axis], p.shape[axis + 1]
+        trail = p.shape[axis + 2:]
+        nblk = -(-S // block)
+        if nblk * block != S:
+            pad = [(0, 0)] * p.ndim
+            pad[axis + 1] = (0, nblk * block - S)
+            p = jnp.pad(p, pad)
+        p = p.reshape(lead + (k * nblk, block) + trail)
+        if flat_blocks.shape[0] != k * nblk:
+            raise ValueError(
+                f"block map covers {flat_blocks.shape[0]} chunks, scratch "
+                f"leaf has {k}x{nblk}")
+        idx = (slice(None),) * axis + (flat_blocks,)
+        return f.at[idx].set(p.astype(f.dtype))
+
+    return jax.tree.map(leaf, full, part)
+
+
+def copy_cache_block(cfg: ModelConfig, cache: Any, src: int, dst: int) -> Any:
+    """Copy one physical pool block in every cache leaf (copy-on-write)."""
+    axis = cache_slot_axis(cfg)
+
+    def leaf(f):
+        idx = (slice(None),) * axis
+        return f.at[idx + (dst,)].set(f[idx + (src,)])
+
+    return jax.tree.map(leaf, cache)
+
+
 def cache_slot_axis(cfg: ModelConfig) -> int:
     """Axis of the batch (decode-slot) dim in every cache leaf.
 
@@ -245,13 +335,19 @@ def _embed_tokens(params: Params, inputs: Dict[str, jax.Array],
 
 def forward(params: Params, inputs: Dict[str, jax.Array], cfg: ModelConfig, *,
             mode: str = "train", cache: Any = None,
-            pos: Optional[jax.Array] = None, backend: str = "auto"
+            pos: Optional[jax.Array] = None,
+            block_tables: Optional[jax.Array] = None,
+            ring_len: Optional[int] = None, backend: str = "auto"
             ) -> Tuple[jax.Array, Any, jax.Array]:
     """Run the stack. Returns (logits, new_cache, aux_loss).
 
     inputs: {"tokens": [B,S] (or [B,ncb,S])} or {"embeds": [B,S,d]},
             optional "positions": [B,S] ([3,B,S] for M-RoPE).
     decode mode: S == 1 and ``pos`` is the scalar absolute position.
+    paged decode: ``cache`` is a block pool (`init_paged_cache`) and
+            ``block_tables [B, blocks_per_seq]`` maps logical to physical
+            blocks; the tables are layer-invariant (one table per request,
+            shared by every layer's pool).
     """
     compute_dtype = jnp.dtype(cfg.dtype)
     x = _embed_tokens(params, inputs, cfg, compute_dtype)
@@ -265,7 +361,9 @@ def forward(params: Params, inputs: Dict[str, jax.Array], cfg: ModelConfig, *,
             positions = jnp.broadcast_to(positions[None], (3, B, S))
 
     block = functools.partial(block_apply, cfg=cfg, mode=mode,
-                              positions=positions, pos=pos, backend=backend)
+                              positions=positions, pos=pos,
+                              block_tables=block_tables, ring_len=ring_len,
+                              backend=backend)
     if cfg.remat != "none" and mode == "train":
         policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
                   if cfg.remat == "dots" else

@@ -30,6 +30,26 @@ the slot's cache region is exhausted (``max_len`` truncation).
 ``SchedulerMetrics`` counts what the loop did (occupancy, queue wait,
 prefill vs decode tokens, padding overhead, compile count) — surfaced by
 ``benchmarks/e2e_throughput.py`` and ``examples/serve_batched.py``.
+
+Cache kinds (DESIGN.md §7 vs §10):
+
+* ``cache_kind="dense"`` — the original shared ``[n_slots, max_len]``
+  cache; a slot pre-reserves ``max_len`` positions whether used or not.
+* ``cache_kind="paged"`` — the paged block-pool cache: requests hold only
+  the KV blocks they have filled (`serving.paged_cache.BlockPool`), full
+  prompt blocks are prefix-shared by content chain-hash, and admission is
+  gated on *block availability* (prompt blocks + a reservation margin)
+  instead of free-slot counting. On pool exhaustion mid-decode the
+  youngest request is preempted and re-queued head-of-line (recompute
+  resume: its prompt+generated tokens re-prefill on re-admission, which
+  regenerates an identical stream for greedy and for the per-slot folded
+  sampling keys alike) — the loop never deadlocks. ``n_slots`` remains
+  the decode batch width; memory admission is the block pool, sized by
+  `serving.budget.plan` from the Tiled-CSL weight savings.
+
+Sampling matches `engine.generate` semantics (temperature / top-k via
+`engine.sample`): each slot draws with a key folded by (request uid, token
+index), so streams are independent of admission order and preemption.
 """
 
 from __future__ import annotations
@@ -45,7 +65,7 @@ import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
-from repro.serving import engine
+from repro.serving import engine, paged_cache
 
 
 @dataclasses.dataclass
@@ -80,6 +100,18 @@ class SchedulerMetrics:
     admit_time_s: float = 0.0
     decode_time_s: float = 0.0
     bucket_admits: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # paged-cache counters (all zero under cache_kind="dense")
+    prefix_hit_tokens: int = 0       # prompt tokens served by shared blocks
+    preemptions: int = 0             # pool-exhaustion preempt-and-requeue
+    cow_copies: int = 0              # copy-on-write block copies
+    blocks_in_use: int = 0           # gauge: pool blocks held right now
+    peak_blocks_in_use: int = 0      # high-water mark of the pool
+    peak_active_slots: int = 0       # max concurrently-decoding requests
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefilled prompt tokens backed by shared blocks."""
+        return self.prefix_hit_tokens / max(self.prefill_tokens, 1)
 
     @property
     def occupancy(self) -> float:
@@ -104,6 +136,7 @@ class SchedulerMetrics:
         d["occupancy"] = self.occupancy
         d["prefill_padding_overhead"] = self.prefill_padding_overhead
         d["mean_queue_wait_steps"] = self.mean_queue_wait_steps
+        d["prefix_hit_rate"] = self.prefix_hit_rate
         return d
 
 
@@ -115,6 +148,16 @@ class ContinuousBatcher:
     admission batch — up to that many same-bucket requests prefill in one
     call. ``min_bucket`` floors the bucket ladder so tiny prompts share one
     compile.
+
+    ``cache_kind="paged"`` swaps the dense per-slot cache for the block
+    pool (module docstring): ``block_size`` positions per block,
+    ``n_blocks`` usable blocks (default: the dense cache's exact byte
+    equivalent, n_slots * blocks_per_seq — pass the `budget.plan` output to
+    spend a real HBM budget), ``reserve_blocks`` held back at admission as
+    the decode-growth margin, ``prefix_sharing`` dedupes full prompt blocks
+    by content (disabled for sliding-window rings, whose blocks are
+    overwritten cyclically). ``temperature`` / ``top_k`` / ``seed`` select
+    per-slot sampling (0.0 = exact greedy, the default).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
@@ -122,15 +165,25 @@ class ContinuousBatcher:
                  eos_id: Optional[int] = None,
                  stop_ids: Sequence[int] = (),
                  admit_k: Optional[int] = None, min_bucket: int = 8,
-                 request_history: int = 1024):
+                 request_history: int = 1024,
+                 cache_kind: str = "dense", block_size: int = 16,
+                 n_blocks: Optional[int] = None, reserve_blocks: int = 1,
+                 prefix_sharing: bool = True,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
         if cfg.n_codebooks:
             raise ValueError("codebook (audio) archs need [n_cb, S] prompts; "
                              "drive engine.generate directly")
+        if cache_kind not in ("dense", "paged"):
+            raise ValueError(f"cache_kind must be dense|paged, {cache_kind!r}")
         self.params = params
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
         self.backend = backend
+        self.paged = cache_kind == "paged"
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._base_key = jax.random.PRNGKey(seed)
         self.stop_ids = frozenset(
             ([] if eos_id is None else [int(eos_id)])
             + [int(t) for t in stop_ids])
@@ -157,27 +210,68 @@ class ContinuousBatcher:
         self._request_history = request_history
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.pos = np.zeros(n_slots, np.int32)      # per-slot next position
-        self.cache = transformer.init_cache(cfg, n_slots, max_len)
         self.last_token = np.zeros(n_slots, np.int64)
         self.metrics = SchedulerMetrics()
-        self._prefill = jax.jit(
-            lambda p, c, t, s, l: engine.prefill_into_slots(
-                p, c, t, s, l, self.cfg, backend=self.backend))
+        # Ring length for sliding-window configs (positions live at
+        # ``pos % ring_len``; None for ordinary causal stacks).
+        self.ring_len = (min(max_len, cfg.local_window)
+                         if cfg.local_window is not None else None)
+        if self.paged:
+            self.block_size = block_size
+            self.max_blocks = transformer.paged_blocks_per_seq(
+                cfg, max_len, block_size)
+            if n_blocks is None:
+                n_blocks = n_slots * self.max_blocks   # dense byte-equivalent
+            self.reserve_blocks = max(0, reserve_blocks)
+            # Ring blocks are overwritten cyclically — content is not a pure
+            # function of the token prefix, so sharing is causal-only.
+            self.pool = paged_cache.BlockPool(
+                n_blocks, block_size,
+                prefix_sharing=prefix_sharing and self.ring_len is None)
+            self.tables: List[Optional[paged_cache.BlockTable]] = \
+                [None] * n_slots
+            self._table_arr = np.full((n_slots, self.max_blocks),
+                                      paged_cache.TRASH_BLOCK, np.int32)
+            self.cache = transformer.init_paged_cache(
+                cfg, self.pool.physical_blocks, block_size)
+            self._prefill = jax.jit(
+                lambda p, c, t, bm, l: engine.prefill_into_pages(
+                    p, c, t, bm, l, self.cfg, backend=self.backend))
+        else:
+            self.cache = transformer.init_cache(cfg, n_slots, max_len)
+            self._prefill = jax.jit(
+                lambda p, c, t, s, l: engine.prefill_into_slots(
+                    p, c, t, s, l, self.cfg, backend=self.backend))
         self._decode = jax.jit(
-            lambda p, c, t, pos: self._decode_step(p, c, t, pos))
+            lambda p, c, t, pos, tab, u, n: self._decode_step(
+                p, c, t, pos, tab, u, n))
 
     # -- jitted per-slot-position decode: positions differ per slot --------
-    def _decode_step(self, params, cache, token, pos_vec):
+    def _decode_step(self, params, cache, token, pos_vec, tables, uids,
+                     counts):
         """token: [B,1]; pos_vec: [B] — per-slot absolute positions.
 
         The decode path accepts a position *vector*: each slot's K/V is
         written at its own cache index and masked by its own causal bound,
         so one batched step serves slots at heterogeneous progress.
+        ``tables`` routes the paged block-pool path; ``uids``/``counts``
+        fold the per-slot sampling keys (unused — and dead-code-eliminated
+        — for greedy decoding).
         """
         logits, cache, _ = transformer.forward(
             params, {"tokens": token}, self.cfg, mode="decode",
-            cache=cache, pos=pos_vec, backend=self.backend)
-        return logits[:, -1], cache
+            cache=cache, pos=pos_vec, block_tables=tables,
+            ring_len=self.ring_len if tables is not None else None,
+            backend=self.backend)
+        logits = logits[:, -1]
+        if self.temperature == 0.0:
+            tok = jnp.argmax(logits, axis=-1)
+        else:
+            keys = engine.fold_slot_keys(self._base_key, uids, counts)
+            tok = engine.sample_per_slot(logits, keys,
+                                         temperature=self.temperature,
+                                         top_k=self.top_k)
+        return tok, cache
 
     # -- public API ---------------------------------------------------------
     @property
@@ -197,6 +291,26 @@ class ContinuousBatcher:
             raise ValueError(f"prompt length {prompt.size} needs "
                              f">= {prompt.size + 1} cache positions; "
                              f"max_len is {self.max_len}")
+        if not 0 <= uid < 2 ** 32:
+            # per-slot sampling keys fold the uid as uint32 data
+            raise ValueError(f"request uid must fit uint32, got {uid}")
+        if self.paged:
+            # Reject requests the pool can never run to completion: decode
+            # growth reaches blocks_for(prompt + generated K/V positions,
+            # max_len/ring-capped); admitting one and crashing mid-decode
+            # would take down every other in-flight request. This bound
+            # also dominates every (re-)admission's _admit_positions need.
+            n_pos = min(prompt.size + max(max_new_tokens - 1, 0),
+                        self.max_len)
+            if self.ring_len is not None:
+                n_pos = min(n_pos, self.ring_len)
+            need = self.pool.blocks_for(n_pos)
+            if need > self.pool.n_blocks:
+                raise ValueError(
+                    f"request needs up to {need} KV blocks "
+                    f"({n_pos} positions at block_size={self.block_size}) "
+                    f"but the pool has only {self.pool.n_blocks}; raise "
+                    f"n_blocks (budget) or lower max_new_tokens")
         cur = self.requests.get(uid)
         if cur is not None and not cur.done:
             raise ValueError(f"request uid {uid} is still queued or active")
@@ -206,19 +320,48 @@ class ContinuousBatcher:
         self._by_bucket.setdefault(self._bucket(req), deque()).append(req)
         self.requests[uid] = req
 
+    def _full_tokens(self, req: Request) -> np.ndarray:
+        """Tokens a (re-)prefill must process: the prompt plus, for a
+        preempted request, everything it had already generated — greedy
+        re-prefill of that concatenation regenerates the identical next
+        token (recompute-style resume)."""
+        if not req.generated:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(req.generated, req.prompt.dtype)])
+
     def _bucket(self, req: Request) -> int:
+        n = len(req.prompt) + len(req.generated)
         if self.buckets is None:
-            return len(req.prompt)
-        return engine.bucket_for(len(req.prompt), self.buckets)
+            return n
+        return engine.bucket_for(n, self.buckets)
+
+    def _admit_positions(self, req: Request) -> int:
+        """Cache positions ``req``'s (re-)admission must cover: its resume
+        tokens plus one decode-headroom position — charged only if the
+        request will actually decode after the admission's own token (a
+        resume holding max_new - 1 tokens finishes at admission without a
+        decode write) — capped at the cache capacity (a resume holding
+        exactly ``max_len`` tokens finishes as max_len truncation) and at
+        the ring. The worst case over a request's lifetime equals the
+        ``submit``-time completability bound."""
+        n_tokens = len(req.prompt) + len(req.generated)
+        will_decode = len(req.generated) + 1 < req.max_new_tokens
+        n_pos = min(n_tokens + (1 if will_decode else 0), self.max_len)
+        if self.ring_len is not None:
+            n_pos = min(n_pos, self.ring_len)
+        return n_pos
+
+    def _blocks_needed(self, req: Request) -> int:
+        """Worst-case (no sharing) pool blocks to admit ``req``."""
+        return self.pool.blocks_for(self._admit_positions(req))
 
     def _finish(self, req: Request, slot: int, reason: str,
                 finished: Dict[int, List[int]]):
         req.done = True
         req.finish_reason = reason
         finished[req.uid] = req.generated
-        self.slots[slot] = None
-        self.pos[slot] = 0
-        self.last_token[slot] = 0
+        self._release_slot(slot)
         self.metrics.completed += 1
         if reason == "stop":
             self.metrics.eos_terminated += 1
@@ -230,6 +373,66 @@ class ContinuousBatcher:
             cur = self.requests.get(old)
             if cur is not None and cur.done:   # uid may have been resubmitted
                 del self.requests[old]
+
+    def _release_slot(self, slot: int) -> None:
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.last_token[slot] = 0
+        if self.paged and self.tables[slot] is not None:
+            self.pool.free_table(self.tables[slot])
+            self.tables[slot] = None
+            self._table_arr[slot] = paged_cache.TRASH_BLOCK
+
+    def _preempt_youngest(self, exclude: int) -> None:
+        """Pool exhausted mid-decode: evict the youngest request (least
+        work lost) back to the head of the queue. Its blocks free
+        immediately; it resumes later by re-prefilling prompt+generated."""
+        cand = [s for s, r in enumerate(self.slots)
+                if r is not None and s != exclude]
+        if not cand:
+            raise RuntimeError(
+                f"KV block pool ({self.pool.n_blocks} x {self.block_size}) "
+                f"cannot hold a single request at max_len={self.max_len}; "
+                f"raise n_blocks (budget) or lower max_len")
+        s = max(cand, key=lambda i: (self.slots[i].admit_step, i))
+        req = self.slots[s]
+        self._release_slot(s)
+        req.pending = True
+        req.admit_step = -1
+        # Queue-wait restarts at the requeue: the steps it spent actively
+        # decoding before the preemption are not queue time.
+        req.submit_step = self.metrics.steps
+        self.queue.appendleft(req)
+        self._by_bucket.setdefault(self._bucket(req),
+                                   deque()).appendleft(req)
+        self.metrics.preemptions += 1
+
+    def _prepare_paged_decode(self) -> None:
+        """Before a decode step: make every active slot's next write target
+        exist and be private. Growth allocates the next block when the
+        position crosses a block boundary (preempting on exhaustion);
+        copy-on-write copies a shared block before it is written (only
+        reachable via forked tables — prompt sharing never covers the
+        write frontier)."""
+        for s in range(self.n_slots):
+            req = self.slots[s]
+            if req is None:
+                continue
+            p = int(self.pos[s])
+            slot = p % self.ring_len if self.ring_len is not None else p
+            logical = slot // self.block_size
+            while True:
+                try:
+                    self.pool.ensure_capacity(self.tables[s], logical)
+                    break
+                except paged_cache.PoolExhausted:
+                    self._preempt_youngest(exclude=s)
+            cow = self.pool.ensure_writable(self.tables[s], logical)
+            if cow is not None:
+                self.cache = transformer.copy_cache_block(
+                    self.cfg, self.cache, *cow)
+                self.metrics.cow_copies += 1
+            self._table_arr[s] = self.tables[s].padded(self.max_blocks)
 
     def _check_done(self, req: Request, slot: int, tok: int,
                     finished: Dict[int, List[int]]) -> None:
@@ -251,11 +454,32 @@ class ContinuousBatcher:
     def _take_group(self, limit: int) -> List[Request]:
         """Pop up to ``limit`` same-bucket requests, FIFO: the group takes
         the head-of-line request's bucket (via the per-bucket index, O(group));
-        non-matching requests keep their relative order."""
+        non-matching requests keep their relative order.
+
+        Paged admission additionally gates on block availability: a request
+        joins the group only while its worst-case (unshared) block need
+        plus the reservation margin fits the pool — prefix sharing can only
+        reduce the actual allocation, so an admitted group never fails.
+        An empty group means "pool full, wait for completions to free
+        blocks" (head-of-line blocking is deliberate: FIFO fairness).
+        """
         head_bucket = self._bucket(self.queue[0])
         bq = self._by_bucket[head_bucket]
         group: List[Request] = []
+        budget = None
+        if self.paged:
+            budget = self.pool.available - self.reserve_blocks
+            if all(r is None for r in self.slots):
+                # The reserve is decode-growth headroom for *other* active
+                # requests; with nothing in flight it would only wedge a
+                # pool-filling request out of an otherwise idle server.
+                budget = self.pool.available
         while bq and len(group) < limit:
+            if budget is not None:
+                need = self._blocks_needed(bq[0])
+                if need > budget:
+                    break
+                budget -= need
             req = bq.popleft()
             req.pending = False
             group.append(req)
@@ -263,6 +487,24 @@ class ContinuousBatcher:
             del self._by_bucket[head_bucket]
         self._purge_admitted()
         return group
+
+    def _sample_admitted(self, logits, group: List[Request]) -> np.ndarray:
+        """First token of each admitted request, via the same per-slot key
+        folding as decode ((uid, token index) -> key), so a preempted
+        request's re-prefill redraws its identical next token."""
+        if self.temperature == 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        k = logits.shape[0]
+        uids = np.empty(k, np.uint32)
+        counts = np.empty(k, np.uint32)
+        for i in range(k):
+            req = group[min(i, len(group) - 1)]
+            uids[i] = req.uid
+            counts[i] = len(req.generated)
+        keys = engine.fold_slot_keys(self._base_key, jnp.asarray(uids),
+                                     jnp.asarray(counts))
+        return np.asarray(engine.sample_per_slot(
+            logits, keys, temperature=self.temperature, top_k=self.top_k))
 
     def _admit(self, finished: Dict[int, List[int]]):
         m = self.metrics
@@ -272,6 +514,19 @@ class ContinuousBatcher:
             if not free:
                 return
             group = self._take_group(min(len(free), self.admit_k))
+            if not group:
+                # Block pool full: wait for completions to free blocks. If
+                # nothing is in flight and the pool is already fully free,
+                # waiting can never help — surface the sizing error.
+                if (all(r is None for r in self.slots)
+                        and self.pool.blocks_in_use == 0):
+                    need = self._blocks_needed(self.queue[0])
+                    raise RuntimeError(
+                        f"request uid {self.queue[0].uid} needs {need} KV "
+                        f"blocks + {self.reserve_blocks} reserve but the "
+                        f"pool has only {self.pool.n_blocks}; raise "
+                        f"n_blocks (budget) or block_size")
+                return
             bucket = self._bucket(group[0])
             k = self.admit_k
             # Static [k, bucket] batch: right-pad prompts to the bucket,
@@ -279,32 +534,69 @@ class ContinuousBatcher:
             # slot + same data -> the duplicate scatter writes are
             # identical, hence exact; works for recurrent state too since
             # no pad *tokens* are introduced).
+            full = [self._full_tokens(r) for r in group]
             tokens = np.zeros((k, bucket), np.int64)
-            slots_arr = np.empty(k, np.int32)
             lens = np.empty(k, np.int32)
             for i in range(k):
-                req = group[min(i, len(group) - 1)]
-                tokens[i, :len(req.prompt)] = req.prompt
-                slots_arr[i] = free[min(i, len(group) - 1)]
-                lens[i] = len(req.prompt)
-            logits, self.cache = self._prefill(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(slots_arr), jnp.asarray(lens))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                ft = full[min(i, len(group) - 1)]
+                tokens[i, :len(ft)] = ft
+                lens[i] = len(ft)
+            if self.paged:
+                logits = self._admit_prefill_paged(group, full, tokens, lens,
+                                                   free, bucket)
+            else:
+                slots_arr = np.empty(k, np.int32)
+                for i in range(k):
+                    slots_arr[i] = free[min(i, len(group) - 1)]
+                logits, self.cache = self._prefill(
+                    self.params, self.cache, jnp.asarray(tokens),
+                    jnp.asarray(slots_arr), jnp.asarray(lens))
+            nxt = self._sample_admitted(logits, group)
             m.prefill_calls += 1
             m.padded_prefill_tokens += k * bucket
             m.bucket_admits[bucket] = m.bucket_admits.get(bucket, 0) + 1
             for i, req in enumerate(group):
                 s = free[i]
                 self.slots[s] = req
-                self.pos[s] = len(req.prompt)
+                self.pos[s] = len(full[i])
                 self.last_token[s] = int(nxt[i])
                 req.generated.append(int(nxt[i]))
                 req.admit_step = m.steps
                 m.admitted += 1
-                m.prefill_tokens += len(req.prompt)
+                m.prefill_tokens += len(full[i])
                 m.queue_wait_steps += m.steps - req.submit_step
                 self._check_done(req, s, int(nxt[i]), finished)
+
+    def _admit_prefill_paged(self, group: List[Request],
+                             full: List[np.ndarray], tokens: np.ndarray,
+                             lens: np.ndarray, free: List[int],
+                             bucket: int):
+        """Allocate block tables (sharing full prompt blocks by chain hash)
+        and prefill through the page scatter. The scratch cache covers
+        ``scr_len`` positions (the bucket, ring-capped); chunks past a
+        request's own blocks write to the trash block."""
+        m = self.metrics
+        k = tokens.shape[0]
+        scr_len = bucket if self.ring_len is None else min(bucket,
+                                                           self.ring_len)
+        nblk_scr = -(-scr_len // self.block_size)
+        block_map = np.full((k, nblk_scr), paged_cache.TRASH_BLOCK, np.int32)
+        for i, (req, ft) in enumerate(zip(group, full)):
+            # _take_group's worst-case gate guarantees this cannot raise.
+            table, hits = self.pool.map_prompt(
+                ft, self._admit_positions(req))
+            m.prefix_hit_tokens += hits
+            s = free[i]
+            self.tables[s] = table
+            self._table_arr[s] = table.padded(self.max_blocks)
+            n = min(len(table.blocks), nblk_scr)
+            block_map[i, :n] = table.blocks[:n]
+        for i in range(len(group), k):     # group padding duplicates a row
+            block_map[i] = block_map[len(group) - 1]
+        logits, self.cache = self._prefill(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(block_map), jnp.asarray(lens))
+        return logits
 
     def step(self) -> Dict[int, List[int]]:
         """Admit + decode one token for all active slots. Returns finished."""
@@ -313,18 +605,34 @@ class ContinuousBatcher:
         t0 = time.monotonic()
         self._admit(finished)
         m.admit_time_s += time.monotonic() - t0
+        if self.paged:
+            # Growth / copy-on-write / preemption happen before the step,
+            # so the jitted decode sees fully-valid tables.
+            self._prepare_paged_decode()
+            m.blocks_in_use = self.pool.blocks_in_use
+            m.peak_blocks_in_use = max(m.peak_blocks_in_use, m.blocks_in_use)
         active = [s for s in range(self.n_slots) if self.slots[s] is not None]
         m.steps += 1
         m.slot_steps += self.n_slots
         m.active_slot_steps += len(active)
+        m.peak_active_slots = max(m.peak_active_slots, len(active))
         if not active:
             return finished
         t0 = time.monotonic()
         tokens = jnp.asarray(self.last_token[:, None])
         pos_vec = jnp.asarray(self.pos)
-        logits, self.cache = self._decode(self.params, self.cache, tokens,
-                                          pos_vec)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        uids = counts = None
+        if self.temperature != 0.0:
+            uids_np = np.zeros(self.n_slots, np.uint32)
+            counts_np = np.zeros(self.n_slots, np.uint32)
+            for s in active:
+                uids_np[s] = self.slots[s].uid
+                counts_np[s] = len(self.slots[s].generated)
+            uids, counts = jnp.asarray(uids_np), jnp.asarray(counts_np)
+        tables = jnp.asarray(self._table_arr) if self.paged else None
+        tok, self.cache = self._decode(self.params, self.cache, tokens,
+                                       pos_vec, tables, uids, counts)
+        nxt = np.asarray(tok)
         m.decode_time_s += time.monotonic() - t0
         m.decode_tokens += len(active)
         for s in active:
@@ -333,6 +641,10 @@ class ContinuousBatcher:
             self.pos[s] += 1
             self.last_token[s] = int(nxt[s])
             self._check_done(req, s, int(nxt[s]), finished)
+        if self.paged:
+            # refresh after completions freed their tables (the pre-decode
+            # sample above is the high-water mark)
+            m.blocks_in_use = self.pool.blocks_in_use
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:

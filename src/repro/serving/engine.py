@@ -102,6 +102,41 @@ def prefill_into_slots(params, cache, tokens: jax.Array, slots: jax.Array,
     return last, cache
 
 
+def prefill_into_pages(params, cache, tokens: jax.Array,
+                       block_map: jax.Array, lengths: jax.Array,
+                       cfg: ModelConfig, *, backend: str = "auto"
+                       ) -> Tuple[jax.Array, Any]:
+    """Bucketed prefill into a paged block-pool cache (DESIGN.md §10): the
+    paged twin of `prefill_into_slots`.
+
+    tokens:    [k, S] prompt ids, right-padded to the bucket length S
+    block_map: [k, nblk] int32 physical block ids receiving each prompt's
+               scratch chunks (nblk = ceil(S_c / block) where S_c is the
+               scratch cache length — S, or min(S, window) for sliding-
+               window stacks whose scratch is already ring-laid-out).
+               Chunks past a prompt's own blocks point at the trash block.
+    lengths:   [k] true prompt lengths
+
+    The prompt K/V is computed in a [k, S] scratch cache and scattered into
+    the pools chunk-by-chunk. Rows of ``block_map`` may repeat physical ids
+    only where the written data is identical: admission pads its group by
+    duplicating a real row, and shared-prefix blocks are rewritten with
+    recomputed — causally identical — content.
+    """
+    k = tokens.shape[0]
+    S = tokens.shape[-1]
+    scratch = transformer.init_cache(cfg, k, S)
+    logits, scratch, _ = transformer.forward(
+        params, {"tokens": tokens}, cfg, mode="prefill", cache=scratch,
+        backend=backend)
+    idx = (lengths.astype(jnp.int32) - 1).reshape(
+        (k,) + (1,) * (logits.ndim - 1))
+    last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+    cache = transformer.scatter_cache_pages(cfg, cache, scratch,
+                                            block_map.reshape(-1))
+    return last, cache
+
+
 def serve_step(params, cache, token: jax.Array, pos: jax.Array,
                cfg: ModelConfig, *, backend: str = "auto"
                ) -> Tuple[jax.Array, Any]:
@@ -126,6 +161,31 @@ def sample(logits: jax.Array, key, *, temperature: float = 0.0,
         vals, _ = jax.lax.top_k(logits, top_k)
         logits = jnp.where(logits < vals[..., -1:], -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1)
+
+
+def sample_per_slot(logits: jax.Array, keys: Optional[jax.Array], *,
+                    temperature: float = 0.0, top_k: int = 0) -> jax.Array:
+    """Per-slot sampling for continuous batching: logits [B, vocab], keys
+    [B, 2] uint32 (one folded PRNG key per slot, so a slot's sample stream
+    is a pure function of (seed, uid, token index) — deterministic across
+    admission order, slot assignment, and preempt/resume replay).
+
+    T == 0 is exact greedy (no keys needed), matching `sample`.
+    """
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.vmap(
+        lambda l, k: sample(l, k, temperature=temperature, top_k=top_k)
+    )(logits, keys)
+
+
+def fold_slot_keys(key, uids: jax.Array, counts: jax.Array) -> jax.Array:
+    """[B, 2] uint32 per-slot keys: base key folded by request uid then by
+    the request's token index (resume-safe: replaying token g of request u
+    re-derives the same key regardless of scheduling history)."""
+    return jax.vmap(
+        lambda u, c: jax.random.fold_in(jax.random.fold_in(key, u), c)
+    )(uids, counts)
 
 
 def generate(params, prompt: jax.Array, cfg: ModelConfig, *,
