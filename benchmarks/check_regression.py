@@ -1,0 +1,212 @@
+"""CI bench-regression gate: diff smoke bench runs against committed baselines.
+
+Every CI run produces smoke editions of the three committed benchmarks
+(`BENCH_kernel_smoke.json`, `BENCH_e2e_smoke.json`, `BENCH_spec_smoke.json`).
+Wall-clock numbers are not comparable across runners, and smoke workloads
+are smaller than the committed full runs — but the *dimensionless quality
+metrics* (schedule-selector effective speedup, concurrency gain at fixed KV
+budget, prefix-hit rate, speculative tokens-per-step speedup, accept rate)
+are deterministic properties of the code, so a drop against the committed
+baseline is a real regression, not noise. This gate:
+
+* compares each gated metric with a per-metric relative tolerance and an
+  optional absolute floor (the acceptance bounds the benches themselves
+  assert stay encoded in ONE place each — the bench; floors here mirror
+  them so the gate fails even if a bench's own assert is edited away);
+* fails the job and lists every regression;
+* prints a markdown trend table, appended to ``$GITHUB_STEP_SUMMARY`` when
+  set, so the per-commit trajectory is readable from the Actions UI.
+
+Baselines live in ``benchmarks/baselines/BENCH_*_smoke.json`` — committed
+*smoke-mode* runs, so the diff is mode-for-mode (the kernel bench's smoke
+mode deliberately uses the analytic max_nnz bound where the committed
+full-trajectory ``BENCH_kernel.json`` measures a real encoding; diffing
+across modes would bake a constant ~10% skew into the gate). Regenerate a
+baseline in the same PR that intentionally moves a gated metric:
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench --smoke \
+        --json benchmarks/baselines/BENCH_kernel_smoke.json
+    PYTHONPATH=src python -m benchmarks.e2e_throughput \
+        --json benchmarks/baselines/BENCH_e2e_smoke.json
+    PYTHONPATH=src python -m benchmarks.spec_decode \
+        --json benchmarks/baselines/BENCH_spec_smoke.json
+
+Usage (what `.github/workflows/ci.yml` runs):
+
+    python -m benchmarks.check_regression \
+        --check kernel benchmarks/baselines/BENCH_kernel_smoke.json BENCH_kernel_smoke.json \
+        --check e2e    benchmarks/baselines/BENCH_e2e_smoke.json    BENCH_e2e_smoke.json \
+        --check spec   benchmarks/baselines/BENCH_spec_smoke.json   BENCH_spec_smoke.json
+
+A metric missing from the *current* run fails (a silently dropped metric
+must not pass the gate); one missing from the *baseline* is reported as
+``new`` and skipped (it starts gating once the baseline is regenerated).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, List, Optional, Tuple
+
+# (dotted path, direction, relative tolerance, absolute floor or None)
+Metric = Tuple[str, str, float, Optional[float]]
+
+METRICS: Dict[str, List[Metric]] = {
+    "kernel": [
+        # per-cell selector quality is handled by _check_kernel_cells
+    ],
+    "e2e": [
+        ("measured.concurrency_gain.shared_prefix", "higher", 0.10, 2.0),
+        ("measured.concurrency_gain.unique", "higher", 0.15, None),
+        ("planner.blocks_ratio", "higher", 0.05, None),
+        ("measured.scenarios.paged_shared_prefix.prefix_hit_rate",
+         "higher", 0.15, None),
+    ],
+    "spec": [
+        ("repetitive_speedup", "higher", 0.10, 1.5),
+        ("repetitive_accept_rate", "higher", 0.15, None),
+        ("scenarios.adversarial.spec."
+         "__min__.tokens_per_step", "higher", 0.05, 1.0),
+    ],
+}
+
+
+def get_path(d: Any, path: str) -> Optional[float]:
+    """Resolve a dotted path; the ``__min__`` segment takes the minimum of
+    the metric over every child of a dict (e.g. a spec-k sweep whose keys
+    differ between smoke and full runs)."""
+    cur = d
+    parts = path.split(".")
+    for i, part in enumerate(parts):
+        if part == "__min__":
+            if not isinstance(cur, dict) or not cur:
+                return None
+            rest = ".".join(parts[i + 1:])
+            vals = [get_path(v, rest) for v in cur.values()]
+            vals = [v for v in vals if v is not None]
+            return min(vals) if vals else None
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return float(cur) if isinstance(cur, (int, float)) else None
+
+
+class Row:
+    def __init__(self, bench: str, metric: str, base, cur, status: str,
+                 note: str = ""):
+        self.bench, self.metric = bench, metric
+        self.base, self.cur, self.status, self.note = base, cur, status, note
+
+    @property
+    def failed(self) -> bool:
+        return self.status == "REGRESSED"
+
+    def cells(self) -> List[str]:
+        fmt = lambda v: f"{v:.3f}" if isinstance(v, float) else str(v)
+        trend = ""
+        if isinstance(self.base, float) and isinstance(self.cur, float) \
+                and self.base:
+            trend = f"{(self.cur - self.base) / abs(self.base):+.1%}"
+        return [self.bench, self.metric, fmt(self.base), fmt(self.cur),
+                trend, self.status + (f" ({self.note})" if self.note else "")]
+
+
+def _check_metric(bench: str, m: Metric, base: Any, cur: Any) -> Row:
+    path, direction, rel, floor = m
+    b, c = get_path(base, path), get_path(cur, path)
+    if c is None:
+        return Row(bench, path, b, c, "REGRESSED", "missing from current run")
+    if b is None:
+        return Row(bench, path, b, c, "new", "not in baseline yet")
+    ok = (c >= b * (1 - rel)) if direction == "higher" \
+        else (c <= b * (1 + rel))
+    note = f"tol {rel:.0%} {direction}"
+    if floor is not None:
+        if direction == "higher" and c < floor:
+            ok, note = False, f"below floor {floor}"
+        elif direction == "lower" and c > floor:
+            ok, note = False, f"above ceiling {floor}"
+    return Row(bench, path, b, c, "ok" if ok else "REGRESSED", note)
+
+
+def _check_kernel_cells(base: Any, cur: Any) -> List[Row]:
+    """Per-shape selector quality: the analytic schedule sweep is identical
+    between smoke and full runs, so ``effective_s`` (the selector's modeled
+    speedup-adjusted step time, lower is better) must not drift up, and the
+    interpret-mode kernel-entry launches must have passed."""
+    rows: List[Row] = []
+    bcells = {c["name"]: c for c in base.get("cells", [])}
+    ccells = {c["name"]: c for c in cur.get("cells", [])}
+    for name in sorted(bcells):
+        if name not in ccells:
+            rows.append(Row("kernel", f"cells.{name}", "present", None,
+                            "REGRESSED", "cell missing from current run"))
+            continue
+        b = bcells[name]["selected_terms"]["effective_s"]
+        c = ccells[name]["selected_terms"]["effective_s"]
+        ok = c <= b * 1.05
+        rows.append(Row("kernel", f"{name}.effective_s", b, c,
+                        "ok" if ok else "REGRESSED", "tol 5% lower"))
+        if bcells[name]["selected"] != ccells[name]["selected"]:
+            rows.append(Row("kernel", f"{name}.selected",
+                            str(bcells[name]["selected"]),
+                            str(ccells[name]["selected"]), "changed",
+                            "refresh the committed baseline if intended"))
+    if "smoke_ok" in cur:
+        rows.append(Row("kernel", "smoke_ok", True, cur["smoke_ok"],
+                        "ok" if cur["smoke_ok"] else "REGRESSED",
+                        "interpret-mode kernel launches vs oracles"))
+    return rows
+
+
+def check(kind: str, baseline_path: str, current_path: str) -> List[Row]:
+    if kind not in METRICS:
+        raise SystemExit(f"unknown bench kind {kind!r}; "
+                         f"one of {sorted(METRICS)}")
+    with open(baseline_path) as f:
+        base = json.load(f)
+    with open(current_path) as f:
+        cur = json.load(f)
+    rows = [_check_metric(kind, m, base, cur) for m in METRICS[kind]]
+    if kind == "kernel":
+        rows.extend(_check_kernel_cells(base, cur))
+    return rows
+
+
+def render_table(rows: List[Row]) -> str:
+    header = ["bench", "metric", "baseline", "current", "trend", "status"]
+    lines = ["| " + " | ".join(header) + " |",
+             "|" + "|".join("---" for _ in header) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(r.cells()) + " |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", nargs=3, action="append", required=True,
+                    metavar=("KIND", "BASELINE", "CURRENT"),
+                    help="bench kind + committed baseline + smoke-run JSON")
+    args = ap.parse_args()
+    rows: List[Row] = []
+    for kind, baseline, current in args.check:
+        rows.extend(check(kind, baseline, current))
+    table = render_table(rows)
+    print(table)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("## Bench regression gate\n\n" + table + "\n")
+    failures = [r for r in rows if r.failed]
+    if failures:
+        raise SystemExit(
+            "bench regression gate FAILED:\n" + "\n".join(
+                f"  {r.bench}: {r.metric} baseline={r.base} "
+                f"current={r.cur} ({r.note})" for r in failures))
+    print(f"\nbench regression gate: {len(rows)} metrics ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,10 +20,8 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import pruning
-from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.training import data as data_mod
 from repro.training import optimizer as opt_mod

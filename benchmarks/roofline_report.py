@@ -15,7 +15,7 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 from repro import configs
 from repro.core import roofline
@@ -92,7 +92,6 @@ def terms_from_record(rec: dict, *, lscd: bool = False
     label = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}/{rec['weight_mode']}"
     if lscd:
         cfg = configs.get(rec["arch"])
-        shape = configs.SHAPES[rec["shape"]]
         w_dense = cfg.active_param_count() * 2.0
         hbm = hbm - w_dense * (1.0 - LSCD_BYTES_RATIO)
         label = f"{rec['arch']}/{rec['shape']}/{rec['mesh']}/lscd_kernel"

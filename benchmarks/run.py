@@ -3,6 +3,7 @@
   kernel_bench     Fig.3 / Fig.9 / Fig.12 — SpMM kernel grid
   utilization      Fig.10 / Fig.11 — unit utilisation + stage breakdown
   e2e_throughput   Fig.13 / Fig.15 / Fig.16 + Table 1 — tokens/chip-s, memory
+  spec_decode      DESIGN.md §11 — speculative tokens/step + accept rate
   format_bench     Tiled-CSL format: compression, padding, reorder scores
   pruning_study    §6.3.1 — pruning accuracy case study (reduced scale)
   roofline (CSV)   §Roofline rows from dry-run records, when present
@@ -26,11 +27,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (e2e_throughput, format_bench, kernel_bench,
-                            pruning_study, utilization)
+                            pruning_study, spec_decode, utilization)
     modules = {
         "kernel_bench": kernel_bench.run,
         "utilization": utilization.run,
         "e2e_throughput": e2e_throughput.run,
+        "spec_decode": spec_decode.run,
         "format_bench": format_bench.run,
         "pruning_study": pruning_study.run,
     }

@@ -1,0 +1,190 @@
+"""Speculative decoding bench — tokens/step + accept rate (DESIGN.md §11).
+
+Flash-LLM's decode regime is bandwidth-bound (§3): the weights stream once
+per step regardless of how many positions the step scores, so verifying a
+k-token draft window widens every GEMM from N = B to N = B·(k+1) at almost
+the same weight-traffic cost. This bench measures the conversion on the
+serving stack: *tokens per active slot-step* (exactly 1.0 without
+speculation) and the drafter's accept rate, on two workloads:
+
+* ``repetitive`` — greedy decoding of prompts that tile a short pattern;
+  generation settles into short cycles the n-gram (prompt-lookup) drafter
+  tracks, the regime speculation is built for. The committed acceptance
+  quantity: >= 1.5x tokens/step with the n-gram drafter.
+* ``adversarial`` — temperature sampling over random prompts: draws rarely
+  repeat, the drafter whiffs, and tokens/step shows the floor (never below
+  1.0 — a missed draft still emits the verify window's bonus token).
+
+Parity is asserted in-bench for every scenario: speculative streams must
+be IDENTICAL to the non-speculative baseline — bitwise greedy argmax, and
+bitwise sampled too because verify columns draw with the same
+(uid, token-index)-folded keys the plain loop folds.
+
+``--full`` adds a k-sweep and a draft-model scenario (self-draft: the
+target's own weights as the drafter — the accept-rate ceiling). CSV rows
+otherwise; ``--json`` emits the structured report (committed as
+BENCH_spec.json; CI uploads a smoke run and fails if the repetitive
+speedup drops below 1.5x).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+ARCH = "tinyllama_1_1b"
+ACCEPT_FLOOR = 1.5       # committed acceptance bound (repetitive, n-gram)
+
+
+def _run_batcher(params, cfg, prompts, max_new: int, **kw) -> Dict[str, Any]:
+    from repro.serving import batching
+
+    b = batching.ContinuousBatcher(params, cfg, **kw)
+    t0 = time.monotonic()
+    for uid, p in enumerate(prompts):
+        b.submit(uid, p, max_new_tokens=max_new)
+    done = b.run_to_completion(max_steps=5000)
+    dt = time.monotonic() - t0
+    m = b.metrics
+    if b.paged:
+        b.pool.check_invariants()
+        assert b.pool.blocks_in_use == 0, "leaked blocks"
+    toks = sum(len(v) for v in done.values())
+    return {
+        "outputs": {int(u): v for u, v in sorted(done.items())},
+        "steps": m.steps,
+        "tokens": toks,
+        "tok_per_s": toks / max(dt, 1e-9),
+        "tokens_per_step": m.tokens_per_step,
+        "accept_rate": m.accept_rate,
+        "drafted": m.drafted,
+        "accepted": m.accepted,
+        "preemptions": m.preemptions,
+    }
+
+
+def report(full: bool = False) -> Dict[str, Any]:
+    import jax
+    from repro import configs
+    from repro.models import transformer
+    from repro.serving import speculative
+
+    cfg = configs.smoke(ARCH)
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    n_req, n_slots, max_len, max_new = (6, 3, 96, 32) if full \
+        else (3, 3, 80, 24)
+    block = 8
+    n_blocks = n_slots * (max_len // block)
+    ks = (2, 4, 8) if full else (4,)
+    rng = np.random.default_rng(0)
+    workloads: Dict[str, Dict[str, Any]] = {
+        "repetitive": {
+            "prompts": [np.tile(rng.integers(0, cfg.vocab, 4)
+                                .astype(np.int64), 6) for _ in range(n_req)],
+            "sampling": {},                       # greedy
+        },
+        "adversarial": {
+            "prompts": [rng.integers(0, cfg.vocab, int(rng.integers(8, 16)))
+                        .astype(np.int64) for _ in range(n_req)],
+            "sampling": {"temperature": 0.9, "top_k": 16, "seed": 5},
+        },
+    }
+    paged_kw = dict(n_slots=n_slots, max_len=max_len, cache_kind="paged",
+                    block_size=block, n_blocks=n_blocks)
+    scen: Dict[str, Any] = {}
+    for wname, w in workloads.items():
+        base = _run_batcher(params, cfg, w["prompts"], max_new,
+                            **paged_kw, **w["sampling"])
+        entry: Dict[str, Any] = {"baseline": base, "spec": {}}
+        for k in ks:
+            s = _run_batcher(params, cfg, w["prompts"], max_new,
+                             **paged_kw, **w["sampling"], spec_k=k)
+            # stream parity is part of the bench contract, greedy AND sampled
+            assert s["outputs"] == base["outputs"], (wname, k)
+            s["speedup_tokens_per_step"] = (s["tokens_per_step"]
+                                            / base["tokens_per_step"])
+            entry["spec"][str(k)] = s
+        for r in (base, *entry["spec"].values()):
+            r.pop("outputs")
+        scen[wname] = entry
+    if full:
+        # accept-rate ceiling: the target drafts for itself (k greedy
+        # rollout of the same weights == the verified continuation, up to
+        # sampling temperature — repetitive/greedy gives accept ~1.0)
+        w = workloads["repetitive"]
+        base = scen["repetitive"]["baseline"]
+        drafter = speculative.DraftModelDrafter(params, cfg,
+                                                vocab=cfg.vocab)
+        s = _run_batcher(params, cfg, w["prompts"], max_new, **paged_kw,
+                         spec_k=4, drafter=drafter)
+        s.pop("outputs")
+        s["speedup_tokens_per_step"] = (s["tokens_per_step"]
+                                        / base["tokens_per_step"])
+        scen["repetitive"]["spec_model_drafter"] = s
+    best_k = max(scen["repetitive"]["spec"],
+                 key=lambda k: scen["repetitive"]["spec"][k]
+                 ["tokens_per_step"])
+    return {
+        "bench": "spec_decode",
+        "full": full,
+        "config": {"arch": cfg.name, "n_requests": n_req,
+                   "n_slots": n_slots, "max_len": max_len,
+                   "max_new": max_new, "block": block, "n_blocks": n_blocks,
+                   "spec_ks": list(ks), "drafter": "ngram"},
+        "scenarios": scen,
+        "repetitive_best_k": int(best_k),
+        "repetitive_speedup": scen["repetitive"]["spec"][best_k]
+        ["speedup_tokens_per_step"],
+        "repetitive_accept_rate": scen["repetitive"]["spec"][best_k]
+        ["accept_rate"],
+    }
+
+
+def run(full: bool = False) -> List[str]:
+    rep = report(full)
+    rows = []
+    for wname, entry in rep["scenarios"].items():
+        b = entry["baseline"]
+        rows.append(f"spec_{wname}_baseline,{b['steps']},"
+                    f"tokens_per_step={b['tokens_per_step']:.2f}")
+        specs = dict(entry["spec"])
+        if "spec_model_drafter" in entry:
+            specs["model_drafter"] = entry["spec_model_drafter"]
+        for k, s in specs.items():
+            rows.append(
+                f"spec_{wname}_k{k},{s['steps']},"
+                f"tokens_per_step={s['tokens_per_step']:.2f};"
+                f"accept_rate={s['accept_rate']:.2f};"
+                f"speedup=x{s['speedup_tokens_per_step']:.2f}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the structured report (BENCH_spec.json)")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.json:
+        rep = report(args.full)
+        with open(args.json, "w") as f:
+            json.dump(rep, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json}: repetitive speedup "
+              f"x{rep['repetitive_speedup']:.2f} at k={rep['repetitive_best_k']}"
+              f" (accept_rate={rep['repetitive_accept_rate']:.2f})")
+        if rep["repetitive_speedup"] < ACCEPT_FLOOR:
+            raise SystemExit(
+                f"repetitive tokens-per-step speedup "
+                f"{rep['repetitive_speedup']:.2f} < {ACCEPT_FLOOR} with the "
+                f"n-gram drafter (acceptance regression)")
+    else:
+        for row in run(args.full):
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,6 @@
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -34,6 +34,8 @@ ap.add_argument("--paged", action="store_true",
                 help="paged block-pool KV cache with prefix sharing")
 ap.add_argument("--block-size", type=int, default=8)
 ap.add_argument("--n-blocks", type=int, default=None)
+ap.add_argument("--spec-k", type=int, default=0,
+                help="speculative decoding drafts per step (needs --paged)")
 args = ap.parse_args()
 
 cfg = configs.smoke(args.arch)
@@ -44,7 +46,7 @@ params = transformer.init_model(jax.random.PRNGKey(0), cfg)
 b = batching.ContinuousBatcher(
     params, cfg, n_slots=args.slots, max_len=args.max_len, eos_id=args.eos,
     cache_kind="paged" if args.paged else "dense",
-    block_size=args.block_size, n_blocks=args.n_blocks)
+    block_size=args.block_size, n_blocks=args.n_blocks, spec_k=args.spec_k)
 rng = np.random.default_rng(0)
 lo = min(3, args.max_len - 1)
 hi = max(lo + 1, min(args.max_len // 2, args.max_len - 1))
@@ -85,3 +87,7 @@ if args.paged:
     print(f"paged cache: {b.pool.n_blocks} blocks x {b.block_size} tok, "
           f"prefix_hit_rate={m.prefix_hit_rate:.2f}  "
           f"peak_active={m.peak_active_slots}  preemptions={m.preemptions}")
+if args.spec_k:
+    print(f"speculative (k={args.spec_k}): drafted={m.drafted} "
+          f"accepted={m.accepted} accept_rate={m.accept_rate:.2f}  "
+          f"tokens_per_step={m.tokens_per_step:.2f}")

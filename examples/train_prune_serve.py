@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pruning, tiled_csl
-from repro.models import nn, transformer
+from repro.models import nn
 from repro.models.config import ModelConfig
 from repro.serving import batching
 from repro.training import data as data_mod

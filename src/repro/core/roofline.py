@@ -17,9 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Iterable, Optional
-
-import numpy as np
+from typing import Dict, Optional
 
 # ---- TPU v5e hardware constants (assignment-specified) ---------------------
 PEAK_FLOPS_BF16 = 197e12      # 197 TFLOP/s bf16 per chip

@@ -13,7 +13,7 @@ dequantise pipeline is explicit in the HLO (auditable in the dry-run).
 from __future__ import annotations
 
 import functools
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -57,7 +57,6 @@ def make_compressed_grad_allreduce(mesh: Mesh, *, axis: str = "data"):
     size = mesh.shape[axis]
 
     def reduce_leaf(g):
-        spec = P()  # grads replicated within the reduce group
 
         @functools.partial(
             _shard_map, mesh=mesh,

@@ -26,9 +26,8 @@ import os
 import re
 import shutil
 import signal
-import tempfile
 import threading
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import numpy as np

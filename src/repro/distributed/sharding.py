@@ -17,7 +17,6 @@ carry an E axis (sharded over model = EP).
 
 from __future__ import annotations
 
-import re
 from typing import Optional, Sequence, Tuple
 
 import jax

@@ -7,7 +7,10 @@ units busy. Tile geometry and the split-K factor therefore have to be
 chosen per *(M, K, N, sparsity)* — the same weights want different
 schedules for decode (N=1-8) and prefill (N=512+), which
 ``sparse_linear.linear`` delivers by passing the activation's N through
-``ops.spmm`` on every call.
+``ops.spmm`` on every call. Speculative verification (DESIGN.md §11) rides
+the same contract: a verify window flattens to N = B·(k+1) activation
+rows, so the selector sees the widened N and can back off split-K exactly
+where the extra verify compute already restores launch parallelism.
 
 Components:
 

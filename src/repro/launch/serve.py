@@ -22,7 +22,7 @@ from repro import configs
 from repro.core import pruning, tiled_csl
 from repro.distributed import fault_tolerance as ft
 from repro.models import transformer, nn
-from repro.serving import batching, budget
+from repro.serving import batching, budget, speculative
 
 
 def main() -> None:
@@ -50,6 +50,16 @@ def main() -> None:
                          "serving.budget.plan (weights + workspace + KV)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: drafts verified per step "
+                         "(DESIGN.md §11; requires --paged)")
+    ap.add_argument("--drafter", default="ngram", choices=("ngram", "model"),
+                    help="draft source: the request's own n-gram history, "
+                         "or a small draft model sharing the tokenizer")
+    ap.add_argument("--draft-arch", default=None,
+                    help="arch id for --drafter model (smoke-sized init)")
+    ap.add_argument("--max-ngram", type=int, default=3,
+                    help="longest suffix n-gram the ngram drafter matches")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -100,11 +110,23 @@ def main() -> None:
               f"({p.kv_bytes / 1e9:.2f} GB KV; dense-slot baseline "
               f"{p.n_dense_slots(args.max_len)} slots at max_len)")
 
+    drafter = None
+    if args.spec_k:
+        draft_params = draft_cfg = None
+        if args.drafter == "model":
+            draft_cfg = configs.smoke(args.draft_arch or args.arch)
+            draft_params = transformer.init_model(
+                jax.random.PRNGKey(args.seed + 1), draft_cfg)
+        drafter = speculative.make_drafter(
+            args.drafter, max_ngram=args.max_ngram,
+            draft_params=draft_params, draft_cfg=draft_cfg,
+            vocab=cfg.vocab if args.drafter == "model" else None)
     b = batching.ContinuousBatcher(
         params, cfg, n_slots=args.slots, max_len=args.max_len,
         cache_kind="paged" if args.paged else "dense",
         block_size=args.block_size, n_blocks=n_blocks,
-        temperature=args.temperature, top_k=args.top_k, seed=args.seed)
+        temperature=args.temperature, top_k=args.top_k, seed=args.seed,
+        spec_k=args.spec_k, drafter=drafter)
     rng = np.random.default_rng(args.seed)
     for uid in range(args.requests):
         plen = int(rng.integers(4, min(16, args.max_len - args.max_new)))
@@ -127,6 +149,11 @@ def main() -> None:
               f"peak_active={m.peak_active_slots} "
               f"preemptions={m.preemptions} "
               f"pool={b.pool.blocks_in_use}/{b.pool.n_blocks} in use")
+    if args.spec_k:
+        print(f"speculative (k={args.spec_k}, {args.drafter}): "
+              f"drafted={m.drafted} accepted={m.accepted} "
+              f"accept_rate={m.accept_rate:.2f} "
+              f"tokens_per_step={m.tokens_per_step:.2f}")
     for uid in sorted(done)[:3]:
         print(f"  req {uid}: {done[uid][:8]}...")
 

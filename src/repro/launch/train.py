@@ -18,13 +18,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.core import pruning
 from repro.distributed import fault_tolerance as ft
 from repro.distributed import sharding
-from repro.launch import mesh as mesh_mod
 from repro.training import data as data_mod
 from repro.training import optimizer as opt_mod
 from repro.training import train_loop

@@ -321,6 +321,96 @@ def attention_decode(params: dict, x: jax.Array, cache: dict,
     return y, {"k": ck, "v": cv}
 
 
+def verify_window_mask(pos_vec: jax.Array, W: int, T_old: int,
+                       ring_len: Optional[int]) -> jax.Array:
+    """[B, W, T_old + W] validity mask for a speculative verify window
+    (DESIGN.md §11): query i sits at absolute position ``pos_vec + i``.
+
+    Columns split into the *gathered old cache* (T_old slots, read BEFORE
+    any window write so sliding-window rings are not clobbered by
+    speculative entries that may be rejected) and the window's own *fresh*
+    keys (W columns, appended after the old block). Old columns are valid
+    by absolute position — strictly before the window, which also masks
+    stale entries left at positions >= pos by a rejected earlier window —
+    and, for rings, within each query's own window. Fresh column j is
+    valid for query i iff j <= i (causal inside the window; the scheduler
+    caps W <= ring_len so fresh columns never age out intra-window).
+    The union per query i is exactly the position set the non-speculative
+    decode at position pos+i would attend, so masked softmax terms are
+    exact zeros and greedy streams match the baseline.
+    """
+    B = pos_vec.shape[0]
+    qpos = pos_vec[:, None] + jnp.arange(W, dtype=pos_vec.dtype)  # [B, W]
+    idx = jnp.arange(T_old)[None, :]                              # [1, T]
+    if ring_len is None:
+        old = jnp.broadcast_to((idx < pos_vec[:, None])[:, None, :],
+                               (B, W, T_old))
+    else:
+        last = pos_vec[:, None] - 1                    # last pre-window pos
+        age = jnp.mod(last - idx, ring_len)            # [B, T]
+        abs_pos = last - age                           # newest pos at slot
+        base = (abs_pos >= 0) & (idx < ring_len)
+        old = (base[:, None, :]
+               & ((qpos[:, :, None] - abs_pos[:, None, :]) < ring_len))
+    j = jnp.arange(W)
+    fresh = jnp.broadcast_to((j[None, :] <= j[:, None])[None], (B, W, W))
+    return jnp.concatenate([old, fresh], axis=-1)
+
+
+def attention_verify_paged(params: dict, x: jax.Array, cache: dict,
+                           block_tables: jax.Array, pos: jax.Array,
+                           cfg: ModelConfig, *,
+                           ring_len: Optional[int] = None,
+                           backend: str = "auto"
+                           ) -> Tuple[jax.Array, dict]:
+    """Speculative verify window: W = k+1 query positions per slot against
+    the paged cache, with the cache write DEFERRED (DESIGN.md §11).
+
+    x: [B, W, d] — window token 0 is the slot's committed last token, the
+    rest are draft candidates; ``pos`` [B] is window token 0's absolute
+    position. Old K/V is gathered through the block tables BEFORE any
+    write and the window's fresh K/V rides as W extra masked columns, so
+    a rejected draft leaves the pools bit-identical — the engine commits
+    only the accepted prefix afterwards (`transformer.commit_verify_window`
+    redirects rejected positions to the trash block). Returns
+    (y [B, W, d], fresh {"k"/"v": [B, W, kv, hd]} in the cache dtype).
+    """
+    B, W = x.shape[0], x.shape[1]
+    pos_vec = jnp.asarray(pos, jnp.int32)
+    if pos_vec.ndim == 0:
+        pos_vec = jnp.broadcast_to(pos_vec, (B,))
+    positions = pos_vec[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+    if cfg.mrope_sections is not None:
+        positions_rope = jnp.broadcast_to(positions[None], (3, B, W))
+    else:
+        positions_rope = positions
+    if cfg.local_window is not None and ring_len is None:
+        raise ValueError("sliding-window paged verify needs ring_len")
+    q, k, v = _project_qkv(params, x, cfg, backend)
+    q, k = _rope_q_k(q, k, positions_rope, cfg)
+
+    cdt = cache["k"].dtype
+    # The fresh K/V round-trip through the cache dtype exactly as the
+    # baseline's write-then-gather does, so scores see identical operands.
+    k = k.astype(cdt)
+    v = v.astype(cdt)
+    kv_heads, hd = cache["k"].shape[-2], cache["k"].shape[-1]
+    kg = jnp.take(cache["k"], block_tables, axis=0).reshape(
+        B, -1, kv_heads, hd)
+    vg = jnp.take(cache["v"], block_tables, axis=0).reshape(
+        B, -1, kv_heads, hd)
+    mask = verify_window_mask(pos_vec, W, kg.shape[1], ring_len)
+    kcat = jnp.concatenate([kg, k], axis=1)
+    vcat = jnp.concatenate([vg, v], axis=1)
+    scores = _gqa_scores(q, kcat, cfg)                  # [B,KV,G,W,Tc]
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    o = _gqa_out(w, vcat, cfg).astype(x.dtype)
+    y = sparse_linear.linear_logical_out(params["wo"]["w"], cfg.d_model, o,
+                                         backend=backend)
+    return y, {"k": k, "v": v}
+
+
 def attention_decode_paged(params: dict, x: jax.Array, cache: dict,
                            block_tables: jax.Array, pos: jax.Array,
                            cfg: ModelConfig, *,

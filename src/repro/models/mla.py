@@ -220,12 +220,60 @@ def mla_decode_paged(params: dict, x: jax.Array, cache: dict,
     return y, {"ckv": ckv, "krope": ckrope}
 
 
+def mla_verify_paged(params: dict, x: jax.Array, cache: dict,
+                     block_tables: jax.Array, pos: jax.Array,
+                     cfg: ModelConfig, *, backend: str = "auto"
+                     ) -> Tuple[jax.Array, dict]:
+    """Speculative verify window over the paged latent pools (DESIGN.md
+    §11): the MLA twin of `attention.attention_verify_paged`.
+
+    x: [B, W, d] candidate window; pos [B] is window token 0's absolute
+    position. Old latents are gathered BEFORE any write; the window's
+    fresh (c_kv, k_rope) ride as W extra masked columns, and the cache is
+    NOT written — the engine commits only the accepted prefix through
+    `transformer.commit_verify_window`. Returns (y [B, W, d], fresh
+    {"ckv"/"krope": [B, W, *]} in the cache dtype).
+    """
+    if cfg.local_window is not None:
+        # The mask below reads gathered columns as absolute positions while
+        # a ring commit would write residues — reject rather than silently
+        # mixing wrapped entries (no MLA config uses sliding windows).
+        raise ValueError("sliding-window rings are not supported for MLA "
+                         "paged verify")
+    B, W = x.shape[0], x.shape[1]
+    pos_vec = jnp.asarray(pos, jnp.int32)
+    if pos_vec.ndim == 0:
+        pos_vec = jnp.broadcast_to(pos_vec, (B,))
+    positions = pos_vec[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, x, positions, cfg, backend)
+
+    cdt = cache["ckv"].dtype
+    c_kv = c_kv.astype(cdt)                 # same rounding as write+gather
+    k_rope = k_rope.astype(cache["krope"].dtype)
+    ckv_old = jnp.take(cache["ckv"], block_tables, axis=0).reshape(
+        B, -1, cfg.kv_lora_rank)
+    krope_old = jnp.take(cache["krope"], block_tables, axis=0).reshape(
+        B, -1, cfg.qk_rope_dim)
+    mask = attention.verify_window_mask(pos_vec, W, ckv_old.shape[1],
+                                        None)          # MLA has no rings
+    ckv_seq = jnp.concatenate([ckv_old, c_kv], axis=1)
+    krope_seq = jnp.concatenate([krope_old, k_rope], axis=1)
+    y = _absorbed_attend(params, x, q_nope, q_rope, ckv_seq, krope_seq,
+                         pos_vec, cfg, backend, mask=mask[:, None])
+    return y, {"ckv": c_kv, "krope": k_rope}
+
+
 def _absorbed_attend(params: dict, x: jax.Array, q_nope, q_rope, ckv,
-                     ckrope, pos_vec, cfg: ModelConfig, backend: str
-                     ) -> jax.Array:
+                     ckrope, pos_vec, cfg: ModelConfig, backend: str, *,
+                     mask: Optional[jax.Array] = None) -> jax.Array:
     """Absorbed-form attention over a [B, T, *] latent sequence (contiguous
     cache or block-table gather; padded gather columns mask to exact
-    softmax zeros) followed by the W_UV / W_O output path."""
+    softmax zeros) followed by the W_UV / W_O output path.
+
+    ``mask`` (broadcastable against [B, h, S, T]) overrides the default
+    single-query causal bound — the speculative verify window passes its
+    per-query old/fresh-column mask here.
+    """
     B = x.shape[0]
     T = ckv.shape[1]
     h, dn, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
@@ -263,12 +311,13 @@ def _absorbed_attend(params: dict, x: jax.Array, q_nope, q_rope, ckv,
     scores = (s_pair[:, :, :S] + s_pair[:, :, S:]
               + nn.einsum_f32acc("bshd,btd->bhst", q_rope.astype(cdt),
                                  ckrope)) * scale
-    mask = (jnp.arange(T)[None, :] <= pos_vec[:, None])[:, None, None, :]
+    if mask is None:
+        mask = (jnp.arange(T)[None, :] <= pos_vec[:, None])[:, None, None, :]
     scores = jnp.where(mask, scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     o_lat = nn.einsum_f32acc("bhst,btr->bshr", w.astype(cdt),
-                             ckv)                            # [B,1,h,kvr]
-    o = jnp.einsum("bshr,hdr->bshd", o_lat, w_uv)            # [B,1,h,dv]
-    o = o.reshape(B, 1, h * dv).astype(x.dtype)
+                             ckv)                            # [B,S,h,kvr]
+    o = jnp.einsum("bshr,hdr->bshd", o_lat, w_uv)            # [B,S,h,dv]
+    o = o.reshape(B, S, h * dv).astype(x.dtype)
     return sparse_linear.linear_logical_out(params["wo"]["w"], cfg.d_model, o,
                                             backend=backend)

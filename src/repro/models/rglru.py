@@ -122,7 +122,6 @@ def rglru_block(params: dict, x: jax.Array, cfg: ModelConfig, *,
 def rglru_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig, *,
                  backend: str = "auto") -> Tuple[jax.Array, dict]:
     """Single-token step. x: [B, 1, d]."""
-    B = x.shape[0]
     r = cfg.rnn_dim
     xr = sparse_linear.linear_logical_out(params["w_x"]["w"], r, x,
                                           backend=backend)[:, 0]

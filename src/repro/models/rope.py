@@ -44,12 +44,10 @@ def apply_mrope(x: jax.Array, positions_thw: jax.Array,
     freqs = rope_freqs(x.shape[-1], theta)                      # [half]
     # Build per-slot position by section.
     pos_parts = []
-    start = 0
     for i, sec in enumerate(sections):
         p = positions_thw[i][..., None].astype(jnp.float32)      # [B,S,1]
         pos_parts.append(jnp.broadcast_to(
             p, p.shape[:-1] + (sec,)))
-        start += sec
     pos = jnp.concatenate(pos_parts, axis=-1)                    # [B,S,half]
     angles = pos * freqs
     cos = jnp.cos(angles)[:, :, None, :]

@@ -193,7 +193,6 @@ def ssm_decode(params: dict, x: jax.Array, cache: dict, cfg: ModelConfig, *,
     z, xbc_new, dt = _split_proj(zxbcdt, cfg)
 
     # conv ring: cache["conv"] holds previous cv-1 raw inputs
-    cv = cfg.ssm_conv
     hist = jnp.concatenate([cache["conv"].astype(xbc_new.dtype),
                             xbc_new], axis=1)                 # [B, cv, ch]
     cw = params["conv_w"].astype(jnp.float32)

@@ -107,7 +107,11 @@ def block_apply(p: Params, x: jax.Array, kind: str, cfg: ModelConfig, *,
     h = _norm(cfg, p["pre_norm"], x)
     if kind == "attn":
         if cfg.attn_kind == "mla":
-            if mode == "decode" and block_tables is not None:
+            if mode == "verify":
+                a, new_cache = mla.mla_verify_paged(
+                    p["attn"], h, cache, block_tables, pos, cfg,
+                    backend=backend)
+            elif mode == "decode" and block_tables is not None:
                 a, new_cache = mla.mla_decode_paged(
                     p["attn"], h, cache, block_tables, pos, cfg,
                     backend=backend)
@@ -118,7 +122,11 @@ def block_apply(p: Params, x: jax.Array, kind: str, cfg: ModelConfig, *,
                 a, new_cache = mla.mla_attention(
                     p["attn"], h, positions, cfg, cache=cache, backend=backend)
         else:
-            if mode == "decode" and block_tables is not None:
+            if mode == "verify":
+                a, new_cache = attention.attention_verify_paged(
+                    p["attn"], h, cache, block_tables, pos, cfg,
+                    ring_len=ring_len, backend=backend)
+            elif mode == "decode" and block_tables is not None:
                 a, new_cache = attention.attention_decode_paged(
                     p["attn"], h, cache, block_tables, pos, cfg,
                     ring_len=ring_len, backend=backend)
@@ -268,6 +276,45 @@ def scatter_cache_pages(cfg: ModelConfig, full: Any, part: Any,
     return jax.tree.map(leaf, full, part)
 
 
+def commit_verify_window(cfg: ModelConfig, cache: Any, fresh: Any,
+                         block_tables: jax.Array, pos_vec: jax.Array,
+                         commit: jax.Array,
+                         ring_len: Optional[int] = None) -> Any:
+    """Scatter a speculative verify window's fresh K/V into the paged
+    pools, committing ONLY accepted positions (DESIGN.md §11).
+
+    ``fresh`` is the tree `forward(mode="verify")` returned: per-layer
+    ``[B, W, ...]`` leaves aligned with the pool leaves of ``cache``.
+    Window position j of slot b lands at cache position ``pos_vec[b] + j``
+    (ring residue for sliding windows); where ``commit[b, j]`` is False the
+    write is redirected to the trash block (physical block 0,
+    `serving.paged_cache.TRASH_BLOCK`), so a rejected draft never dirties a
+    real page — rollback is "the write never happened", which keeps ring
+    caches exact (a rejected speculative entry must not clobber the older
+    same-residue position it would overwrite) and lets the scheduler free
+    over-allocated tail blocks with their contents untouched.
+    """
+    axis = cache_slot_axis(cfg)
+    blk = jax.tree.leaves(cache)[0].shape[axis + 1]
+    W = commit.shape[1]
+    slot = pos_vec[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+    if ring_len is not None:
+        slot = jnp.mod(slot, ring_len)
+    logical = slot // blk
+    nblk = block_tables.shape[1]
+    ok = commit & (logical < nblk)          # beyond-table windows -> trash
+    phys = jnp.take_along_axis(block_tables,
+                               jnp.minimum(logical, nblk - 1), axis=1)
+    phys = jnp.where(ok, phys, 0)           # paged_cache.TRASH_BLOCK
+    off = slot % blk
+
+    def leaf(f, p):
+        idx = (slice(None),) * axis + (phys, off)
+        return f.at[idx].set(p.astype(f.dtype))
+
+    return jax.tree.map(leaf, cache, fresh)
+
+
 def copy_cache_block(cfg: ModelConfig, cache: Any, src: int, dst: int) -> Any:
     """Copy one physical pool block in every cache leaf (copy-on-write)."""
     axis = cache_slot_axis(cfg)
@@ -348,13 +395,18 @@ def forward(params: Params, inputs: Dict[str, jax.Array], cfg: ModelConfig, *,
             ``block_tables [B, blocks_per_seq]`` maps logical to physical
             blocks; the tables are layer-invariant (one table per request,
             shared by every layer's pool).
+    verify mode (DESIGN.md §11): S == k+1 speculative candidate positions
+            per slot against the paged cache; ``pos`` [B] is each window's
+            first position. The returned "cache" is NOT the updated pools
+            but each layer's fresh window K/V (or latents) — the caller
+            commits only the accepted prefix via `commit_verify_window`.
     """
     compute_dtype = jnp.dtype(cfg.dtype)
     x = _embed_tokens(params, inputs, cfg, compute_dtype)
     B, S = x.shape[0], x.shape[-2]
 
     positions = inputs.get("positions")
-    if positions is None and mode != "decode":
+    if positions is None and mode not in ("decode", "verify"):
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
                                      (B, S))
         if cfg.mrope_sections is not None:

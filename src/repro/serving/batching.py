@@ -65,7 +65,7 @@ import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
-from repro.serving import engine, paged_cache
+from repro.serving import engine, paged_cache, speculative
 
 
 @dataclasses.dataclass
@@ -107,11 +107,26 @@ class SchedulerMetrics:
     blocks_in_use: int = 0           # gauge: pool blocks held right now
     peak_blocks_in_use: int = 0      # high-water mark of the pool
     peak_active_slots: int = 0       # max concurrently-decoding requests
+    # speculative-decoding counters (zero when spec_k == 0)
+    drafted: int = 0                 # draft tokens submitted to verify
+    accepted: int = 0                # draft tokens accepted by the target
 
     @property
     def prefix_hit_rate(self) -> float:
         """Fraction of prefilled prompt tokens backed by shared blocks."""
         return self.prefix_hit_tokens / max(self.prefill_tokens, 1)
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of drafted tokens the target model accepted."""
+        return self.accepted / max(self.drafted, 1)
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Decode tokens emitted per active slot-step — the speculative
+        win's currency: exactly 1.0 for plain decode, 1 + accepted drafts
+        per slot-step with verification."""
+        return self.decode_tokens / max(self.active_slot_steps, 1)
 
     @property
     def occupancy(self) -> float:
@@ -137,6 +152,8 @@ class SchedulerMetrics:
         d["prefill_padding_overhead"] = self.prefill_padding_overhead
         d["mean_queue_wait_steps"] = self.mean_queue_wait_steps
         d["prefix_hit_rate"] = self.prefix_hit_rate
+        d["accept_rate"] = self.accept_rate
+        d["tokens_per_step"] = self.tokens_per_step
         return d
 
 
@@ -158,6 +175,15 @@ class ContinuousBatcher:
     by content (disabled for sliding-window rings, whose blocks are
     overwritten cyclically). ``temperature`` / ``top_k`` / ``seed`` select
     per-slot sampling (0.0 = exact greedy, the default).
+
+    ``spec_k > 0`` turns on speculative decoding (DESIGN.md §11, paged
+    cache only — rollback rides the block machinery): each step the
+    ``drafter`` (default `speculative.NgramDrafter`) proposes up to
+    ``spec_k`` tokens per slot from the slot's own history, one
+    ``engine.verify_step`` scores all k+1 window positions, and the slot
+    advances by 1 + accepted tokens. Greedy streams are bitwise the
+    non-speculative ones; sampled streams match too because the verify
+    columns draw with the same (uid, token-index)-folded keys.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
@@ -169,7 +195,8 @@ class ContinuousBatcher:
                  cache_kind: str = "dense", block_size: int = 16,
                  n_blocks: Optional[int] = None, reserve_blocks: int = 1,
                  prefix_sharing: bool = True,
-                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 spec_k: int = 0, drafter=None):
         if cfg.n_codebooks:
             raise ValueError("codebook (audio) archs need [n_cb, S] prompts; "
                              "drive engine.generate directly")
@@ -245,6 +272,26 @@ class ContinuousBatcher:
         self._decode = jax.jit(
             lambda p, c, t, pos, tab, u, n: self._decode_step(
                 p, c, t, pos, tab, u, n))
+        self.spec_k = int(spec_k)
+        self.drafter = drafter
+        if self.spec_k:
+            if not self.paged:
+                raise ValueError(
+                    "speculative decoding (spec_k > 0) requires "
+                    "cache_kind='paged': rejected-window rollback rides "
+                    "the block machinery (DESIGN.md §11)")
+            if self.ring_len is not None and self.spec_k + 1 > self.ring_len:
+                raise ValueError(
+                    f"verify window {self.spec_k + 1} exceeds the sliding-"
+                    f"window ring ({self.ring_len}); lower spec_k")
+            if self.drafter is None:
+                self.drafter = speculative.NgramDrafter()
+            self._verify = jax.jit(
+                lambda p, c, t, pos, tab, dl, u, n: engine.verify_step(
+                    p, c, t, pos, tab, dl, u, n, self.cfg,
+                    ring_len=self.ring_len, temperature=self.temperature,
+                    top_k=self.top_k, base_key=self._base_key,
+                    backend=self.backend))
 
     # -- jitted per-slot-position decode: positions differ per slot --------
     def _decode_step(self, params, cache, token, pos_vec, tables, uids,
@@ -407,18 +454,17 @@ class ContinuousBatcher:
                                    deque()).appendleft(req)
         self.metrics.preemptions += 1
 
-    def _prepare_paged_decode(self) -> None:
-        """Before a decode step: make every active slot's next write target
-        exist and be private. Growth allocates the next block when the
-        position crosses a block boundary (preempting on exhaustion);
-        copy-on-write copies a shared block before it is written (only
-        reachable via forked tables — prompt sharing never covers the
-        write frontier)."""
-        for s in range(self.n_slots):
-            req = self.slots[s]
-            if req is None:
-                continue
-            p = int(self.pos[s])
+    def _ensure_write_targets(self, s: int, n_positions: int) -> None:
+        """Make slot ``s``'s next ``n_positions`` write targets (positions
+        pos..pos+n_positions-1) exist and be private. Growth allocates the
+        next block when a position crosses a block boundary (preempting the
+        youngest request on exhaustion); copy-on-write copies a shared
+        block before it is written (only reachable via forked tables —
+        prompt sharing never covers the write frontier). The single
+        protocol for plain decode (n_positions == 1) and speculative
+        verify windows alike."""
+        for j in range(n_positions):
+            p = int(self.pos[s]) + j
             slot = p % self.ring_len if self.ring_len is not None else p
             logical = slot // self.block_size
             while True:
@@ -432,7 +478,13 @@ class ContinuousBatcher:
                 self.cache = transformer.copy_cache_block(
                     self.cfg, self.cache, *cow)
                 self.metrics.cow_copies += 1
-            self._table_arr[s] = self.tables[s].padded(self.max_blocks)
+        self._table_arr[s] = self.tables[s].padded(self.max_blocks)
+
+    def _prepare_paged_decode(self) -> None:
+        """Before a decode step: one private write target per active slot."""
+        for s in range(self.n_slots):
+            if self.slots[s] is not None:
+                self._ensure_write_targets(s, 1)
 
     def _check_done(self, req: Request, slot: int, tok: int,
                     finished: Dict[int, List[int]]) -> None:
@@ -598,27 +650,133 @@ class ContinuousBatcher:
             jnp.asarray(block_map), jnp.asarray(lens))
         return logits
 
-    def step(self) -> Dict[int, List[int]]:
-        """Admit + decode one token for all active slots. Returns finished."""
+    # -- speculative decoding (DESIGN.md §11) -------------------------------
+    def _draft_cap(self, req: Request, slot: int) -> int:
+        """Largest useful draft length for this slot: the window must fit
+        the cache (positions pos..pos+L stay under max_len and inside the
+        ring) and the request's remaining token budget (emitting more than
+        the budget would be truncated anyway)."""
+        cap = min(self.spec_k,
+                  self.max_len - 1 - int(self.pos[slot]),
+                  req.max_new_tokens - len(req.generated) - 1)
+        if self.ring_len is not None:
+            cap = min(cap, self.ring_len - 1)
+        return max(cap, 0)
+
+    def _window_new_blocks(self, s: int, n_positions: int) -> int:
+        """Pool blocks slot ``s`` would have to allocate to cover positions
+        pos..pos+n_positions-1 beyond its current table."""
+        need = 0
+        for j in range(n_positions):
+            p = int(self.pos[s]) + j
+            slot = p % self.ring_len if self.ring_len is not None else p
+            need = max(need, slot // self.block_size + 1)
+        return max(0, need - len(self.tables[s].blocks))
+
+    def _stage_spec(self) -> Dict[int, np.ndarray]:
+        """Draft for every active slot, then make the whole verify window's
+        write targets exist and be private (`_ensure_write_targets` over
+        the staged draft length + 1).
+
+        Speculation must be strictly non-harmful under memory pressure: the
+        window's FIRST position keeps plain decode's guarantee (growth may
+        preempt the youngest request — the step cannot proceed without it),
+        but the draft tail is trimmed to the blocks obtainable from the
+        free list, so a maybe-rejected draft never evicts committed work
+        to fund its pages."""
+        staged: Dict[int, np.ndarray] = {}
+        budget = self.pool.available
+        for s in range(self.n_slots):
+            req = self.slots[s]
+            if req is None:
+                continue
+            cap = self._draft_cap(req, s)
+            d = np.empty(0, np.int64)
+            if cap > 0:
+                d = np.asarray(self.drafter.propose(self._full_tokens(req),
+                                                    cap),
+                               dtype=np.int64)[:cap]
+            base_new = self._window_new_blocks(s, 1)
+            L = len(d)
+            while L > 0 and (self._window_new_blocks(s, L + 1)
+                             - base_new) > max(budget - base_new, 0):
+                L -= 1
+            staged[s] = d[:L]
+            budget -= self._window_new_blocks(s, L + 1)
+        for s in range(self.n_slots):
+            if self.slots[s] is not None:
+                self._ensure_write_targets(s, len(staged.get(s, ())) + 1)
+        return staged
+
+    def _rollback_spec_blocks(self, s: int) -> None:
+        """Roll rejected window pages back to the pool: free table blocks
+        past the committed frontier. Their contents were never dirtied —
+        `engine.verify_step` redirects rejected positions to the trash
+        block — so this is pure bookkeeping and leaves the pool
+        invariant-clean."""
+        if self.ring_len is not None:
+            return                  # ring tables are cyclic and capped
+        tbl = self.tables[s]
+        keep = self.pool.blocks_for(int(self.pos[s]))
+        while len(tbl.blocks) > keep:
+            self.pool.decref(tbl.blocks.pop())
+        self._table_arr[s] = tbl.padded(self.max_blocks)
+
+    def _spec_step(self, active: List[int], staged: Dict[int, np.ndarray],
+                   finished: Dict[int, List[int]]) -> None:
+        """One verify step over all active slots: window column 0 is the
+        slot's last token, columns 1..L its drafts. Emitted tokens replay
+        the baseline loop one at a time (same stop/budget/max_len priority
+        order), so a stop token mid-window truncates exactly where the
+        non-speculative stream would have stopped."""
         m = self.metrics
-        finished: Dict[int, List[int]] = {}
-        t0 = time.monotonic()
-        self._admit(finished)
-        m.admit_time_s += time.monotonic() - t0
-        if self.paged:
-            # Growth / copy-on-write / preemption happen before the step,
-            # so the jitted decode sees fully-valid tables.
-            self._prepare_paged_decode()
-            m.blocks_in_use = self.pool.blocks_in_use
-            m.peak_blocks_in_use = max(m.peak_blocks_in_use, m.blocks_in_use)
-        active = [s for s in range(self.n_slots) if self.slots[s] is not None]
-        m.steps += 1
-        m.slot_steps += self.n_slots
-        m.active_slot_steps += len(active)
-        m.peak_active_slots = max(m.peak_active_slots, len(active))
-        if not active:
-            return finished
-        t0 = time.monotonic()
+        W = self.spec_k + 1
+        tokens = np.zeros((self.n_slots, W), np.int64)
+        tokens[:, 0] = self.last_token
+        draft_lens = np.zeros(self.n_slots, np.int32)
+        uids_np = np.zeros(self.n_slots, np.uint32)
+        counts_np = np.zeros(self.n_slots, np.uint32)
+        for s in active:
+            req = self.slots[s]
+            d = staged.get(s, np.empty(0, np.int64))
+            tokens[s, 1:1 + len(d)] = d
+            draft_lens[s] = len(d)
+            uids_np[s] = req.uid
+            counts_np[s] = len(req.generated)
+            m.drafted += len(d)
+        tgt, n_acc, self.cache = self._verify(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(self.pos), jnp.asarray(self._table_arr),
+            jnp.asarray(draft_lens), jnp.asarray(uids_np),
+            jnp.asarray(counts_np))
+        tgt = np.asarray(tgt)
+        n_acc = np.asarray(n_acc)
+        for s in active:
+            req = self.slots[s]
+            a = int(n_acc[s])
+            emitted = 0
+            for t in tgt[s, :a + 1]:
+                t = int(t)
+                req.generated.append(t)
+                self.pos[s] += 1
+                self.last_token[s] = t
+                emitted += 1
+                m.decode_tokens += 1
+                self._check_done(req, s, t, finished)
+                if req.done:
+                    break
+            # Credit only drafts that became output (the bonus token is not
+            # a draft): a stop token mid-window discards the accepted tail,
+            # so accept_rate stays an emitted-throughput quantity and
+            # decode_tokens >= accepted holds by construction.
+            m.accepted += max(emitted - 1, 0)
+            if not req.done:
+                self._rollback_spec_blocks(s)
+
+    def _plain_decode_step(self, active: List[int],
+                           finished: Dict[int, List[int]]) -> None:
+        """One ordinary batched decode token for every active slot."""
+        m = self.metrics
         tokens = jnp.asarray(self.last_token[:, None])
         pos_vec = jnp.asarray(self.pos)
         uids = counts = None
@@ -633,7 +791,6 @@ class ContinuousBatcher:
         tok, self.cache = self._decode(self.params, self.cache, tokens,
                                        pos_vec, tables, uids, counts)
         nxt = np.asarray(tok)
-        m.decode_time_s += time.monotonic() - t0
         m.decode_tokens += len(active)
         for s in active:
             req = self.slots[s]
@@ -641,6 +798,41 @@ class ContinuousBatcher:
             self.pos[s] += 1
             self.last_token[s] = int(nxt[s])
             self._check_done(req, s, int(nxt[s]), finished)
+
+    def step(self) -> Dict[int, List[int]]:
+        """Admit + decode one token for all active slots (1 + accepted
+        drafts with ``spec_k``). Returns finished."""
+        m = self.metrics
+        finished: Dict[int, List[int]] = {}
+        t0 = time.monotonic()
+        self._admit(finished)
+        m.admit_time_s += time.monotonic() - t0
+        staged: Dict[int, np.ndarray] = {}
+        if self.paged:
+            # Growth / copy-on-write / preemption happen before the step,
+            # so the jitted decode sees fully-valid tables.
+            if self.spec_k:
+                staged = self._stage_spec()
+            else:
+                self._prepare_paged_decode()
+            m.blocks_in_use = self.pool.blocks_in_use
+            m.peak_blocks_in_use = max(m.peak_blocks_in_use, m.blocks_in_use)
+        active = [s for s in range(self.n_slots) if self.slots[s] is not None]
+        m.steps += 1
+        m.slot_steps += self.n_slots
+        m.active_slot_steps += len(active)
+        m.peak_active_slots = max(m.peak_active_slots, len(active))
+        if not active:
+            return finished
+        t0 = time.monotonic()
+        if self.spec_k and any(len(staged.get(s, ())) for s in active):
+            self._spec_step(active, staged, finished)
+        else:
+            # No drafts anywhere (or spec off): ordinary one-token decode —
+            # the drafter contract's degradation path, at window width 1
+            # instead of a wasted (k+1)-wide verify.
+            self._plain_decode_step(active, finished)
+        m.decode_time_s += time.monotonic() - t0
         if self.paged:
             # refresh after completions freed their tables (the pre-decode
             # sample above is the high-water mark)

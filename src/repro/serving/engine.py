@@ -10,7 +10,6 @@ lowers for the decode_* shapes.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -149,6 +148,61 @@ def serve_step(params, cache, token: jax.Array, pos: jax.Array,
         params, {"tokens": token}, cfg, mode="decode", cache=cache, pos=pos,
         backend=backend)
     return logits[:, -1] if not cfg.n_codebooks else logits[:, 0], cache
+
+
+def verify_step(params, cache, tokens: jax.Array, pos_vec: jax.Array,
+                tables: jax.Array, draft_lens: jax.Array,
+                uids: Optional[jax.Array], counts: Optional[jax.Array],
+                cfg: ModelConfig, *, ring_len: Optional[int] = None,
+                temperature: float = 0.0, top_k: int = 0, base_key=None,
+                backend: str = "auto"
+                ) -> Tuple[jax.Array, jax.Array, Any]:
+    """Speculative verification: score W = k+1 candidate positions per slot
+    in ONE forward over the paged cache, accept the longest matching draft
+    prefix, and commit only accepted positions' K/V (DESIGN.md §11).
+
+    tokens:     [B, W] — column 0 is each slot's committed last token, the
+                rest its drafted candidates (right-padded past draft_lens)
+    pos_vec:    [B] absolute position of window column 0
+    tables:     [B, blocks_per_seq] paged block tables
+    draft_lens: [B] real drafts per slot (0 <= L <= W-1); acceptance never
+                runs past a slot's own drafts
+    uids/counts: per-slot sampling-key folds (ignored for greedy) — column
+                j draws with the key for token index counts + j, i.e. the
+                EXACT key the non-speculative loop would fold for that
+                token, so sampled streams match the baseline bitwise and
+                replay across preempt/resume.
+
+    Returns (tgt [B, W], n_accept [B], cache): ``tgt[:, j]`` is the target
+    model's token after window prefix 0..j (greedy argmax, or the folded-
+    key sample); ``n_accept`` counts accepted drafts a, so the slot emits
+    ``tgt[:, :a+1]`` — the a matching drafts plus the bonus token — and
+    its next position is ``pos + a + 1``. Rejected window positions are
+    redirected to the trash block by `transformer.commit_verify_window`.
+    """
+    B, W = tokens.shape
+    logits, fresh, _ = transformer.forward(
+        params, {"tokens": tokens}, cfg, mode="verify", cache=cache,
+        pos=pos_vec, block_tables=tables, ring_len=ring_len,
+        backend=backend)                                 # logits [B, W, V]
+    if temperature == 0.0:
+        tgt = jnp.argmax(logits, axis=-1)
+    else:
+        counts_w = (counts[:, None]
+                    + jnp.arange(W, dtype=jnp.uint32)[None, :])
+        keys = fold_slot_keys(base_key,
+                              jnp.repeat(uids, W), counts_w.reshape(-1))
+        tgt = sample_per_slot(logits.reshape(B * W, -1), keys,
+                              temperature=temperature,
+                              top_k=top_k).reshape(B, W)
+    match = ((tokens[:, 1:] == tgt[:, :-1])
+             & (jnp.arange(W - 1)[None, :] < draft_lens[:, None]))
+    n_accept = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    commit = jnp.arange(W)[None, :] <= n_accept[:, None]
+    cache = transformer.commit_verify_window(cfg, cache, fresh, tables,
+                                             pos_vec, commit,
+                                             ring_len=ring_len)
+    return tgt, n_accept, cache
 
 
 def sample(logits: jax.Array, key, *, temperature: float = 0.0,

@@ -1,0 +1,179 @@
+"""Speculative decoding drafters (DESIGN.md §11).
+
+Flash-LLM's §3 observation — decode-time skinny GEMMs are bandwidth-bound,
+so Tensor-Core compute is nearly free — cuts two ways: the same asymmetry
+that makes Load-as-Sparse/Compute-as-Dense win also makes *speculative
+decoding* win. Verifying k drafted tokens in one forward widens every
+weight GEMM from N = B to N = B·(k+1) at almost the same weight-streaming
+cost (the schedule selector sees the true N per call, DESIGN.md §9), so an
+accepted draft converts the sparsity-funded bandwidth headroom directly
+into tokens per step.
+
+This module holds the *drafter* side: a drafter proposes up to ``k``
+candidate continuation tokens from a request's own token history
+(prompt + generated so far). Proposals never affect correctness — the
+batched verification (`engine.verify_step`) accepts only drafts that match
+what the target model itself would emit, greedy or sampled — they only set
+the accept rate, hence the tokens-per-step gain.
+
+Drafter contract: ``propose(tokens, k) -> np.ndarray`` of at most ``k``
+token ids (may be empty — the step then degrades to ordinary one-token
+decode). Called host-side per active slot per step with the slot's full
+history; must be cheap relative to a model step.
+
+Built-ins:
+
+* :class:`NgramDrafter` — prompt-lookup / n-gram matching over the
+  request's own history (no second model): find the most recent earlier
+  occurrence of the history's longest suffix n-gram and propose the tokens
+  that followed it. Free, and strong on repetitive traffic (code,
+  templated text, self-repeating generations).
+* :class:`DraftModelDrafter` — an optional small-config draft model
+  sharing the tokenizer: a greedy k-token rollout of the draft model seeds
+  the window. Costs draft-model steps; wins when the small model tracks
+  the large one.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.serving import engine
+
+
+class NgramDrafter:
+    """Prompt-lookup drafting: propose the continuation of the most recent
+    earlier occurrence of the history's longest matching suffix n-gram.
+
+    ``max_ngram`` .. ``min_ngram`` is the suffix ladder (longer matches
+    first — a longer pinned context makes the continuation likelier to be
+    what the target model repeats); the first ladder rung with an earlier
+    occurrence wins. O(len(history) · ngram) per call, vectorized.
+    """
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError(f"need 1 <= min_ngram <= max_ngram, got "
+                             f"({min_ngram}, {max_ngram})")
+        self.max_ngram = max_ngram
+        self.min_ngram = min_ngram
+
+    def propose(self, tokens: np.ndarray, k: int) -> np.ndarray:
+        n = len(tokens)
+        if k <= 0 or n < self.min_ngram + 1:
+            return np.empty(0, np.int64)
+        for g in range(min(self.max_ngram, n - 1), self.min_ngram - 1, -1):
+            suffix = tokens[n - g:]
+            # windows[i] == tokens[i:i+g]; candidates are starts i < n-g so
+            # the continuation begins strictly before the suffix itself.
+            windows = np.lib.stride_tricks.sliding_window_view(tokens, g)
+            hits = np.flatnonzero(
+                (windows[: n - g] == suffix[None, :]).all(axis=1))
+            if hits.size == 0:
+                continue
+            # Most recent occurrence with a full k-token continuation; on a
+            # short-period history (constant runs, repeated patterns) the
+            # very latest hit ends just before the suffix and would yield a
+            # 1-token draft, wasting the window. Fall back to the earliest
+            # hit — the longest continuation available — when none is full.
+            full = hits[hits + g + k <= n]
+            start = (int(full[-1]) if full.size else int(hits[0])) + g
+            cont = tokens[start: start + k]
+            if cont.size:
+                return np.asarray(cont, np.int64)
+        return np.empty(0, np.int64)
+
+
+class DraftModelDrafter:
+    """Draft-model drafting: greedy k-token rollout of a small model that
+    shares the target's tokenizer (vocab ids must coincide — checked).
+
+    The rollout re-prefills the slot's history each call — it keeps the
+    drafter stateless across preemption/slot reuse (no draft-side cache to
+    keep coherent) — but the whole prefill+k-step rollout is ONE jitted
+    function, compiled per (history bucket, k): pure-attention draft
+    configs right-pad the history to a power-of-two bucket (exact, by the
+    §7 argument — pads sit causally after every real position and decode
+    overwrites them before the mask exposes them), so the shape set stays
+    ~log2(max_len) · spec_k. Recurrent draft stacks degrade to exact
+    lengths (pad tokens would pollute the carried state), trading compile
+    churn for correctness — prefer attention draft configs.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, backend: str = "auto",
+                 vocab: Optional[int] = None, min_bucket: int = 8):
+        if vocab is not None and cfg.vocab != vocab:
+            raise ValueError(
+                f"draft model vocab {cfg.vocab} != target vocab {vocab}; "
+                f"speculative drafts must share the tokenizer")
+        self.params = params
+        self.cfg = cfg
+        self.backend = backend
+        self.min_bucket = min_bucket
+        self._pure_attn = all(cfg.layer_kind(i) == "attn"
+                              for i in range(cfg.n_layers))
+        self._rollouts: dict = {}       # (bucket S, k) -> jitted rollout
+
+    def _rollout_fn(self, S: int, k: int):
+        fn = self._rollouts.get((S, k))
+        if fn is not None:
+            return fn
+        import jax
+        import jax.numpy as jnp
+        from repro.models import transformer
+        cfg, backend = self.cfg, self.backend
+
+        def rollout(params, tokens, length):
+            """tokens [1, S] right-padded; length scalar; -> drafts [k]."""
+            cache = transformer.init_cache(cfg, 1, S + k)
+            logits, cache, _ = transformer.forward(
+                params, {"tokens": tokens}, cfg, mode="prefill",
+                cache=cache, backend=backend)
+            last = jnp.take_along_axis(
+                logits, (length - 1).reshape(1, 1, 1), axis=1)[:, 0]
+            tok = jnp.argmax(last, axis=-1)                 # [1]
+            out = [tok]
+            for i in range(k - 1):
+                lg, cache = engine.serve_step(params, cache, tok[:, None],
+                                              length + i, cfg,
+                                              backend=backend)
+                tok = jnp.argmax(lg, axis=-1)
+                out.append(tok)
+            return jnp.stack(out, axis=1)[0]
+        fn = jax.jit(rollout)
+        self._rollouts[(S, k)] = fn
+        return fn
+
+    def propose(self, tokens: np.ndarray, k: int) -> np.ndarray:
+        if k <= 0:
+            return np.empty(0, np.int64)
+        import jax.numpy as jnp
+        n = len(tokens)
+        S = n
+        if self._pure_attn:
+            S = self.min_bucket
+            while S < n:
+                S *= 2
+        padded = np.zeros(S, np.int64)
+        padded[:n] = tokens
+        drafts = self._rollout_fn(S, k)(
+            self.params, jnp.asarray(padded[None]),
+            jnp.asarray(n, jnp.int32))
+        return np.asarray(drafts).astype(np.int64)
+
+
+def make_drafter(kind: str, *, max_ngram: int = 3,
+                 draft_params=None, draft_cfg: Optional[ModelConfig] = None,
+                 vocab: Optional[int] = None, backend: str = "auto"):
+    """CLI/config factory: ``"ngram"`` or ``"model"`` (needs draft params)."""
+    if kind == "ngram":
+        return NgramDrafter(max_ngram=max_ngram)
+    if kind == "model":
+        if draft_params is None or draft_cfg is None:
+            raise ValueError("drafter 'model' needs draft_params + draft_cfg")
+        return DraftModelDrafter(draft_params, draft_cfg, vocab=vocab,
+                                 backend=backend)
+    raise ValueError(f"unknown drafter kind {kind!r} (ngram|model)")

@@ -10,7 +10,7 @@ reproduces the exact stream, which the fault-tolerance tests rely on.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict
 
 import numpy as np
 

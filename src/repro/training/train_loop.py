@@ -8,8 +8,7 @@ so pjit shards it with the rules in ``repro.distributed.sharding``.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,13 +11,10 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro import configs
 from repro.distributed import sharding
-from repro.launch import mesh as mesh_mod
 from repro.launch import specs as specs_mod
 
 

@@ -194,7 +194,6 @@ def test_spmm_equals_dense_gemm_on_same_matrix():
 
 def test_moe_experts_with_tiled_csl_weights():
     """Stacked (per-expert) Tiled-CSL weights through the MoE block."""
-    import dataclasses
     from repro import configs
     from repro.core import pruning
     from repro.models import moe, transformer

@@ -113,7 +113,6 @@ def test_pool_fork_copy_on_write():
 def test_copy_cache_block_device():
     cfg = configs.smoke("tinyllama_1_1b")
     cache = transformer.init_paged_cache(cfg, 4, 8)
-    leaf = jax.tree.leaves(cache)[0]
     cache = jax.tree.map(
         lambda f: f.at[(slice(None),) * transformer.cache_slot_axis(cfg)
                        + (1,)].set(1.0), cache)

@@ -1,6 +1,5 @@
 """Roofline model + HLO collective parser unit tests."""
 
-import numpy as np
 import pytest
 
 from repro.core import roofline

@@ -11,10 +11,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import configs
 from repro.core import pruning, sparse_linear, tiled_csl
 from repro.kernels import ops
 from repro.models import attention, layers
-from repro import configs
 
 
 def _enc(rng, m, k, s=0.7):

@@ -1,0 +1,257 @@
+"""Speculative decoding: drafters, verify/commit, parity, rollback, metrics.
+
+DESIGN.md §11. The subsystem contract mirrors the paged cache's: same
+prompts + same seeds through the speculative and plain paths produce
+IDENTICAL token streams — greedy bitwise, and sampled bitwise too (verify
+columns draw with the same (uid, token-index)-folded keys) — while the
+pool stays invariant-clean through accepted-prefix commits and
+rejected-page rollback.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.serving import batching, speculative
+
+
+def _prompts(cfg, lengths, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, L).astype(np.int64) for L in lengths]
+
+
+def _run(params, cfg, prompts, max_new, **kw):
+    b = batching.ContinuousBatcher(params, cfg, **kw)
+    for uid, p in enumerate(prompts):
+        b.submit(uid, p, max_new_tokens=max_new)
+    out = b.run_to_completion(max_steps=2000)
+    assert len(out) == len(prompts)
+    if b.paged:
+        b.pool.check_invariants()
+        assert b.pool.blocks_in_use == 0            # no leaked blocks
+    return b, out
+
+
+# ---------------------------------------------------------------------------
+# drafters
+# ---------------------------------------------------------------------------
+
+def test_ngram_drafter_basic():
+    d = speculative.NgramDrafter(max_ngram=3)
+    hist = np.array([5, 6, 7, 8, 9, 5, 6, 7], np.int64)
+    # suffix 3-gram (5,6,7) recurs at the start; continuation follows it
+    np.testing.assert_array_equal(d.propose(hist, 2), [8, 9])
+    # nothing recurs -> no draft
+    assert d.propose(np.arange(10, dtype=np.int64), 4).size == 0
+    assert d.propose(np.array([1], np.int64), 4).size == 0
+    assert d.propose(hist, 0).size == 0
+    with pytest.raises(ValueError, match="min_ngram"):
+        speculative.NgramDrafter(max_ngram=2, min_ngram=3)
+
+
+def test_ngram_drafter_constant_run_fills_window():
+    """A constant run must draft k tokens, not 1: the very latest suffix
+    occurrence ends just before the suffix and would truncate the draft
+    (regression — the fallback picks an occurrence with a full k-token
+    continuation)."""
+    d = speculative.NgramDrafter()
+    hist = np.concatenate([np.arange(40, 46), [7] * 7]).astype(np.int64)
+    np.testing.assert_array_equal(d.propose(hist, 4), [7, 7, 7, 7])
+    # short-period cycle drafts the cycle, in phase
+    cyc = np.tile([3, 1, 4], 5).astype(np.int64)
+    np.testing.assert_array_equal(d.propose(cyc, 5), [3, 1, 4, 3, 1])
+
+
+def test_draft_model_drafter_self_draft_and_vocab_check():
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    d = speculative.DraftModelDrafter(params, cfg, vocab=cfg.vocab)
+    hist = _prompts(cfg, [6])[0]
+    got = d.propose(hist, 3)
+    assert got.shape == (3,) and got.dtype == np.int64
+    # self-draft is the target's own greedy continuation
+    import jax.numpy as jnp
+    from repro.serving import engine
+    want = np.asarray(engine.generate(params, jnp.asarray(hist[None]), cfg,
+                                      max_new_tokens=3, max_len=16))[0, 6:]
+    np.testing.assert_array_equal(got, want)
+    with pytest.raises(ValueError, match="tokenizer"):
+        speculative.DraftModelDrafter(params, cfg, vocab=cfg.vocab + 1)
+    with pytest.raises(ValueError, match="ngram|model"):
+        speculative.make_drafter("beam")
+
+
+# ---------------------------------------------------------------------------
+# configuration guards
+# ---------------------------------------------------------------------------
+
+def test_spec_requires_paged_cache():
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="paged"):
+        batching.ContinuousBatcher(params, cfg, n_slots=2, max_len=32,
+                                   spec_k=4)
+
+
+def test_spec_window_capped_by_ring():
+    cfg = dataclasses.replace(configs.smoke("tinyllama_1_1b"),
+                              local_window=4)
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="ring"):
+        batching.ContinuousBatcher(params, cfg, n_slots=2, max_len=32,
+                                   cache_kind="paged", block_size=4,
+                                   n_blocks=8, spec_k=4)
+
+
+# ---------------------------------------------------------------------------
+# greedy stream parity (the subsystem contract)
+# ---------------------------------------------------------------------------
+
+def test_spec_greedy_parity_mixed_lengths():
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, [3, 9, 14, 5], seed=1)
+    _, want = _run(params, cfg, prompts, 8, n_slots=3, max_len=32)
+    bs, got = _run(params, cfg, prompts, 8, n_slots=3, max_len=32,
+                   cache_kind="paged", block_size=8, n_blocks=16, spec_k=4)
+    assert got == want
+    assert bs.metrics.drafted > 0          # speculation actually ran
+
+
+def test_spec_greedy_parity_mla():
+    cfg = configs.smoke("minicpm3_4b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, [4, 11, 7], seed=2)
+    _, want = _run(params, cfg, prompts, 6, n_slots=2, max_len=32)
+    _, got = _run(params, cfg, prompts, 6, n_slots=2, max_len=32,
+                  cache_kind="paged", block_size=8, n_blocks=10, spec_k=3)
+    assert got == want
+
+
+def test_spec_greedy_parity_sliding_window_ring():
+    """Verify windows against a ring must not clobber still-valid older
+    residues with rejected speculative entries: decode drives every
+    request past the window wrap and the streams must stay exact."""
+    cfg = dataclasses.replace(configs.smoke("tinyllama_1_1b"),
+                              local_window=16)
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, [3, 9, 12], seed=3)
+    _, want = _run(params, cfg, prompts, 16, n_slots=2, max_len=48)
+    bs, got = _run(params, cfg, prompts, 16, n_slots=2, max_len=48,
+                   cache_kind="paged", block_size=8, n_blocks=10, spec_k=4)
+    assert got == want
+    assert bs.metrics.drafted > 0
+
+
+def test_spec_accepts_on_repetitive_stream():
+    """Repetitive prompts drive the model into short cycles the n-gram
+    drafter tracks: accepted > 0 and strictly fewer engine steps than the
+    non-speculative paged run over the same work."""
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    prompts = [np.tile(rng.integers(0, cfg.vocab, 4).astype(np.int64), 6)
+               for _ in range(2)]
+    kw = dict(n_slots=2, max_len=64, cache_kind="paged", block_size=8,
+              n_blocks=16)
+    b0, want = _run(params, cfg, prompts, 24, **kw)
+    bs, got = _run(params, cfg, prompts, 24, spec_k=4, **kw)
+    assert got == want
+    assert bs.metrics.accepted > 0
+    assert bs.metrics.steps < b0.metrics.steps
+    assert bs.metrics.tokens_per_step > 1.0
+
+
+# ---------------------------------------------------------------------------
+# rollback + pool hygiene
+# ---------------------------------------------------------------------------
+
+def test_spec_rollback_pool_invariant_clean_every_step():
+    """Rejected-window pages roll back each step: ref-counts tie out after
+    EVERY engine step, and no slot's table ever covers more than its
+    committed positions once the step settles."""
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, [3, 6, 9], seed=5)
+    b = batching.ContinuousBatcher(params, cfg, n_slots=3, max_len=32,
+                                   cache_kind="paged", block_size=4,
+                                   n_blocks=24, spec_k=4)
+    for uid, p in enumerate(prompts):
+        b.submit(uid, p, max_new_tokens=6)
+    for _ in range(200):
+        b.step()
+        b.pool.check_invariants()
+        for s in range(b.n_slots):
+            if b.slots[s] is not None:
+                assert len(b.tables[s].blocks) == \
+                    b.pool.blocks_for(int(b.pos[s]))
+        if not b.queue and all(r is None for r in b.slots):
+            break
+    assert b.pool.blocks_in_use == 0
+    assert b.metrics.completed == len(prompts)
+
+
+def test_spec_preemption_greedy_parity():
+    """A pool too small for the windows forces preempt-and-requeue; resumed
+    requests still produce the exact baseline streams."""
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, [3, 4, 5], seed=6)
+    _, want = _run(params, cfg, prompts, 12, n_slots=3, max_len=32)
+    bp, got = _run(params, cfg, prompts, 12, n_slots=3, max_len=32,
+                   cache_kind="paged", block_size=4, n_blocks=7, spec_k=3)
+    assert got == want
+    assert bp.metrics.preemptions > 0
+
+
+def test_spec_sampled_replay_across_preemption():
+    """Sampled acceptance is a pure function of (seed, uid, token index):
+    a tight pool with preemptions must replay the calm run's draws
+    identically — and both must equal the non-speculative sampled run."""
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = _prompts(cfg, [3, 4, 5], seed=7)
+    kw = dict(n_slots=3, max_len=32, temperature=0.7, top_k=16, seed=3)
+    _, plain = _run(params, cfg, prompts, 12, **kw)
+    _, calm = _run(params, cfg, prompts, 12, cache_kind="paged",
+                   block_size=8, n_blocks=24, spec_k=3, **kw)
+    bp, tight = _run(params, cfg, prompts, 12, cache_kind="paged",
+                     block_size=4, n_blocks=7, spec_k=3, **kw)
+    assert calm == plain
+    assert tight == calm
+    assert bp.metrics.preemptions > 0
+
+
+# ---------------------------------------------------------------------------
+# metrics arithmetic
+# ---------------------------------------------------------------------------
+
+def test_spec_metrics_arithmetic():
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(8)
+    prompts = [np.tile(rng.integers(0, cfg.vocab, 3).astype(np.int64), 5)
+               for _ in range(3)]
+    bs, out = _run(params, cfg, prompts, 10, n_slots=2, max_len=48,
+                   cache_kind="paged", block_size=8, n_blocks=18, spec_k=4)
+    m = bs.metrics
+    # every emitted token is the prefill's first token or a decode emission
+    assert sum(len(v) for v in out.values()) == m.admitted + m.decode_tokens
+    assert 0 <= m.accepted <= m.drafted
+    assert m.accept_rate == pytest.approx(m.accepted / max(m.drafted, 1))
+    assert m.tokens_per_step == pytest.approx(
+        m.decode_tokens / max(m.active_slot_steps, 1))
+    # each active slot-step emits the bonus token plus its accepted drafts
+    assert m.decode_tokens <= m.active_slot_steps * (bs.spec_k + 1)
+    assert m.decode_tokens >= m.accepted
+    d = m.as_dict()
+    for key in ("drafted", "accepted", "accept_rate", "tokens_per_step"):
+        assert key in d, key
+    assert d["accept_rate"] == m.accept_rate
+    # fresh metrics: rates are 0, not NaN/1.0
+    empty = batching.SchedulerMetrics()
+    assert empty.accept_rate == 0.0 and empty.tokens_per_step == 0.0

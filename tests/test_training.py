@@ -7,9 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import configs
 from repro.core import pruning
-from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.training import data as data_mod
 from repro.training import optimizer as opt_mod
@@ -126,7 +124,8 @@ def test_schedules():
 
 def test_data_stream_deterministic_and_checkpointable():
     s1 = data_mod.SyntheticLM(64, 16, 4, seed=9)
-    b1 = [s1.next_batch() for _ in range(3)]
+    for _ in range(3):
+        s1.next_batch()           # advance past the checkpoint point
     st = s1.state_dict()
     b_next = s1.next_batch()
     s2 = data_mod.SyntheticLM(64, 16, 4, seed=9)
