@@ -48,7 +48,13 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 from typing import Any, Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.analysis import contracts  # noqa: E402
 
 # (dotted path, direction, relative tolerance, absolute floor or None)
 Metric = Tuple[str, str, float, Optional[float]]
@@ -154,6 +160,23 @@ def _check_kernel_cells(base: Any, cur: Any) -> List[Row]:
                             str(bcells[name]["selected"]),
                             str(ccells[name]["selected"]), "changed",
                             "refresh the committed baseline if intended"))
+        # launch-contract gate (DESIGN.md §12): the selected schedule in
+        # BOTH runs must satisfy the kernel contracts — a baseline carrying
+        # an unlaunchable winner (stale budget table, hand-edited JSON)
+        # must fail here rather than silently re-anchor the gate.
+        for side, cell in (("baseline", bcells[name]),
+                           ("current", ccells[name])):
+            sel = cell["selected"]
+            bad = contracts.check_schedule(
+                cell["m"], cell["k"], cell["n"],
+                m_tb=sel["m_tb"], k_tb=sel["k_tb"], n_tb=sel["n_tb"],
+                split_k=sel["split_k"], sparsity=cell["sparsity"],
+                backend="pallas", path=f"{side}:{name}")
+            if bad:
+                rows.append(Row(
+                    "kernel", f"{name}.contract[{side}]", "ok",
+                    ";".join(f.rule for f in bad), "REGRESSED",
+                    bad[0].message))
     if "smoke_ok" in cur:
         rows.append(Row("kernel", "smoke_ok", True, cur["smoke_ok"],
                         "ok" if cur["smoke_ok"] else "REGRESSED",

@@ -1,0 +1,30 @@
+"""Static-analysis subsystem: kernel contracts, trace audit, AST lint.
+
+Three passes behind ``tools/check.py`` and the CI ``repro-check`` gate
+(DESIGN.md §12 catalogues the enforced invariants and rule ids):
+
+* :mod:`repro.analysis.contracts` / :mod:`repro.analysis.kernel_pass` —
+  Pallas launch contracts (KC-*): VMEM budgets, grid divisibility, the
+  16-bit loc bound, f32 accumulators, declared-out call sites. Enforced
+  inline by ``kernels.schedule`` / ``core.tiled_csl`` / the launch
+  builders, and swept statically by the pass.
+* :mod:`repro.analysis.trace_audit` — jaxpr hygiene of the jitted serving
+  steps (TA-*): host callbacks, silent bf16->f32 upcasts, compile-cache
+  budgets shared with ``tests/test_serving.py``.
+* :mod:`repro.analysis.lint` — AST rules over ``serving/``/``models/``
+  (PK-*/PY-*): PRNG-key folding discipline, traced-value branching,
+  batcher state-machine hazards.
+
+Findings/suppression model: :mod:`repro.analysis.findings`; budget
+tables: :mod:`repro.analysis.budgets`.
+"""
+
+from repro.analysis import budgets, contracts, findings  # noqa: F401
+from repro.analysis.contracts import (  # noqa: F401
+    ScheduleContractError,
+    check_schedule,
+    require_schedule,
+    require_tile_loc,
+    tile_loc_ok,
+)
+from repro.analysis.findings import RULES, Allowlist, Finding  # noqa: F401

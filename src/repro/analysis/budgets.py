@@ -1,0 +1,86 @@
+"""Shared resource-budget tables for the static checkers (DESIGN.md §12).
+
+Two tables live here so the checkers, the tests, and the CI gate read ONE
+source of truth and cannot drift:
+
+* :data:`VMEM_BUDGET_BYTES` / :func:`vmem_budget` — per-backend VMEM caps
+  the kernel contract checker (``contracts.check_schedule``, rule KC-VMEM)
+  validates launch footprints against. TPU cores have ~16 MiB of VMEM; the
+  grid pipeline double-buffers every in/out block, and the budget reserves
+  2 MiB of slack for compiler-managed temporaries, so the checkable cap is
+  14 MiB. The ``xla`` reference backend decompresses in HBM and has no
+  VMEM contract (budget ``None`` = unconstrained).
+
+* :data:`COMPILE_BUDGETS` / :func:`compile_budget` — per-entry-point
+  compile-cache-entry caps the trace auditor (rule TA-RETRACE) and
+  ``tests/test_serving.py`` both assert. The bucketed-prefill budget is
+  the DESIGN.md §7 bound: admission pads prompts to power-of-two buckets,
+  so at most ``ceil(log2(max_len))`` prefill shapes ever compile; decode
+  and verify steps are shape-static and get exactly one entry each.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+#: Per-core VMEM capacity on current TPU generations (pallas guide).
+VMEM_BYTES_PER_CORE = 16 * 2 ** 20
+
+#: Slack reserved for compiler-managed temporaries (semaphores, spills).
+VMEM_COMPILER_SLACK = 2 * 2 ** 20
+
+#: backend name -> checkable VMEM budget in bytes (None = unconstrained).
+#: ``interpret`` mirrors ``pallas`` so CPU validation rejects exactly the
+#: schedules that would fail on hardware.
+VMEM_BUDGET_BYTES: Dict[str, Optional[int]] = {
+    "pallas": VMEM_BYTES_PER_CORE - VMEM_COMPILER_SLACK,
+    "interpret": VMEM_BYTES_PER_CORE - VMEM_COMPILER_SLACK,
+    "xla": None,
+}
+
+
+def vmem_budget(backend: str) -> Optional[int]:
+    """Checkable VMEM budget for ``backend``; None means unconstrained.
+
+    Unknown backends get the strict pallas budget — a new backend must
+    opt *out* of the VMEM contract explicitly, not fall through it.
+    """
+    return VMEM_BUDGET_BYTES.get(backend, VMEM_BUDGET_BYTES["pallas"])
+
+
+def prefill_compile_budget(max_len: int, min_bucket: int = 8) -> int:
+    """Compile-entry cap for bucketed prefill: ``ceil(log2(max_len))``,
+    floor 1 — the number of power-of-two length buckets admission can emit
+    (``engine.length_buckets``)."""
+    if max_len < 1:
+        raise ValueError(f"max_len must be >= 1, got {max_len}")
+    return max(1, math.ceil(math.log2(max_len)))
+
+
+#: entry-point name -> compile-entry budget. Callables take the keyword
+#: parameters the entry needs (e.g. ``max_len``); ints are flat caps.
+COMPILE_BUDGETS = {
+    # admission-bucketed prefill: one compile per power-of-two bucket
+    "batcher_prefill": prefill_compile_budget,
+    "engine_prefill_buckets": prefill_compile_budget,
+    # shape-static step functions: exactly one compiled shape each
+    "batcher_decode": 1,
+    "engine_decode_step": 1,
+    "batcher_verify": 1,
+    "engine_verify_step": 1,
+    "spmm_dispatch": 1,
+}
+
+
+def compile_budget(entry: str, **params) -> int:
+    """Max jit-cache entries entry point ``entry`` may accumulate.
+
+    Trace-audit rule TA-RETRACE and the ``test_serving`` compile-count
+    assertions both read this table.
+    """
+    if entry not in COMPILE_BUDGETS:
+        raise KeyError(f"no compile budget registered for entry {entry!r}; "
+                       f"known: {sorted(COMPILE_BUDGETS)}")
+    b = COMPILE_BUDGETS[entry]
+    return b(**params) if callable(b) else int(b)

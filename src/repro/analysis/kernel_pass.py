@@ -1,0 +1,99 @@
+"""Kernel contract pass: selector sweep + kernel-source checks.
+
+Two halves (DESIGN.md §12):
+
+* **Selector audit** — for canonical serving shapes, run the analytic
+  selector (``schedule.select``) and validate its pick with
+  ``contracts.check_schedule`` (rules KC-VMEM/KC-LOC/KC-GRID/KC-SPLIT/
+  KC-NTB): selection must only ever emit launchable schedules. The full
+  candidate ladder is swept too, recording how many raw candidates the
+  contract filter rejects — those are *expected* rejections (the ladder
+  over-generates; ``select`` filters), reported as stats, not findings.
+  A selected-but-invalid schedule, however, is a finding: it means the
+  filter inside ``select`` has a hole the cache could persist.
+
+* **Source audit** — AST checks over the kernel and model files: every
+  VMEM scratch / ``preferred_element_type`` is f32 (KC-ACC), every
+  ``sparse_linear.linear*`` call site declares its out dim (KC-OUT).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis import contracts
+from repro.analysis.findings import Finding, apply_inline_ignores
+
+#: (label, m, k, n, sparsity, group) — decode/prefill/verify/SwiGLU cells
+#: mirroring benchmarks.kernel_bench.SCHEDULE_CELLS plus grouped + verify
+#: widths, so the audit covers every kernel entry family the engine
+#: dispatches (single-pass, split-K, grouped, split-K grouped).
+CANONICAL_SHAPES: Tuple[Tuple[str, int, int, int, float, int], ...] = (
+    ("decode", 8192, 8192, 8, 0.8, 1),
+    ("verify", 8192, 8192, 32, 0.8, 1),
+    ("prefill", 8192, 8192, 2048, 0.8, 1),
+    ("swiglu_decode", 8192, 8192, 8, 0.8, 2),
+    ("swiglu_prefill", 8192, 8192, 2048, 0.8, 2),
+    ("skinny_90", 4096, 4096, 8, 0.9, 1),
+)
+
+
+def audit_selector(shapes: Sequence[Tuple[str, int, int, int, float, int]]
+                   = CANONICAL_SHAPES, *, backend: str = "pallas"
+                   ) -> Tuple[List[Finding], Dict[str, int]]:
+    """Validate the selector's picks; returns (findings, stats)."""
+    from repro.kernels import schedule
+
+    findings: List[Finding] = []
+    stats = {"cells": 0, "candidates": 0, "filtered": 0}
+    for label, m, k, n, sparsity, group in shapes:
+        stats["cells"] += 1
+        sel = schedule.select(m, k, n, sparsity, group=group,
+                              backend=backend, cache=False)
+        findings.extend(contracts.check_schedule(
+            m, k, n, m_tb=sel.m_tb, k_tb=sel.k_tb, n_tb=sel.n_tb,
+            split_k=sel.split_k, group=group, sparsity=sparsity,
+            backend=backend,
+            path=f"select:{label}(m={m},k={k},n={n},g={group})"))
+        for cand in schedule.candidates(m, k, n):
+            stats["candidates"] += 1
+            bad = contracts.check_schedule(
+                m, k, n, m_tb=cand.m_tb, k_tb=cand.k_tb, n_tb=cand.n_tb,
+                split_k=cand.split_k, group=group, sparsity=sparsity,
+                backend=backend, path="ladder")
+            if bad:
+                stats["filtered"] += 1
+    return findings, stats
+
+
+def audit_sources(repo_root: Optional[str] = None) -> List[Finding]:
+    """KC-ACC over the kernel files, KC-OUT over the model files."""
+    if repo_root is None:
+        # src/repro/analysis/kernel_pass.py -> repo root is 4 dirs up
+        repo_root = os.path.abspath(os.path.join(
+            os.path.dirname(__file__), "..", "..", ".."))
+    kern, models = contracts.kernel_source_files(repo_root)
+    findings: List[Finding] = []
+    sources: Dict[str, str] = {}
+    for path in kern:
+        with open(path) as f:
+            src = f.read()
+        found = contracts.check_kernel_source(path, src)
+        findings.extend(found)
+        if found:
+            sources[found[0].path] = src
+    for path in models:
+        with open(path) as f:
+            src = f.read()
+        found = contracts.check_declared_out(path, src)
+        findings.extend(found)
+        if found:
+            sources[found[0].path] = src
+    return apply_inline_ignores(findings, sources)
+
+
+def run_kernel_pass(repo_root: Optional[str] = None
+                    ) -> Tuple[List[Finding], Dict[str, int]]:
+    sel_findings, stats = audit_selector()
+    return sel_findings + audit_sources(repo_root), stats

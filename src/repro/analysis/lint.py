@@ -1,0 +1,275 @@
+"""AST lint over ``serving/`` and ``models/``: PRNG-key discipline,
+traced-value branching, and batcher state-machine hazards (DESIGN.md §12).
+
+PRNG rules encode the serving key contract: every sampled token's key must
+be a pure function of ``(seed, request uid, token index)`` — derived via
+``engine.fold_slot_keys`` — so streams replay bitwise across admission
+order, slot assignment, and preempt/resume. Two anti-patterns break that:
+
+PK-FRESH  ``jax.random.PRNGKey(...)`` inside a loop body in ``serving/``:
+          a per-iteration fresh key is either constant (same seed every
+          step) or wall-clock-derived (unreplayable). Keys are created
+          once, in ``__init__`` or at an API boundary, then folded.
+PK-SPLIT  ``jax.random.split`` inside a loop body in ``serving/``: a
+          split chain makes token i's key depend on the full scheduling
+          history, so a preempted-and-resumed request re-draws different
+          tokens. Fold by ``(uid, token index)`` instead.
+PK-REUSE  one key variable consumed by two or more ``jax.random`` draws
+          without being rebound: the draws are perfectly correlated.
+          (Applies everywhere; draw = categorical/normal/uniform/....)
+
+Generic hygiene (both trees):
+
+PY-TRACED-BRANCH  Python ``if``/``while`` whose test references ``jnp.`` /
+          ``jax.numpy`` / ``jax.lax`` — under jit this raises a
+          ``TracerBoolConversionError`` at best, silently specializes at
+          worst. Use ``jnp.where`` / ``lax.cond``.
+PY-MUT-DEFAULT    mutable default argument (shared across calls).
+PY-DICT-MUT       a dict/list mutated (``del``/``pop``/item-assign) inside
+          a ``for`` iterating it directly — RuntimeError at runtime.
+
+Suppression: inline ``# repro: ignore[RULE]`` on (or directly above) the
+flagged line — see ``analysis.findings``.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.findings import Finding, apply_inline_ignores
+
+#: jax.random draw functions whose first/key argument consumes randomness.
+DRAW_FNS = {
+    "categorical", "normal", "uniform", "bernoulli", "gumbel", "randint",
+    "truncated_normal", "choice", "permutation", "exponential", "laplace",
+    "bits", "poisson", "gamma", "beta", "dirichlet",
+}
+
+_TRACED_ROOTS = ("jnp.", "jax.numpy.", "jax.lax.")
+
+
+def _dotted(node: ast.AST) -> str:
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _iter_target_name(it: ast.AST) -> Optional[str]:
+    """Name of the container a ``for`` iterates: ``for x in d`` /
+    ``d.keys()`` / ``d.items()`` / ``d.values()`` -> "d"."""
+    if isinstance(it, ast.Name):
+        return it.id
+    if (isinstance(it, ast.Call) and isinstance(it.func, ast.Attribute)
+            and it.func.attr in ("keys", "items", "values")
+            and isinstance(it.func.value, ast.Name)):
+        return it.func.value.id
+    return None
+
+
+class _FileLinter(ast.NodeVisitor):
+    def __init__(self, rel_path: str, serving: bool):
+        self.rel = rel_path
+        self.serving = serving
+        self.findings: List[Finding] = []
+        self._loop_depth = 0
+        self._iter_stack: List[str] = []   # containers under iteration
+
+    # -- helpers ----------------------------------------------------------
+    def _add(self, rule: str, node: ast.AST, msg: str, hint: str) -> None:
+        self.findings.append(Finding(rule, self.rel, node.lineno, msg, hint))
+
+    # -- function-scope rules --------------------------------------------
+    def _visit_function(self, node) -> None:
+        for default in list(node.args.defaults) + [
+                d for d in node.args.kw_defaults if d is not None]:
+            if isinstance(default, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(default, ast.Call)
+                    and _dotted(default.func) in ("list", "dict", "set")):
+                self._add("PY-MUT-DEFAULT", default,
+                          f"mutable default in {node.name}()",
+                          "default to None; create the container inside")
+        self._check_key_reuse(node)
+        self.generic_visit(node)
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    def _check_key_reuse(self, fn) -> None:
+        """PK-REUSE: a key Name passed to >= 2 draws and never rebound
+        between them. Conservative: any rebinding of the name anywhere in
+        the function clears it (loops re-bind per iteration)."""
+        draws: Dict[str, List[ast.Call]] = {}
+        rebound: Dict[str, int] = {}
+
+        def _scope_nodes(node):
+            """Walk without descending into nested function scopes (they
+            get their own ``_check_key_reuse`` via the visitor)."""
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.Lambda)):
+                    continue
+                yield child
+                yield from _scope_nodes(child)
+
+        for sub in _scope_nodes(fn):
+            if isinstance(sub, ast.Call):
+                callee = _dotted(sub.func)
+                if (callee.rsplit(".", 1)[-1] in DRAW_FNS
+                        and ("random" in callee or callee in DRAW_FNS)):
+                    key_arg = None
+                    if sub.args:
+                        key_arg = sub.args[0]
+                    for kw in sub.keywords:
+                        if kw.arg == "key":
+                            key_arg = kw.value
+                    if isinstance(key_arg, ast.Name):
+                        draws.setdefault(key_arg.id, []).append(sub)
+            for tgt in getattr(sub, "targets", []) or (
+                    [sub.target] if isinstance(
+                        sub, (ast.AugAssign, ast.AnnAssign, ast.For)) else []):
+                for leaf in ast.walk(tgt):
+                    if isinstance(leaf, ast.Name):
+                        rebound[leaf.id] = rebound.get(leaf.id, 0) + 1
+        for name, calls in draws.items():
+            if len(calls) >= 2 and not rebound.get(name):
+                self._add("PK-REUSE", calls[1],
+                          f"key {name!r} consumed by {len(calls)} draws "
+                          f"without rebinding — the draws are correlated",
+                          "fold_in/split a fresh subkey per draw")
+
+    # -- loop rules -------------------------------------------------------
+    def visit_For(self, node: ast.For) -> None:
+        name = _iter_target_name(node.iter)
+        self._iter_stack.append(name or "")
+        self._loop_depth += 1
+        self._check_traced_test(getattr(node, "iter", None))
+        self.generic_visit(node)
+        self._loop_depth -= 1
+        self._iter_stack.pop()
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_traced_branch(node, "while")
+        self._loop_depth += 1
+        self._iter_stack.append("")
+        self.generic_visit(node)
+        self._iter_stack.pop()
+        self._loop_depth -= 1
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_traced_branch(node, "if")
+        self.generic_visit(node)
+
+    def _check_traced_test(self, expr) -> None:
+        return None   # iterables are not branch tests
+
+    def _check_traced_branch(self, node, kw: str) -> None:
+        # isinstance(x, jnp.ndarray) is a static pytree-structure test, not
+        # a traced-value branch — exclude its argument subtrees.
+        static_ok = set()
+        for sub in ast.walk(node.test):
+            if isinstance(sub, ast.Call) and _dotted(sub.func) == "isinstance":
+                for arg in sub.args:
+                    static_ok.update(id(x) for x in ast.walk(arg))
+        for sub in ast.walk(node.test):
+            if id(sub) in static_ok:
+                continue
+            d = _dotted(sub)
+            if d and any(d.startswith(r) or d + "." == r
+                         for r in _TRACED_ROOTS):
+                self._add("PY-TRACED-BRANCH", node,
+                          f"`{kw}` test references traced namespace "
+                          f"{d!r} — Python control flow does not trace",
+                          "use jnp.where / jax.lax.cond (or hoist the "
+                          "value to a static Python scalar)")
+                return
+
+    # -- call rules -------------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        callee = _dotted(node.func)
+        if self.serving and self._loop_depth:
+            if callee.endswith("random.PRNGKey") or callee == "PRNGKey":
+                self._add("PK-FRESH", node,
+                          "PRNGKey created inside a loop body",
+                          "create the base key once (__init__ / API "
+                          "boundary); derive per-step keys with fold_in")
+            if callee.endswith("random.split"):
+                self._add("PK-SPLIT", node,
+                          "jax.random.split inside a serving loop — the "
+                          "key chain depends on scheduling history",
+                          "fold the base key by (uid, token index): "
+                          "engine.fold_slot_keys / jax.random.fold_in")
+        self.generic_visit(node)
+
+    # -- dict-iteration mutation -----------------------------------------
+    def _mutated_name(self, node) -> Optional[str]:
+        if isinstance(node, ast.Delete):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript) and isinstance(
+                        t.value, ast.Name):
+                    return t.value.id
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Subscript) and isinstance(
+                        t.value, ast.Name):
+                    return t.value.id
+        if isinstance(node, ast.Expr) and isinstance(node.value, ast.Call):
+            f = node.value.func
+            if isinstance(f, ast.Attribute) and f.attr in (
+                    "pop", "popitem", "clear", "remove", "append") \
+                    and isinstance(f.value, ast.Name):
+                return f.value.id
+        return None
+
+    def visit_Delete(self, node):
+        self._flag_iter_mutation(node)
+        self.generic_visit(node)
+
+    def visit_Assign(self, node):
+        self._flag_iter_mutation(node)
+        self.generic_visit(node)
+
+    def visit_Expr(self, node):
+        self._flag_iter_mutation(node)
+        self.generic_visit(node)
+
+    def _flag_iter_mutation(self, node) -> None:
+        name = self._mutated_name(node)
+        if name and name in self._iter_stack:
+            self._add("PY-DICT-MUT", node,
+                      f"{name!r} mutated while being iterated",
+                      "iterate over list(...) / collect keys first")
+
+
+def lint_file(path: str, *, serving: bool,
+              source: Optional[str] = None) -> List[Finding]:
+    if source is None:
+        with open(path) as f:
+            source = f.read()
+    rel = os.path.relpath(path) if os.path.isabs(path) else path
+    linter = _FileLinter(rel, serving)
+    linter.visit(ast.parse(source, filename=path))
+    return apply_inline_ignores(linter.findings, {rel: source})
+
+
+def lint_tree(repo_root: str,
+              roots: Sequence[str] = ("src/repro/serving",
+                                      "src/repro/models")) -> List[Finding]:
+    """Lint every .py file under ``roots``; PK loop rules apply to files
+    under a root whose path contains ``serving``."""
+    out: List[Finding] = []
+    for root in roots:
+        full = os.path.join(repo_root, root)
+        serving = "serving" in root
+        for dirpath, _, files in os.walk(full):
+            for f in sorted(files):
+                if f.endswith(".py"):
+                    out.extend(lint_file(os.path.join(dirpath, f),
+                                         serving=serving))
+    return out

@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import contracts
+
 # Default tile geometry: MXU native 128x128 (paper: 128x64 for 128 threads).
 DEFAULT_M_TB = 128
 DEFAULT_K_TB = 128
@@ -237,13 +239,11 @@ def encode(dense: np.ndarray | jax.Array,
     m, k = a.shape
     if m % m_tb or k % k_tb:
         raise ValueError(f"shape {(m, k)} not tile-aligned to ({m_tb},{k_tb})")
-    if m_tb * k_tb > 65536:
-        # The packed word carries a 16-bit intra-tile location; a larger tile
-        # would silently wrap ``loc & 0xFFFF`` in pack_words and corrupt the
-        # weight placement.
-        raise ValueError(
-            f"tile geometry ({m_tb},{k_tb}) needs {m_tb * k_tb} intra-tile "
-            f"locations but the 16-bit loc field holds at most 65536")
+    # The packed word carries a 16-bit intra-tile location; a larger tile
+    # would silently wrap ``loc & 0xFFFF`` in pack_words and corrupt the
+    # weight placement. Shared predicate with the static checker (rule
+    # KC-LOC, DESIGN.md §12) so encoding and checker cannot disagree.
+    contracts.require_tile_loc(m_tb, k_tb)
     mt, kt = m // m_tb, k // k_tb
     n_tiles = mt * kt
 

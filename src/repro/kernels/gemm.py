@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.analysis import budgets, contracts
+
 # jax >= 0.6 renamed TPUCompilerParams -> CompilerParams; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
     pltpu, "TPUCompilerParams")
@@ -49,6 +51,17 @@ def dense_gemm(a: jax.Array, b: jax.Array, *, m_tb: int = 128,
     n = b.shape[1]
     if m % m_tb or k % k_tb or n % n_tb:
         raise ValueError(f"shape {(m, k, n)} not tile-aligned")
+    # VMEM contract (rule KC-VMEM, DESIGN.md §12): dense A/B/out blocks are
+    # double-buffered by the grid pipeline, the f32 accumulator is not.
+    budget = budgets.vmem_budget("interpret" if interpret else "pallas")
+    if budget is not None:
+        blocks = ((m_tb * k_tb + k_tb * n_tb) * a.dtype.itemsize
+                  + m_tb * n_tb * jnp.dtype(out_dtype).itemsize)
+        footprint = blocks * contracts.DOUBLE_BUFFER + m_tb * n_tb * 4
+        if footprint > budget:
+            raise ValueError(
+                f"KC-VMEM: dense_gemm tile ({m_tb},{k_tb},{n_tb}) needs "
+                f"{footprint} B of VMEM, budget {budget} B")
     grid = (m // m_tb, n // n_tb, k // k_tb)
     return pl.pallas_call(
         functools.partial(_gemm_kernel, k_tiles=grid[2]),

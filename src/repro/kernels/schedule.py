@@ -44,6 +44,7 @@ import os
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
+from repro.analysis import contracts
 from repro.core import roofline
 
 # Candidate ladders. N tiles follow the paper §5 batch ladder (TPU lane cap
@@ -54,8 +55,9 @@ N_TB_LADDER = (8, 16, 32, 64, 128)
 SPLIT_LADDER = (1, 2, 4, 8, 16)
 MKTB_LADDER = (128, 64)
 
-# tiled_csl 16-bit intra-tile location bound (loc overflow regression guard).
-_MAX_TILE_ELEMS = 65536
+# tiled_csl 16-bit intra-tile location bound (rule KC-LOC; the shared
+# predicate lives in analysis.contracts so encode/select cannot disagree).
+_MAX_TILE_ELEMS = contracts.MAX_TILE_ELEMS
 
 _ENV_CACHE_VAR = "REPRO_SCHEDULE_CACHE"
 
@@ -191,7 +193,7 @@ def candidates(m: int, k: int, n: int, *,
     out = []
     for mtb in m_opts:
         for ktb in k_opts:
-            if mtb * ktb > _MAX_TILE_ELEMS:
+            if not contracts.tile_loc_ok(mtb, ktb):   # KC-LOC
                 continue
             kt = -(-k // ktb)
             n_opts = (n_tb,) if n_tb else N_TB_LADDER
@@ -216,19 +218,32 @@ def predicted(m: int, k: int, n: int, sparsity: float, sched: Schedule, *,
 def _select_analytic(m: int, k: int, n: int, sparsity: float,
                      m_tb: Optional[int], k_tb: Optional[int],
                      n_tb: Optional[int], split_k: Optional[int],
-                     group: int, max_nnz: Optional[int]) -> Schedule:
+                     group: int, max_nnz: Optional[int],
+                     backend: str = "pallas") -> Schedule:
     best = None
     best_key = None
+    rejected: list = []
     for cand in candidates(m, k, n, m_tb=m_tb, k_tb=k_tb, n_tb=n_tb,
                            split_k=split_k):
         # A pinned max_nnz only describes the encoding the caller holds;
         # when sweeping tile geometry, re-estimate per candidate.
         nnz = max_nnz if (m_tb and k_tb) else None
+        # Contract filter (KC-*, DESIGN.md §12): an unlaunchable candidate
+        # must never win, whatever the cost model says about it.
+        bad = contracts.check_schedule(
+            m, k, n, m_tb=cand.m_tb, k_tb=cand.k_tb, n_tb=cand.n_tb,
+            split_k=cand.split_k, group=group, max_nnz=nnz,
+            sparsity=sparsity, backend=backend,
+            path=f"select({m},{k},{n})")
+        if bad:
+            rejected.extend(bad)
+            continue
         t = predicted(m, k, n, sparsity, cand, group=group, max_nnz=nnz)
         key = (t.effective_s, t.terms.hbm_bytes, cand.split_k, -cand.n_tb)
         if best_key is None or key < best_key:
             best, best_key = cand, key
-    assert best is not None
+    if best is None:
+        raise contracts.ScheduleContractError(rejected)
     return best
 
 
@@ -252,8 +267,19 @@ def select(m: int, k: int, n: int, sparsity: float, *,
     ``sparsity``/``max_nnz`` feed the A-stream bytes term; pass the
     encoding's real ``TiledCSL.max_nnz`` when available (``ops.spmm``
     does) so the model charges exactly what the kernel DMAs.
+
+    Every resolution path is validated against the launch contracts
+    (``analysis.contracts``, rules KC-*): a fully-pinned invalid schedule
+    raises :class:`~repro.analysis.contracts.ScheduleContractError` before
+    any ``pallas_call``; an invalid *cache* entry (stale file, foreign
+    machine, schema drift) is ignored and falls back to the analytic pick,
+    so a poisoned cache can never produce an unlaunchable winner.
     """
     if n_tb is not None and split_k is not None and m_tb and k_tb:
+        contracts.require_schedule(
+            m, k, n, m_tb=m_tb, k_tb=k_tb, n_tb=n_tb, split_k=split_k,
+            group=group, max_nnz=max_nnz, sparsity=sparsity,
+            backend=backend, path=f"select({m},{k},{n})")
         return Schedule(m_tb, k_tb, n_tb, split_k)
     if cache is False:
         cache = None
@@ -268,10 +294,15 @@ def select(m: int, k: int, n: int, sparsity: float, *,
         if hit is not None and (n_tb is None or hit.n_tb == n_tb) \
                 and (split_k is None or hit.split_k == split_k) \
                 and (m_tb is None or hit.m_tb == m_tb) \
-                and (k_tb is None or hit.k_tb == k_tb):
+                and (k_tb is None or hit.k_tb == k_tb) \
+                and not contracts.check_schedule(
+                    m, k, n, m_tb=hit.m_tb, k_tb=hit.k_tb, n_tb=hit.n_tb,
+                    split_k=hit.split_k, group=group, max_nnz=max_nnz,
+                    sparsity=sparsity, backend=backend):
             return hit
     return _select_analytic(m, k, n, round(float(sparsity), 4),
-                            m_tb, k_tb, n_tb, split_k, group, max_nnz)
+                            m_tb, k_tb, n_tb, split_k, group, max_nnz,
+                            backend)
 
 
 def autotune(t, n: int, *, backend: str = "interpret",
@@ -308,6 +339,13 @@ def autotune(t, n: int, *, backend: str = "interpret",
     for ntb in tuple(n_tbs) if n_tbs else N_TB_LADDER:
         for s in split_opts:
             sched = Schedule(t.m_tb, t.k_tb, ntb, s)
+            # Contract filter (KC-*): never time — and so never persist —
+            # a candidate that select() would refuse to launch.
+            if contracts.check_schedule(
+                    m, k, n, m_tb=t.m_tb, k_tb=t.k_tb, n_tb=ntb, split_k=s,
+                    group=group, max_nnz=t.max_nnz, sparsity=sparsity,
+                    backend=backend, path="autotune"):
+                continue
             fn = functools.partial(run, t, b, backend=backend, n_tb=ntb,
                                    split_k=s, epilogue=epilogue,
                                    out_dtype=jnp.float32)
@@ -316,7 +354,19 @@ def autotune(t, n: int, *, backend: str = "interpret",
             for _ in range(reps):
                 jax.block_until_ready(fn())
             timings[sched] = (time.perf_counter() - t0) / reps * 1e6
+    if not timings:
+        raise contracts.ScheduleContractError(contracts.check_schedule(
+            m, k, n, m_tb=t.m_tb, k_tb=t.k_tb,
+            n_tb=(tuple(n_tbs) if n_tbs else N_TB_LADDER)[0],
+            split_k=split_opts[0], group=group, max_nnz=t.max_nnz,
+            sparsity=sparsity, backend=backend, path="autotune"))
     best = min(timings, key=timings.get)
+    # Belt and braces: the winner re-validates before it is persisted —
+    # the JSON cache must never hold an unlaunchable schedule.
+    contracts.require_schedule(
+        m, k, n, m_tb=best.m_tb, k_tb=best.k_tb, n_tb=best.n_tb,
+        split_k=best.split_k, group=group, max_nnz=t.max_nnz,
+        sparsity=sparsity, backend=backend, path="autotune")
     if cache is None:           # NB: not `or` — an empty cache is falsy
         cache = _default_cache()
     if cache is not None:

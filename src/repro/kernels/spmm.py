@@ -82,7 +82,24 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
     pltpu, "TPUCompilerParams")
 
 
+from repro.analysis import contracts
 from repro.core import tiled_csl
+
+
+def _require_launch(t: tiled_csl.TiledCSL, n: int, n_tb: int, split_k: int,
+                    interpret: bool, b_dtype, out_dtype) -> None:
+    """Last line of defence before ``pallas_call``: re-validate the launch
+    against the kernel contracts (KC-*, DESIGN.md §12). ``schedule.select``
+    already filters, but raw kernel entries are public — a caller pinning
+    geometry by hand must hit the same wall the selector enforces."""
+    m, k = t.shape
+    contracts.require_schedule(
+        m, k, n, m_tb=t.m_tb, k_tb=t.k_tb, n_tb=n_tb, split_k=split_k,
+        group=t.group or 1, max_nnz=t.max_nnz,
+        backend="interpret" if interpret else "pallas",
+        b_dtype_bytes=jnp.dtype(b_dtype).itemsize,
+        out_dtype_bytes=jnp.dtype(out_dtype).itemsize,
+        path=f"launch({m},{k},{n})")
 
 
 # Unary epilogues: applied per output in the flush stage (f32, pre-cast).
@@ -206,6 +223,7 @@ def lscd_spmm(t: tiled_csl.TiledCSL,
         raise ValueError(f"B rows {b.shape[0]} != K {k}")
     if n % n_tb:
         raise ValueError(f"N={n} not a multiple of n_tb={n_tb}")
+    _require_launch(t, n, n_tb, 1, interpret, b.dtype, out_dtype)
     nt = n // n_tb
 
     grid = (mt, nt, kt)
@@ -360,6 +378,7 @@ def lscd_spmm_grouped(t: tiled_csl.TiledCSL,
         raise ValueError(f"B rows {b.shape[0]} != K {k}")
     if n % n_tb:
         raise ValueError(f"N={n} not a multiple of n_tb={n_tb}")
+    _require_launch(t, n, n_tb, 1, interpret, b.dtype, out_dtype)
     nt = n // n_tb
 
     grid = (mt, nt, kt, groups)
@@ -503,8 +522,9 @@ def lscd_spmm_splitk(t: tiled_csl.TiledCSL,
         raise ValueError(f"B rows {b.shape[0]} != K {k}")
     if n % n_tb:
         raise ValueError(f"N={n} not a multiple of n_tb={n_tb}")
-    if not 1 <= split_k <= kt:
-        raise ValueError(f"split_k={split_k} not in [1, Kt={kt}]")
+    # KC-SPLIT and the rest of the launch contract (VMEM footprint of both
+    # the partials and the reduce launch) in one shared predicate.
+    _require_launch(t, n, n_tb, split_k, interpret, b.dtype, out_dtype)
     nt = n // n_tb
     k_chunk = _splitk_chunk(kt, split_k)
 
@@ -646,8 +666,8 @@ def lscd_spmm_splitk_grouped(t: tiled_csl.TiledCSL,
         raise ValueError(f"B rows {b.shape[0]} != K {k}")
     if n % n_tb:
         raise ValueError(f"N={n} not a multiple of n_tb={n_tb}")
-    if not 1 <= split_k <= kt:
-        raise ValueError(f"split_k={split_k} not in [1, Kt={kt}]")
+    # KC-SPLIT plus the VMEM contract of the [S, G, m_tb, n_tb] reduce block.
+    _require_launch(t, n, n_tb, split_k, interpret, b.dtype, out_dtype)
     nt = n // n_tb
     k_chunk = _splitk_chunk(kt, split_k)
 

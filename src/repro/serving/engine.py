@@ -258,7 +258,12 @@ def generate(params, prompt: jax.Array, cfg: ModelConfig, *,
     last_logits, cache = prefill(params, prompt, cfg, max_len,
                                  backend=backend)
     out = [prompt]
-    tok = sample(last_logits, key, temperature=temperature)
+    # Key discipline (rule PK-SPLIT, DESIGN.md §12): fold the base key by
+    # the absolute token index instead of chaining jax.random.split — token
+    # i's key is then a pure function of (key, S + i), independent of loop
+    # history, matching the batcher's (uid, token index) folding contract.
+    tok = sample(last_logits, jax.random.fold_in(key, S),
+                 temperature=temperature)
     for i in range(max_new_tokens):
         if cfg.n_codebooks:
             nxt = tok[:, :, None]
@@ -267,9 +272,9 @@ def generate(params, prompt: jax.Array, cfg: ModelConfig, *,
         out.append(nxt)
         if i == max_new_tokens - 1:
             break
-        key, sub = jax.random.split(key)
         logits, cache = step_fn(params, cache, nxt,
                                 jnp.array(S + i, jnp.int32), cfg,
                                 backend=backend)
-        tok = sample(logits, sub, temperature=temperature)
+        tok = sample(logits, jax.random.fold_in(key, S + i + 1),
+                     temperature=temperature)
     return jnp.concatenate(out, axis=-1)

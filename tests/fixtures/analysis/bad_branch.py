@@ -1,0 +1,26 @@
+"""Golden-bad batcher-state file: traced branching + container hazards.
+
+NOT imported — parsed by ``lint.lint_file`` in ``tests/test_analysis.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def traced_branch(x):
+    if jnp.max(x) > 0:                                   # PY-TRACED-BRANCH
+        return x * 2
+    while jnp.any(x):                                    # PY-TRACED-BRANCH
+        x = x - 1
+    return x
+
+
+def mutable_default(request, queue=[]):                  # PY-MUT-DEFAULT
+    queue.append(request)
+    return queue
+
+
+def evict_finished(requests):
+    for uid in requests:
+        if requests[uid].done:
+            del requests[uid]                            # PY-DICT-MUT
+    return requests

@@ -1,0 +1,35 @@
+"""Golden-bad kernel file for the analyzer tests: seeded KC-ACC violations.
+
+NOT imported anywhere — parsed by ``contracts.check_kernel_source`` in
+``tests/test_analysis.py``. Each violation is labeled with the rule id the
+checker must attach to exactly that line.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref):
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.bfloat16)  # KC-ACC
+    o_ref[...] = acc_ref[...]
+
+
+def bad_gemm(a, b, m_tb=128, k_tb=128, n_tb=128):
+    grid = (a.shape[0] // m_tb, b.shape[1] // n_tb, a.shape[1] // k_tb)
+    return pl.pallas_call(
+        functools.partial(_kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m_tb, k_tb), lambda mi, ni, ki: (mi, ki)),
+            pl.BlockSpec((k_tb, n_tb), lambda mi, ni, ki: (ki, ni)),
+        ],
+        out_specs=pl.BlockSpec((m_tb, n_tb), lambda mi, ni, ki: (mi, ni)),
+        scratch_shapes=[pltpu.VMEM((m_tb, n_tb), jnp.bfloat16)],  # KC-ACC
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], b.shape[1]),
+                                       jnp.bfloat16),
+    )(a, b)

@@ -1,0 +1,37 @@
+"""Golden-bad serving file: seeded PRNG-key discipline violations.
+
+NOT imported — parsed by ``lint.lint_file(serving=True)`` in
+``tests/test_analysis.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_loop_fresh_key(logits, steps):
+    out = []
+    for _ in range(steps):
+        key = jax.random.PRNGKey(0)                      # PK-FRESH
+        out.append(jax.random.categorical(key, logits))
+    return out
+
+
+def decode_loop_split_chain(key, logits, steps):
+    out = []
+    for _ in range(steps):
+        key, sub = jax.random.split(key)                 # PK-SPLIT
+        out.append(jax.random.categorical(sub, logits))
+    return out
+
+
+def correlated_draws(key, shape):
+    noise = jax.random.normal(key, shape)
+    jitter = jax.random.uniform(key, shape)              # PK-REUSE
+    return noise + jitter
+
+
+def suppressed_reuse(key, shape):
+    a = jax.random.normal(key, shape)
+    # symmetric antithetic pair wants the SAME key by construction
+    b = -jax.random.normal(key, shape)  # repro: ignore[PK-REUSE]
+    return jnp.stack([a, b])

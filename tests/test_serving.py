@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro import configs
+from repro.analysis import budgets
 from repro.models import transformer
 from repro.serving import batching, engine
 
@@ -118,7 +119,7 @@ def test_bucketed_admission_compile_count():
     for uid, L in enumerate((5, 12, 20)):
         b.submit(uid, rng.integers(0, cfg.vocab, L).astype(np.int64), 2)
     b.run_to_completion()
-    bound = int(np.ceil(np.log2(max_len)))
+    bound = budgets.compile_budget("batcher_prefill", max_len=max_len)
     assert b.prefill_compiles <= bound, (b.prefill_compiles, bound)
 
     events = []

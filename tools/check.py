@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""repro static checker CLI — the `repro-check` CI gate.
+
+Runs the three analysis passes (DESIGN.md §12) and exits non-zero when any
+unsuppressed finding remains:
+
+    PYTHONPATH=src python tools/check.py --all
+    PYTHONPATH=src python tools/check.py --kernels --lint   # skip tracing
+    PYTHONPATH=src python tools/check.py --list-rules
+
+Suppression: inline ``# repro: ignore[RULE]`` next to the flagged source
+line, or an entry (with a mandatory reason) in the burn-down allowlist
+``tools/check_allowlist.json``. Stale allowlist entries fail the run —
+the list may only shrink.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+from repro.analysis import findings as findings_mod  # noqa: E402
+
+DEFAULT_ALLOWLIST = os.path.join(REPO_ROOT, "tools", "check_allowlist.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when none selected)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="kernel contract pass (KC-*)")
+    ap.add_argument("--trace", action="store_true",
+                    help="trace auditor (TA-*; jit-traces smoke entries)")
+    ap.add_argument("--lint", action="store_true",
+                    help="AST lint over serving/ and models/ (PK-*/PY-*)")
+    ap.add_argument("--allowlist", default=DEFAULT_ALLOWLIST,
+                    help="burn-down allowlist JSON (default: %(default)s)")
+    ap.add_argument("--show-suppressed", action="store_true")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule, desc in sorted(findings_mod.RULES.items()):
+            print(f"{rule:18s} {desc}")
+        return 0
+
+    run_all = args.all or not (args.kernels or args.trace or args.lint)
+    found = []
+
+    if run_all or args.kernels:
+        from repro.analysis import kernel_pass
+        kf, stats = kernel_pass.run_kernel_pass(REPO_ROOT)
+        found.extend(kf)
+        print(f"[kernels] {stats['cells']} cells audited; "
+              f"{stats['filtered']}/{stats['candidates']} ladder candidates "
+              f"contract-filtered; {len(kf)} finding(s)")
+
+    if run_all or args.lint:
+        from repro.analysis import lint
+        lf = lint.lint_tree(REPO_ROOT)
+        found.extend(lf)
+        print(f"[lint] serving/ + models/ swept; {len(lf)} finding(s)")
+
+    if run_all or args.trace:
+        from repro.analysis import trace_audit
+        tf = trace_audit.run_trace_audit()
+        found.extend(tf)
+        print(f"[trace] {len(trace_audit.default_entries())} entry points "
+              f"traced; {len(tf)} finding(s)")
+
+    allow = findings_mod.Allowlist.load(args.allowlist)
+    found = allow.suppress(found)
+    print()
+    print(findings_mod.render_report(found,
+                                     show_suppressed=args.show_suppressed))
+    problems = allow.problems()
+    for p in problems:
+        print(f"ALLOWLIST: {p}")
+    live = [f for f in found if not f.suppressed]
+    return 1 if live or problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
