@@ -1,13 +1,18 @@
 """CI bench-regression gate: diff smoke bench runs against committed baselines.
 
-Every CI run produces smoke editions of the three committed benchmarks
-(`BENCH_kernel_smoke.json`, `BENCH_e2e_smoke.json`, `BENCH_spec_smoke.json`).
+Every CI run produces smoke editions of the four committed benchmarks
+(`BENCH_kernel_smoke.json`, `BENCH_e2e_smoke.json`, `BENCH_spec_smoke.json`,
+`BENCH_serve_smoke.json`).
 Wall-clock numbers are not comparable across runners, and smoke workloads
 are smaller than the committed full runs — but the *dimensionless quality
 metrics* (schedule-selector effective speedup, concurrency gain at fixed KV
 budget, prefix-hit rate, speculative tokens-per-step speedup, accept rate)
 are deterministic properties of the code, so a drop against the committed
-baseline is a real regression, not noise. This gate:
+baseline is a real regression, not noise. The serving-latency gate follows
+the same rule: it diffs the *virtual-clock* TTFT/TPOT percentiles of a
+seeded trace replay (`serving.loadgen.StepClock`: latency in engine steps,
+a pure function of scheduling decisions), never the wall-clock ones
+reported alongside. This gate:
 
 * compares each gated metric with a per-metric relative tolerance and an
   optional absolute floor (the acceptance bounds the benches themselves
@@ -30,6 +35,8 @@ baseline in the same PR that intentionally moves a gated metric:
         --json benchmarks/baselines/BENCH_e2e_smoke.json
     PYTHONPATH=src python -m benchmarks.spec_decode \
         --json benchmarks/baselines/BENCH_spec_smoke.json
+    PYTHONPATH=src python -m benchmarks.serving_load --smoke \
+        --json benchmarks/baselines/BENCH_serve_smoke.json
 
 Usage (what `.github/workflows/ci.yml` runs):
 
@@ -75,6 +82,18 @@ METRICS: Dict[str, List[Metric]] = {
         ("repetitive_accept_rate", "higher", 0.15, None),
         ("scenarios.adversarial.spec."
          "__min__.tokens_per_step", "higher", 0.05, 1.0),
+    ],
+    # Virtual-clock (StepClock) latencies only: deterministic functions of
+    # the scheduling decisions on the seeded trace, in units of engine
+    # steps. Ceilings mirror serving_load's own sanity envelope — steady
+    # traffic must admit within a few steps and stream ~1 token/step;
+    # overload degradation stays bounded by the short admission queue.
+    "serve": [
+        ("parity", "higher", 0.0, 1.0),
+        ("scenarios.steady.completed", "higher", 0.0, None),
+        ("scenarios.steady.virtual.ttft.p99", "lower", 0.10, 3.0),
+        ("scenarios.steady.virtual.tpot.p99", "lower", 0.10, 1.0),
+        ("scenarios.overload.virtual.ttft.p99", "lower", 0.15, 8.0),
     ],
 }
 

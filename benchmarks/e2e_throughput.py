@@ -76,7 +76,7 @@ def decode_step_time(weight_bytes: float, cache_bytes: float, chips: int,
     return terms.step_time_s
 
 
-def _scheduler_rows(full: bool) -> List[str]:
+def _scheduler_rows(full: bool, seed: int = 0) -> List[str]:
     """Measured continuous-batching admission/decode split on CPU smoke.
 
     Mixed-length traffic (every prompt length distinct) through the
@@ -94,7 +94,7 @@ def _scheduler_rows(full: bool) -> List[str]:
     max_len, n_slots = 64, 4
     b = batching.ContinuousBatcher(params, cfg, n_slots=n_slots,
                                    max_len=max_len)
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
 
     def wave(uid0: int, lengths):
         for i, L in enumerate(lengths):
@@ -173,17 +173,19 @@ def _run_workload(b, prompts, max_new: int) -> Dict[str, Any]:
     return out
 
 
-def _paged_scenarios(full: bool) -> Dict[str, Any]:
+def _paged_scenarios(full: bool, seed: int = 0) -> Dict[str, Any]:
     """Dense-slot vs paged-block batchers at ONE fixed KV byte budget.
 
     The budget buys either ``n_slots_dense`` pre-reserved [max_len] cache
     rows or the byte-identical pool of ``n_blocks`` blocks; the paged side
     gets a wide decode batch (slots are compute width, not KV bytes) and
     converts unused slot tail + shared prefixes into admitted concurrency.
+    Workloads come from `serving.loadgen` tenant specs (the same machinery
+    the open-loop latency bench replays), reproducible from ``seed``.
     """
     import jax
     from repro.models import transformer
-    from repro.serving import batching
+    from repro.serving import batching, loadgen
 
     cfg = configs.smoke("tinyllama_1_1b")
     params = transformer.init_model(jax.random.PRNGKey(0), cfg)
@@ -192,14 +194,15 @@ def _paged_scenarios(full: bool) -> Dict[str, Any]:
     n_blocks = n_slots_dense * max_len // block      # same KV bytes
     n_req = 16 if full else 12
     max_new = 8
-    rng = np.random.default_rng(0)
-    shared = rng.integers(0, cfg.vocab, 16).astype(np.int64)
     workloads = {
-        "unique": [rng.integers(0, cfg.vocab, int(rng.integers(8, 15)))
-                   .astype(np.int64) for _ in range(n_req)],
-        "shared_prefix": [np.concatenate([
-            shared, rng.integers(0, cfg.vocab, int(rng.integers(3, 7)))
-            .astype(np.int64)]) for _ in range(n_req)],
+        "unique": [p for _, p in loadgen.sample_prompts(
+            seed=seed, n=n_req, vocab=cfg.vocab,
+            tenants=[loadgen.TenantSpec("unique", prefix_len=0,
+                                        suffix_len=(8, 15))])],
+        "shared_prefix": [p for _, p in loadgen.sample_prompts(
+            seed=seed, n=n_req, vocab=cfg.vocab,
+            tenants=[loadgen.TenantSpec("shared", prefix_len=16,
+                                        suffix_len=(3, 7))])],
     }
     scen: Dict[str, Any] = {}
     for wname, prompts in workloads.items():
@@ -264,10 +267,10 @@ def _analytic_rows(full: bool = False) -> List[str]:
     return rows
 
 
-def run(full: bool = False) -> List[str]:
+def run(full: bool = False, seed: int = 0) -> List[str]:
     rows = _analytic_rows(full)
-    rows.extend(_scheduler_rows(full))
-    paged = _paged_scenarios(full)
+    rows.extend(_scheduler_rows(full, seed))
+    paged = _paged_scenarios(full, seed)
     for name, s in paged["scenarios"].items():
         extra = (f";hit_rate={s['prefix_hit_rate']:.2f}"
                  f";block_util={s['block_utilization']:.2f}"
@@ -288,15 +291,16 @@ def run(full: bool = False) -> List[str]:
     return rows
 
 
-def report(full: bool = False) -> Dict[str, Any]:
+def report(full: bool = False, seed: int = 0) -> Dict[str, Any]:
     """Structured report: analytic rows + budget planner + measured
     dense-vs-paged scenarios (the committed BENCH_e2e.json)."""
     return {
         "bench": "e2e_throughput",
         "full": full,
+        "seed": seed,
         "analytic_csv": _analytic_rows(full),
         "planner": _planner_report(),
-        "measured": _paged_scenarios(full),
+        "measured": _paged_scenarios(full, seed),
     }
 
 
@@ -305,9 +309,11 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the structured report (BENCH_e2e.json)")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="loadgen workload seed (reproducible prompts)")
     args = ap.parse_args()
     if args.json:
-        rep = report(args.full)
+        rep = report(args.full, args.seed)
         with open(args.json, "w") as f:
             json.dump(rep, f, indent=1, sort_keys=True)
         meas = rep["measured"]
@@ -321,7 +327,7 @@ def main() -> None:
                 f"shared-prefix concurrency gain {gains['shared_prefix']:.2f}"
                 " < 2.0 at fixed KV budget (acceptance regression)")
     else:
-        for row in run(args.full):
+        for row in run(args.full, args.seed):
             print(row)
 
 

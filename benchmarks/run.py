@@ -3,13 +3,16 @@
   kernel_bench     Fig.3 / Fig.9 / Fig.12 — SpMM kernel grid
   utilization      Fig.10 / Fig.11 — unit utilisation + stage breakdown
   e2e_throughput   Fig.13 / Fig.15 / Fig.16 + Table 1 — tokens/chip-s, memory
+  serving_load     DESIGN.md §13 — open-loop TTFT/TPOT percentiles
   spec_decode      DESIGN.md §11 — speculative tokens/step + accept rate
   format_bench     Tiled-CSL format: compression, padding, reorder scores
   pruning_study    §6.3.1 — pruning accuracy case study (reduced scale)
   roofline (CSV)   §Roofline rows from dry-run records, when present
 
-Prints ``name,us_per_call,derived`` CSV.
-Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only MODULE]
+Prints ``name,us_per_call,derived`` CSV. ``--seed`` selects the loadgen
+traffic traces (`serving.loadgen`) the serving/e2e benches replay — same
+seed, byte-identical trace — so two runs at one seed are comparable.
+Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--seed N] [--only MODULE]
 """
 
 from __future__ import annotations
@@ -24,14 +27,21 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="full paper grid (slower)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="loadgen trace seed (reproducible traffic)")
     args = ap.parse_args()
 
     from benchmarks import (e2e_throughput, format_bench, kernel_bench,
-                            pruning_study, spec_decode, utilization)
+                            pruning_study, serving_load, spec_decode,
+                            utilization)
+    # seeded modules replay loadgen traffic and take the trace seed
     modules = {
         "kernel_bench": kernel_bench.run,
         "utilization": utilization.run,
-        "e2e_throughput": e2e_throughput.run,
+        "e2e_throughput": lambda full: e2e_throughput.run(
+            full=full, seed=args.seed),
+        "serving_load": lambda full: serving_load.run(
+            full=full, seed=args.seed),
         "spec_decode": spec_decode.run,
         "format_bench": format_bench.run,
         "pruning_study": pruning_study.run,

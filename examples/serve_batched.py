@@ -1,12 +1,21 @@
-"""Continuous-batching serving demo over any assigned architecture.
+"""Streaming serving demo over any assigned architecture.
 
-Shows the production serving loop: a queue of requests with ragged prompt
+Shows the session-oriented serving surface (DESIGN.md §13) on top of the
+production continuous-batching loop: a queue of requests with ragged prompt
 lengths drained through a fixed pool of decode slots — the throughput
 mechanism the paper's memory savings feed (§6.3: bigger effective batch on
-the same hardware). Admission is bucketed (prompts pad to power-of-two
-length buckets) and in-slot (prompt K/V is written straight into the shared
-cache inside the jitted prefill), so mixed-length traffic compiles a
-handful of shapes instead of one per distinct prompt length.
+the same hardware). Each request is a `serving.api.GenerationRequest` whose
+``on_token`` callback prints tokens **as they are generated**, interleaved
+across sessions exactly as the batcher emits them; responses carry TTFT /
+TPOT from the server's latency clock. Admission is bucketed (prompts pad to
+power-of-two length buckets) and in-slot (prompt K/V is written straight
+into the shared cache inside the jitted prefill), so mixed-length traffic
+compiles a handful of shapes instead of one per distinct prompt length.
+
+``--cancel-after N`` cancels the last-submitted session after N engine
+steps, mid-stream: its slot and KV blocks are released immediately (the
+pool invariants are checked at exit) and the response reports
+``finish_reason=cancelled`` with whatever tokens it had produced.
 
 Run:  PYTHONPATH=src python examples/serve_batched.py --arch qwen2_moe_a2_7b
       (any id from repro.configs.ARCH_IDS; smoke-sized weights)
@@ -20,7 +29,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import transformer
-from repro.serving import batching
+from repro.serving import api
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="tinyllama_1_1b",
@@ -36,6 +45,9 @@ ap.add_argument("--block-size", type=int, default=8)
 ap.add_argument("--n-blocks", type=int, default=None)
 ap.add_argument("--spec-k", type=int, default=0,
                 help="speculative decoding drafts per step (needs --paged)")
+ap.add_argument("--cancel-after", type=int, default=None, metavar="N",
+                help="cancel the last session after N engine steps "
+                     "(demo of mid-stream cancellation)")
 args = ap.parse_args()
 
 cfg = configs.smoke(args.arch)
@@ -43,38 +55,63 @@ if cfg.n_codebooks:
     raise SystemExit("audio archs need codebook prompts; use the engine API")
 params = transformer.init_model(jax.random.PRNGKey(0), cfg)
 
-b = batching.ContinuousBatcher(
+server = api.StreamingServer(
     params, cfg, n_slots=args.slots, max_len=args.max_len, eos_id=args.eos,
     cache_kind="paged" if args.paged else "dense",
     block_size=args.block_size, n_blocks=args.n_blocks, spec_k=args.spec_k)
+
+t0 = time.time()
+
+
+def on_token(ev: api.TokenEvent) -> None:
+    """Print-as-generated: one line per streamed token, tagged with the
+    session and its running index; the last token names the finish."""
+    tail = f"  <- {ev.finish_reason}" if ev.finish_reason else ""
+    print(f"[{time.time() - t0:5.2f}s] {ev.session_id} "
+          f"#{ev.index}: {ev.token}{tail}")
+
+
 rng = np.random.default_rng(0)
 lo = min(3, args.max_len - 1)
 hi = max(lo + 1, min(args.max_len // 2, args.max_len - 1))
 lens = rng.integers(lo, hi, args.requests)
-for uid in range(args.requests):
-    b.submit(uid, rng.integers(0, cfg.vocab, lens[uid]).astype(np.int64),
-             max_new_tokens=int(rng.integers(4, 10)))
+for i in range(args.requests):
+    server.submit(api.GenerationRequest(
+        prompt=rng.integers(0, cfg.vocab, lens[i]).astype(np.int64),
+        max_new_tokens=int(rng.integers(4, 10)),
+        session_id=f"req{i}", on_token=on_token))
 
-t0 = time.time()
 steps = 0
-while True:
-    finished = b.step()
+responses = []
+while server.busy:
+    responses.extend(server.step())
     steps += 1
-    for uid, toks in finished.items():
-        why = b.requests[uid].finish_reason
-        print(f"[{time.time() - t0:5.2f}s] request {uid} done "
-              f"({len(toks)} tokens, {why}): {toks}")
-    if not b.queue and all(s is None for s in b.slots):
-        break
+    if args.cancel_after is not None and steps == args.cancel_after:
+        victim = f"req{args.requests - 1}"
+        resp = server.cancel(victim)
+        if resp is not None:
+            print(f"[{time.time() - t0:5.2f}s] cancelled {victim} after "
+                  f"{steps} steps ({len(resp.tokens)} tokens out)")
+            responses.append(resp)
 
-m = b.metrics
+print()
+for r in sorted(responses, key=lambda r: r.session_id):
+    lat = (f"ttft={r.ttft_s:.2f}s" if r.ttft_s is not None else "ttft=-")
+    if r.tpot_s is not None:
+        lat += f" tpot={r.tpot_s * 1e3:.0f}ms"
+    print(f"{r.session_id}: {len(r.tokens)} tokens ({r.finish_reason}, "
+          f"{lat}): {r.tokens}")
+
+b = server.batcher
+m = server.metrics
 print(f"\n{args.requests} ragged requests over {args.slots} slots "
       f"in {steps} engine steps — slots were reused "
       f"{max(args.requests - args.slots, 0)} times without pausing the loop")
 print(f"scheduler: occupancy={m.occupancy:.2f}  "
       f"mean_queue_wait={m.mean_queue_wait_steps:.1f} steps  "
       f"prefill={m.prefill_tokens} tok (+{m.prefill_padding_overhead:.0%} "
-      f"bucket/group padding)  decode={m.decode_tokens} tok")
+      f"bucket/group padding)  decode={m.decode_tokens} tok  "
+      f"cancelled={m.cancelled}")
 why = ("(vs one per distinct prompt length without bucketing)"
        if b.buckets is not None else
        "(recurrent arch: exact-length admission, buckets disabled)")
@@ -87,6 +124,8 @@ if args.paged:
     print(f"paged cache: {b.pool.n_blocks} blocks x {b.block_size} tok, "
           f"prefix_hit_rate={m.prefix_hit_rate:.2f}  "
           f"peak_active={m.peak_active_slots}  preemptions={m.preemptions}")
+    b.pool.check_invariants()
+    assert b.pool.blocks_in_use == 0, "leaked KV blocks"
 if args.spec_k:
     print(f"speculative (k={args.spec_k}): drafted={m.drafted} "
           f"accepted={m.accepted} accept_rate={m.accept_rate:.2f}  "

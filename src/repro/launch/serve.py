@@ -5,9 +5,13 @@ Tiled-CSL sparse) model — the paper's end-to-end deployment path.
         --arch tinyllama_1_1b --smoke --sparsity 0.8 --requests 8
 
 Loads/creates weights, optionally prunes + reformats to Tiled-CSL (the
-paper's weight reformatting tool), then drains a synthetic request queue
-through the slot-based continuous batcher, reporting tokens/sec and the
-weight-bytes saving.
+paper's weight reformatting tool), then serves a synthetic workload through
+the session API (`serving.api.StreamingServer` over the slot-based
+continuous batcher), reporting tokens/sec, TTFT/TPOT percentiles, and the
+weight-bytes saving. Default is a closed-loop drain (submit everything,
+run until done); ``--trace-rate R`` switches to an open-loop Poisson trace
+(`serving.loadgen`) at R requests per engine step, where queueing delay
+shows up in TTFT and ``--max-queue`` sheds load via backpressure.
 """
 
 from __future__ import annotations
@@ -22,7 +26,8 @@ from repro import configs
 from repro.core import pruning, tiled_csl
 from repro.distributed import fault_tolerance as ft
 from repro.models import transformer, nn
-from repro.serving import batching, budget, speculative
+from repro.serving import api, budget, loadgen, speculative
+from repro.serving.scheduler import latency_summary
 
 
 def main() -> None:
@@ -60,6 +65,12 @@ def main() -> None:
                     help="arch id for --drafter model (smoke-sized init)")
     ap.add_argument("--max-ngram", type=int, default=3,
                     help="longest suffix n-gram the ngram drafter matches")
+    ap.add_argument("--trace-rate", type=float, default=None, metavar="R",
+                    help="open-loop mode: Poisson arrivals at R requests "
+                         "per engine step (default: closed-loop drain)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="admission queue bound; beyond it submissions are "
+                         "shed with backpressure (open-loop mode)")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -121,24 +132,54 @@ def main() -> None:
             args.drafter, max_ngram=args.max_ngram,
             draft_params=draft_params, draft_cfg=draft_cfg,
             vocab=cfg.vocab if args.drafter == "model" else None)
-    b = batching.ContinuousBatcher(
-        params, cfg, n_slots=args.slots, max_len=args.max_len,
+    server = api.StreamingServer(
+        params, cfg, max_queue=args.max_queue,
+        n_slots=args.slots, max_len=args.max_len,
         cache_kind="paged" if args.paged else "dense",
         block_size=args.block_size, n_blocks=n_blocks,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
         spec_k=args.spec_k, drafter=drafter)
-    rng = np.random.default_rng(args.seed)
-    for uid in range(args.requests):
-        plen = int(rng.integers(4, min(16, args.max_len - args.max_new)))
-        b.submit(uid, rng.integers(0, cfg.vocab, plen).astype(np.int64),
-                 args.max_new)
+    b = server.batcher
     t0 = time.time()
-    done = b.run_to_completion()
+    n_shed = 0
+    if args.trace_rate is not None:
+        # Open-loop: arrivals on their own (virtual-step) schedule; the
+        # server's latency stamps stay wall-clock.
+        lo = 4
+        hi = max(lo + 1, min(16, args.max_len - args.max_new))
+        trace = loadgen.make_trace(
+            seed=args.seed, n_requests=args.requests,
+            rate=args.trace_rate, vocab=cfg.vocab,
+            tenants=[loadgen.TenantSpec(
+                "cli", suffix_len=(lo, hi),
+                max_new=(args.max_new, args.max_new + 1))])
+        result = loadgen.replay(server, trace,
+                                loadgen.StepClock(dt=1.0))
+        responses, n_shed = result.responses, len(result.rejected)
+    else:
+        rng = np.random.default_rng(args.seed)
+        for uid in range(args.requests):
+            plen = int(rng.integers(4, min(16, args.max_len - args.max_new)))
+            server.submit(api.GenerationRequest(
+                prompt=rng.integers(0, cfg.vocab, plen).astype(np.int64),
+                max_new_tokens=args.max_new))
+        responses = server.run_until_drained()
     dt = time.time() - t0
+    done = {r.session_id: r.tokens for r in responses}
     n_tokens = sum(len(v) for v in done.values())
     print(f"served {len(done)} requests / {n_tokens} tokens in {dt:.2f}s "
-          f"({n_tokens / dt:.1f} tok/s, params={n_dense / 1e6:.1f}M)")
+          f"({n_tokens / dt:.1f} tok/s, params={n_dense / 1e6:.1f}M"
+          + (f", {n_shed} shed by backpressure" if n_shed else "") + ")")
     m = b.metrics
+    ttft = latency_summary([r.ttft_s for r in responses
+                            if r.ttft_s is not None])
+    tpot = latency_summary([r.tpot_s for r in responses
+                            if r.tpot_s is not None])
+    if ttft["n"]:
+        print(f"latency: ttft p50/p99 = {ttft['p50'] * 1e3:.0f}/"
+              f"{ttft['p99'] * 1e3:.0f} ms"
+              + (f", tpot p50/p99 = {tpot['p50'] * 1e3:.0f}/"
+                 f"{tpot['p99'] * 1e3:.0f} ms" if tpot["n"] else ""))
     print(f"scheduler: occupancy={m.occupancy:.2f} "
           f"queue_wait={m.mean_queue_wait_steps:.1f} steps "
           f"prefill/decode={m.prefill_tokens}/{m.decode_tokens} tok "
@@ -154,8 +195,8 @@ def main() -> None:
               f"drafted={m.drafted} accepted={m.accepted} "
               f"accept_rate={m.accept_rate:.2f} "
               f"tokens_per_step={m.tokens_per_step:.2f}")
-    for uid in sorted(done)[:3]:
-        print(f"  req {uid}: {done[uid][:8]}...")
+    for sid in sorted(done)[:3]:
+        print(f"  {sid}: {done[sid][:8]}...")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,256 @@
+"""Session-oriented streaming front-end over the continuous batcher.
+
+DESIGN.md §13: the request-level surface the examples, the load harness
+(`serving/loadgen.py`), and `launch/serve.py` sit on. The batcher speaks
+integer uids and returns finished token lists per step; this module wraps
+it with the schema shape serving clients actually need (deepsparse's
+``TextGenerationPipeline`` input/output schemas are the exemplar):
+
+* **Typed request/response** — :class:`GenerationRequest` in,
+  :class:`GenerationResponse` out, joined by a string ``session_id``
+  (caller-chosen or auto-assigned; duplicates among *live* sessions are
+  rejected, finished ids may be reused).
+* **Per-token streaming** — a request's ``on_token`` callback fires once
+  per generated token as server steps complete, each with a
+  :class:`TokenEvent` carrying the token, its index, and — on the last
+  event — the finish reason. Tokens are delivered exactly once per index,
+  in order, even across preemption (a preempted request's re-prefill
+  regenerates its identical stream; only tokens beyond the delivered
+  watermark produce events).
+* **Cancellation** — :meth:`StreamingServer.cancel` works in every live
+  state (queued, mid-prefill admission, actively decoding, preempted);
+  slot and KV-block state is released immediately and the pool stays
+  invariant-clean (`tests/test_serving_api.py`). The response (and the
+  final token event) report ``finish_reason="cancelled"``.
+* **Backpressure** — :meth:`StreamingServer.submit` raises
+  :class:`Backpressure` once ``max_queue`` sessions are waiting for
+  admission, carrying the queue depth and the pool's free-block count so
+  callers can shed or retry; the open-loop load generator records these
+  as rejections. A rejected submit leaves zero residual state. (Admission
+  itself still gates on block availability *inside* the batcher — the
+  queue bound is the knob that turns that internal stall into an external
+  signal instead of unbounded buffering.)
+
+The server is a cooperative loop, not a thread: callers (or the loadgen
+replay harness) interleave ``submit`` / ``cancel`` with ``step`` calls;
+each ``step`` runs one engine step and returns the sessions that finished
+in it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.batching import ContinuousBatcher
+
+
+class Backpressure(RuntimeError):
+    """Raised by submit when the server's admission queue is full.
+
+    Carries what a shedding/retry policy needs: how many sessions are
+    already waiting (``queue_depth`` vs ``max_queue``) and how many KV
+    blocks the pool could currently offer (``blocks_available``; None for
+    the dense cache, which admits on free slots alone).
+    """
+
+    def __init__(self, queue_depth: int, max_queue: int,
+                 blocks_available: Optional[int]):
+        self.queue_depth = queue_depth
+        self.max_queue = max_queue
+        self.blocks_available = blocks_available
+        super().__init__(
+            f"admission queue full ({queue_depth}/{max_queue} waiting"
+            + (f", {blocks_available} KV blocks free" if
+               blocks_available is not None else "") + ")")
+
+
+class RequestRejected(ValueError):
+    """A request the server can never run (malformed prompt, uid overflow,
+    or a prompt+budget the KV pool cannot hold to completion). Submit
+    validates before mutating anything, so rejection leaves no state."""
+
+
+@dataclasses.dataclass
+class GenerationRequest:
+    """One generation call. ``session_id`` is the caller's handle for
+    streaming and cancellation (auto-assigned when None); ``on_token``
+    streams tokens as they are generated."""
+
+    prompt: np.ndarray
+    max_new_tokens: int
+    session_id: Optional[str] = None
+    on_token: Optional[Callable[["TokenEvent"], None]] = None
+
+
+@dataclasses.dataclass
+class TokenEvent:
+    """One streamed token. ``index`` counts from 0 within the session;
+    ``finish_reason`` is non-empty exactly on the session's last event."""
+
+    session_id: str
+    token: int
+    index: int
+    finish_reason: str = ""
+
+
+@dataclasses.dataclass
+class GenerationResponse:
+    """A finished (or cancelled) session: every generated token (stop
+    token included, matching `engine.generate`), why it stopped, and its
+    wall-clock latencies on the server's clock. ``ttft_s`` is None for a
+    request cancelled before its first token; ``tpot_s`` needs at least
+    two tokens."""
+
+    session_id: str
+    tokens: List[int]
+    finish_reason: str
+    submit_t: float
+    finish_t: float
+    ttft_s: Optional[float]
+    tpot_s: Optional[float]
+
+
+@dataclasses.dataclass
+class _Session:
+    uid: int
+    session_id: str
+    req: Any                        # the scheduler's Request (direct ref:
+                                    # immune to the batcher's history eviction)
+    on_token: Optional[Callable[[TokenEvent], None]]
+    delivered: int = 0              # streaming watermark (tokens emitted)
+
+
+class StreamingServer:
+    """Session façade over one :class:`ContinuousBatcher`.
+
+    ``max_queue`` bounds the sessions waiting for admission (backpressure
+    trips beyond it; None = unbounded). All batcher keyword arguments pass
+    through, so cache kind, sampling, speculation, and the latency clock
+    are configured in one place::
+
+        server = StreamingServer(params, cfg, n_slots=4, max_len=128,
+                                 cache_kind="paged", max_queue=16)
+        sid = server.submit(GenerationRequest(prompt, 32, on_token=print))
+        while server.busy:
+            for resp in server.step():
+                ...
+    """
+
+    def __init__(self, params, cfg, *, max_queue: Optional[int] = None,
+                 **batcher_kwargs):
+        self.batcher = ContinuousBatcher(params, cfg, **batcher_kwargs)
+        self.max_queue = max_queue
+        self._sessions: Dict[str, _Session] = {}   # live only
+        self._by_uid: Dict[int, _Session] = {}
+        self._next_uid = 0
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return self.batcher.busy
+
+    @property
+    def queue_depth(self) -> int:
+        return self.batcher.sched.queue_depth
+
+    @property
+    def metrics(self):
+        return self.batcher.metrics
+
+    def live_sessions(self) -> List[str]:
+        return list(self._sessions)
+
+    # -- submit / cancel -----------------------------------------------------
+    def submit(self, request: GenerationRequest) -> str:
+        """Queue a generation; returns its session id. Raises
+        :class:`Backpressure` (queue full) or :class:`RequestRejected`
+        (never-runnable request / duplicate live session id) — both before
+        any state is created."""
+        sid = request.session_id
+        if sid is None:
+            sid = f"s{self._next_uid}"
+        if sid in self._sessions:
+            raise RequestRejected(
+                f"session id {sid!r} is still live; cancel it or pick "
+                f"another id")
+        depth = self.queue_depth
+        if self.max_queue is not None and depth >= self.max_queue:
+            pool = self.batcher.pool
+            raise Backpressure(depth, self.max_queue,
+                               pool.available if pool is not None else None)
+        uid = self._next_uid
+        try:
+            req = self.batcher.submit(uid, request.prompt,
+                                      request.max_new_tokens)
+        except ValueError as e:
+            raise RequestRejected(str(e)) from e
+        self._next_uid += 1
+        sess = _Session(uid, sid, req, request.on_token)
+        self._sessions[sid] = sess
+        self._by_uid[uid] = sess
+        return sid
+
+    def cancel(self, session_id: str) -> Optional[GenerationResponse]:
+        """Cancel a live session in any state. Already-generated tokens are
+        returned (finish_reason="cancelled"); the final token event fires
+        if any token had been generated but not yet streamed. Returns None
+        for unknown/finished ids (cancellation races are benign)."""
+        sess = self._sessions.get(session_id)
+        if sess is None:
+            return None
+        if self.batcher.cancel(sess.uid) is None:
+            return None                       # finished in the same step
+        self._drain_stream(sess, sess.req)
+        return self._close(sess)
+
+    # -- stepping ------------------------------------------------------------
+    def step(self) -> List[GenerationResponse]:
+        """Run one engine step; stream every newly generated token to its
+        session's callback, then return the sessions that finished."""
+        finished = self.batcher.step()
+        # Stream in uid order (stable, independent of slot assignment).
+        for sess in sorted(self._by_uid.values(), key=lambda s: s.uid):
+            self._drain_stream(sess, sess.req)
+        out: List[GenerationResponse] = []
+        for uid in finished:
+            sess = self._by_uid.get(uid)
+            if sess is not None:
+                out.append(self._close(sess))
+        return out
+
+    def run_until_drained(self, max_steps: int = 10_000
+                          ) -> List[GenerationResponse]:
+        """Step until nothing is queued or active; returns every response
+        finished along the way (cancelled sessions were already returned
+        by their ``cancel`` call)."""
+        out: List[GenerationResponse] = []
+        for _ in range(max_steps):
+            out.extend(self.step())
+            if not self.busy:
+                break
+        return out
+
+    # -- internals -----------------------------------------------------------
+    def _drain_stream(self, sess: _Session, req) -> None:
+        if sess.on_token is None:
+            sess.delivered = len(req.generated)
+            return
+        n = len(req.generated)
+        for i in range(sess.delivered, n):
+            last = req.done and i == n - 1
+            sess.on_token(TokenEvent(
+                session_id=sess.session_id, token=req.generated[i],
+                index=i, finish_reason=req.finish_reason if last else ""))
+        sess.delivered = n
+
+    def _close(self, sess: _Session) -> GenerationResponse:
+        req = sess.req
+        del self._sessions[sess.session_id]
+        del self._by_uid[sess.uid]
+        return GenerationResponse(
+            session_id=sess.session_id, tokens=list(req.generated),
+            finish_reason=req.finish_reason, submit_t=req.submit_t,
+            finish_t=req.finish_t, ttft_s=req.ttft_s, tpot_s=req.tpot_s)

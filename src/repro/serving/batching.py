@@ -1,10 +1,26 @@
-"""Continuous batching scheduler (slot-based), the production serving loop.
+"""Continuous batching: the compatibility facade over scheduler + stepper.
 
 The paper's throughput win comes from freeing GPU memory (sparse weights) so
 *more* requests fit in flight (Table 1: batch 64 on one GPU vs OOM for
-dense). This scheduler is the piece that converts that memory headroom into
+dense). The serving loop converts that memory headroom into
 tokens/GPU-second: a fixed pool of B decode slots; finished/empty slots are
 refilled from a request queue without stopping the decode loop.
+
+Since the DESIGN.md §13 layer split, the loop itself lives in two modules:
+
+* `serving/scheduler.py` — the scheduling-policy core: bucketed FIFO
+  admission, block-availability gating, preemption, speculative staging,
+  cancellation, metrics. Pure host state machine; plans work, commits
+  results, never touches a device array.
+* `serving/step.py` — the device layer: params, K/V cache, and the jitted
+  prefill / decode / verify entry points that execute those plans.
+
+:class:`ContinuousBatcher` composes the two behind the original monolith's
+interface (submit / step / run_to_completion, plus the introspection
+attributes the tests and benches rely on: ``slots``, ``queue``, ``pos``,
+``tables``, ``pool``, ``metrics``…). New code that wants streaming,
+cancellation, or backpressure should sit on `serving/api.py`, which wraps
+this facade with session-oriented request/response schemas.
 
 Admission path (the part traffic diversity stresses):
 
@@ -28,8 +44,8 @@ slot per engine step, each slot at its own absolute position. Requests
 terminate on EOS / stop tokens, on their ``max_new_tokens`` budget, or when
 the slot's cache region is exhausted (``max_len`` truncation).
 ``SchedulerMetrics`` counts what the loop did (occupancy, queue wait,
-prefill vs decode tokens, padding overhead, compile count) — surfaced by
-``benchmarks/e2e_throughput.py`` and ``examples/serve_batched.py``.
+prefill vs decode tokens, padding overhead, TTFT/TPOT, compile count) —
+surfaced by ``benchmarks/serving_load.py`` and ``examples/serve_batched.py``.
 
 Cache kinds (DESIGN.md §7 vs §10):
 
@@ -54,107 +70,17 @@ index), so streams are independent of admission order and preemption.
 
 from __future__ import annotations
 
-import dataclasses
 import time
-from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
-from repro.serving import engine, paged_cache, speculative
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray              # [S] token ids
-    max_new_tokens: int
-    generated: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    pending: bool = True            # still queued (not yet taken for admission)
-    finish_reason: str = ""         # "stop" | "max_new_tokens" | "max_len"
-    submit_step: int = 0            # engine step at submit (queue-wait metric)
-    admit_step: int = -1
-
-
-@dataclasses.dataclass
-class SchedulerMetrics:
-    """Counters the serving loop maintains; all host-side, no device sync."""
-
-    steps: int = 0
-    admitted: int = 0
-    completed: int = 0
-    eos_terminated: int = 0
-    truncated: int = 0
-    prefill_calls: int = 0
-    prefill_tokens: int = 0          # real prompt tokens
-    padded_prefill_tokens: int = 0   # incl. bucket padding + group padding
-    decode_tokens: int = 0
-    queue_wait_steps: int = 0        # summed over admitted requests
-    active_slot_steps: int = 0       # occupancy numerator
-    slot_steps: int = 0              # n_slots * steps
-    admit_time_s: float = 0.0
-    decode_time_s: float = 0.0
-    bucket_admits: Dict[int, int] = dataclasses.field(default_factory=dict)
-    # paged-cache counters (all zero under cache_kind="dense")
-    prefix_hit_tokens: int = 0       # prompt tokens served by shared blocks
-    preemptions: int = 0             # pool-exhaustion preempt-and-requeue
-    cow_copies: int = 0              # copy-on-write block copies
-    blocks_in_use: int = 0           # gauge: pool blocks held right now
-    peak_blocks_in_use: int = 0      # high-water mark of the pool
-    peak_active_slots: int = 0       # max concurrently-decoding requests
-    # speculative-decoding counters (zero when spec_k == 0)
-    drafted: int = 0                 # draft tokens submitted to verify
-    accepted: int = 0                # draft tokens accepted by the target
-
-    @property
-    def prefix_hit_rate(self) -> float:
-        """Fraction of prefilled prompt tokens backed by shared blocks."""
-        return self.prefix_hit_tokens / max(self.prefill_tokens, 1)
-
-    @property
-    def accept_rate(self) -> float:
-        """Fraction of drafted tokens the target model accepted."""
-        return self.accepted / max(self.drafted, 1)
-
-    @property
-    def tokens_per_step(self) -> float:
-        """Decode tokens emitted per active slot-step — the speculative
-        win's currency: exactly 1.0 for plain decode, 1 + accepted drafts
-        per slot-step with verification."""
-        return self.decode_tokens / max(self.active_slot_steps, 1)
-
-    @property
-    def occupancy(self) -> float:
-        return self.active_slot_steps / max(self.slot_steps, 1)
-
-    @property
-    def prefill_padding_overhead(self) -> float:
-        """Fraction of prefilled tokens that were bucket/group padding.
-
-        0.0 before any prefill has happened (not the 100% overhead the
-        ``max(·, 1)`` denominator guard used to report)."""
-        if self.padded_prefill_tokens == 0:
-            return 0.0
-        return 1.0 - self.prefill_tokens / self.padded_prefill_tokens
-
-    @property
-    def mean_queue_wait_steps(self) -> float:
-        return self.queue_wait_steps / max(self.admitted, 1)
-
-    def as_dict(self) -> Dict[str, Any]:
-        d = dataclasses.asdict(self)
-        d["occupancy"] = self.occupancy
-        d["prefill_padding_overhead"] = self.prefill_padding_overhead
-        d["mean_queue_wait_steps"] = self.mean_queue_wait_steps
-        d["prefix_hit_rate"] = self.prefix_hit_rate
-        d["accept_rate"] = self.accept_rate
-        d["tokens_per_step"] = self.tokens_per_step
-        return d
+from repro.serving import engine, speculative
+from repro.serving.scheduler import (Request, Scheduler,  # noqa: F401
+                                     SchedulerMetrics)
+from repro.serving.step import DeviceStepper
 
 
 class ContinuousBatcher:
@@ -184,6 +110,10 @@ class ContinuousBatcher:
     advances by 1 + accepted tokens. Greedy streams are bitwise the
     non-speculative ones; sampled streams match too because the verify
     columns draw with the same (uid, token-index)-folded keys.
+
+    ``clock`` injects the wall-clock source for the per-request latency
+    stamps (default ``time.monotonic``; `serving.loadgen.StepClock` makes
+    replayed traces deterministic).
     """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
@@ -196,7 +126,8 @@ class ContinuousBatcher:
                  n_blocks: Optional[int] = None, reserve_blocks: int = 1,
                  prefix_sharing: bool = True,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 spec_k: int = 0, drafter=None):
+                 spec_k: int = 0, drafter=None,
+                 clock: Optional[Callable[[], float]] = None):
         if cfg.n_codebooks:
             raise ValueError("codebook (audio) archs need [n_cb, S] prompts; "
                              "drive engine.generate directly")
@@ -210,10 +141,8 @@ class ContinuousBatcher:
         self.paged = cache_kind == "paged"
         self.temperature = float(temperature)
         self.top_k = int(top_k)
-        self._base_key = jax.random.PRNGKey(seed)
-        self.stop_ids = frozenset(
-            ([] if eos_id is None else [int(eos_id)])
-            + [int(t) for t in stop_ids])
+        stop = frozenset(([] if eos_id is None else [int(eos_id)])
+                         + [int(t) for t in stop_ids])
         self.admit_k = max(1, min(admit_k or min(n_slots, 4), n_slots))
         # Recurrent state (ssm/rglru) cannot absorb pad tokens — bucket
         # padding is exact only for pure-attention stacks. Others degrade to
@@ -221,57 +150,12 @@ class ContinuousBatcher:
         # this scheduler existed — never worse, attention archs far better).
         self._pure_attn = all(cfg.layer_kind(i) == "attn"
                               for i in range(cfg.n_layers))
-        self.buckets: Optional[Tuple[int, ...]] = (
-            engine.length_buckets(max_len, min_bucket) if self._pure_attn
-            else None)
-        # FIFO arrival order (head-of-line fairness) + per-bucket index so a
-        # same-bucket admission group is O(group), not a full-queue rebuild.
-        # Entries admitted via the bucket index go stale in ``queue`` and are
-        # lazily purged from its head (O(1) amortized).
-        self.queue: Deque[Request] = deque()
-        self._by_bucket: Dict[int, Deque[Request]] = {}
-        # uid -> Request for introspection; finished entries are evicted
-        # beyond ``request_history`` so a long-running server stays bounded.
-        self.requests: Dict[int, Request] = {}
-        self._done_uids: Deque[int] = deque()
-        self._request_history = request_history
-        self.slots: List[Optional[Request]] = [None] * n_slots
-        self.pos = np.zeros(n_slots, np.int32)      # per-slot next position
-        self.last_token = np.zeros(n_slots, np.int64)
-        self.metrics = SchedulerMetrics()
+        buckets = (engine.length_buckets(max_len, min_bucket)
+                   if self._pure_attn else None)
         # Ring length for sliding-window configs (positions live at
         # ``pos % ring_len``; None for ordinary causal stacks).
         self.ring_len = (min(max_len, cfg.local_window)
                          if cfg.local_window is not None else None)
-        if self.paged:
-            self.block_size = block_size
-            self.max_blocks = transformer.paged_blocks_per_seq(
-                cfg, max_len, block_size)
-            if n_blocks is None:
-                n_blocks = n_slots * self.max_blocks   # dense byte-equivalent
-            self.reserve_blocks = max(0, reserve_blocks)
-            # Ring blocks are overwritten cyclically — content is not a pure
-            # function of the token prefix, so sharing is causal-only.
-            self.pool = paged_cache.BlockPool(
-                n_blocks, block_size,
-                prefix_sharing=prefix_sharing and self.ring_len is None)
-            self.tables: List[Optional[paged_cache.BlockTable]] = \
-                [None] * n_slots
-            self._table_arr = np.full((n_slots, self.max_blocks),
-                                      paged_cache.TRASH_BLOCK, np.int32)
-            self.cache = transformer.init_paged_cache(
-                cfg, self.pool.physical_blocks, block_size)
-            self._prefill = jax.jit(
-                lambda p, c, t, bm, l: engine.prefill_into_pages(
-                    p, c, t, bm, l, self.cfg, backend=self.backend))
-        else:
-            self.cache = transformer.init_cache(cfg, n_slots, max_len)
-            self._prefill = jax.jit(
-                lambda p, c, t, s, l: engine.prefill_into_slots(
-                    p, c, t, s, l, self.cfg, backend=self.backend))
-        self._decode = jax.jit(
-            lambda p, c, t, pos, tab, u, n: self._decode_step(
-                p, c, t, pos, tab, u, n))
         self.spec_k = int(spec_k)
         self.drafter = drafter
         if self.spec_k:
@@ -286,538 +170,135 @@ class ContinuousBatcher:
                     f"window ring ({self.ring_len}); lower spec_k")
             if self.drafter is None:
                 self.drafter = speculative.NgramDrafter()
-            self._verify = jax.jit(
-                lambda p, c, t, pos, tab, dl, u, n: engine.verify_step(
-                    p, c, t, pos, tab, dl, u, n, self.cfg,
-                    ring_len=self.ring_len, temperature=self.temperature,
-                    top_k=self.top_k, base_key=self._base_key,
-                    backend=self.backend))
+        if self.paged:
+            self.block_size = block_size
+            self.max_blocks = transformer.paged_blocks_per_seq(
+                cfg, max_len, block_size)
+            if n_blocks is None:
+                n_blocks = n_slots * self.max_blocks   # dense byte-equivalent
+        self.sched = Scheduler(
+            n_slots=n_slots, max_len=max_len, stop_ids=stop,
+            admit_k=self.admit_k, buckets=buckets, ring_len=self.ring_len,
+            paged=self.paged, block_size=block_size, n_blocks=n_blocks,
+            max_blocks=self.max_blocks if self.paged else 0,
+            reserve_blocks=reserve_blocks, prefix_sharing=prefix_sharing,
+            request_history=request_history, spec_k=self.spec_k,
+            drafter=self.drafter, sampled=self.temperature != 0.0,
+            clock=clock)
+        self.stepper = DeviceStepper(
+            params, cfg, n_slots=n_slots, max_len=max_len, backend=backend,
+            physical_blocks=(self.sched.pool.physical_blocks
+                             if self.paged else None),
+            block_size=block_size, ring_len=self.ring_len,
+            temperature=temperature, top_k=top_k, seed=seed,
+            spec_k=self.spec_k)
 
-    # -- jitted per-slot-position decode: positions differ per slot --------
-    def _decode_step(self, params, cache, token, pos_vec, tables, uids,
-                     counts):
-        """token: [B,1]; pos_vec: [B] — per-slot absolute positions.
+    # -- delegation: the monolith's introspection surface -------------------
+    @property
+    def buckets(self):
+        return self.sched.buckets
 
-        The decode path accepts a position *vector*: each slot's K/V is
-        written at its own cache index and masked by its own causal bound,
-        so one batched step serves slots at heterogeneous progress.
-        ``tables`` routes the paged block-pool path; ``uids``/``counts``
-        fold the per-slot sampling keys (unused — and dead-code-eliminated
-        — for greedy decoding).
-        """
-        logits, cache, _ = transformer.forward(
-            params, {"tokens": token}, self.cfg, mode="decode",
-            cache=cache, pos=pos_vec, block_tables=tables,
-            ring_len=self.ring_len if tables is not None else None,
-            backend=self.backend)
-        logits = logits[:, -1]
-        if self.temperature == 0.0:
-            tok = jnp.argmax(logits, axis=-1)
-        else:
-            keys = engine.fold_slot_keys(self._base_key, uids, counts)
-            tok = engine.sample_per_slot(logits, keys,
-                                         temperature=self.temperature,
-                                         top_k=self.top_k)
-        return tok, cache
+    @property
+    def stop_ids(self):
+        return self.sched.stop_ids
 
-    # -- public API ---------------------------------------------------------
+    @property
+    def queue(self):
+        return self.sched.queue
+
+    @property
+    def requests(self):
+        return self.sched.requests
+
+    @property
+    def slots(self):
+        return self.sched.slots
+
+    @property
+    def pos(self):
+        return self.sched.pos
+
+    @property
+    def last_token(self):
+        return self.sched.last_token
+
+    @property
+    def tables(self):
+        return self.sched.tables
+
+    @property
+    def pool(self):
+        return self.sched.pool
+
+    @property
+    def metrics(self) -> SchedulerMetrics:
+        return self.sched.metrics
+
+    @metrics.setter
+    def metrics(self, value: SchedulerMetrics) -> None:
+        self.sched.metrics = value
+
+    @property
+    def cache(self):
+        return self.stepper.cache
+
+    @cache.setter
+    def cache(self, value) -> None:
+        self.stepper.cache = value
+
     @property
     def prefill_compiles(self) -> int:
         """Distinct prefill shapes compiled so far (one per bucket hit)."""
-        try:
-            return int(self._prefill._cache_size())
-        except Exception:  # jit internals moved — fall back to buckets seen
+        n = self.stepper.prefill_compiles
+        if n is None:  # jit internals moved — fall back to buckets seen
             return len(self.metrics.bucket_admits)
+        return n
 
-    def submit(self, uid: int, prompt: np.ndarray, max_new_tokens: int):
-        prompt = np.asarray(prompt)
-        if prompt.ndim != 1 or prompt.size == 0:
-            raise ValueError(f"prompt must be a non-empty 1-D token array, "
-                             f"got shape {prompt.shape}")
-        if prompt.size > self.max_len - 1:
-            raise ValueError(f"prompt length {prompt.size} needs "
-                             f">= {prompt.size + 1} cache positions; "
-                             f"max_len is {self.max_len}")
-        if not 0 <= uid < 2 ** 32:
-            # per-slot sampling keys fold the uid as uint32 data
-            raise ValueError(f"request uid must fit uint32, got {uid}")
-        if self.paged:
-            # Reject requests the pool can never run to completion: decode
-            # growth reaches blocks_for(prompt + generated K/V positions,
-            # max_len/ring-capped); admitting one and crashing mid-decode
-            # would take down every other in-flight request. This bound
-            # also dominates every (re-)admission's _admit_positions need.
-            n_pos = min(prompt.size + max(max_new_tokens - 1, 0),
-                        self.max_len)
-            if self.ring_len is not None:
-                n_pos = min(n_pos, self.ring_len)
-            need = self.pool.blocks_for(n_pos)
-            if need > self.pool.n_blocks:
-                raise ValueError(
-                    f"request needs up to {need} KV blocks "
-                    f"({n_pos} positions at block_size={self.block_size}) "
-                    f"but the pool has only {self.pool.n_blocks}; raise "
-                    f"n_blocks (budget) or lower max_new_tokens")
-        cur = self.requests.get(uid)
-        if cur is not None and not cur.done:
-            raise ValueError(f"request uid {uid} is still queued or active")
-        req = Request(uid, prompt, max_new_tokens,
-                      submit_step=self.metrics.steps)
-        self.queue.append(req)
-        self._by_bucket.setdefault(self._bucket(req), deque()).append(req)
-        self.requests[uid] = req
+    @property
+    def busy(self) -> bool:
+        """Anything queued or decoding — ``run_to_completion``'s (and the
+        session API's) drain condition."""
+        return self.sched.busy
 
-    def _full_tokens(self, req: Request) -> np.ndarray:
-        """Tokens a (re-)prefill must process: the prompt plus, for a
-        preempted request, everything it had already generated — greedy
-        re-prefill of that concatenation regenerates the identical next
-        token (recompute-style resume)."""
-        if not req.generated:
-            return req.prompt
-        return np.concatenate(
-            [req.prompt, np.asarray(req.generated, req.prompt.dtype)])
+    # -- public API ---------------------------------------------------------
+    def submit(self, uid: int, prompt: np.ndarray,
+               max_new_tokens: int) -> Request:
+        return self.sched.submit(uid, prompt, max_new_tokens)
 
-    def _bucket(self, req: Request) -> int:
-        n = len(req.prompt) + len(req.generated)
-        if self.buckets is None:
-            return n
-        return engine.bucket_for(n, self.buckets)
-
-    def _admit_positions(self, req: Request) -> int:
-        """Cache positions ``req``'s (re-)admission must cover: its resume
-        tokens plus one decode-headroom position — charged only if the
-        request will actually decode after the admission's own token (a
-        resume holding max_new - 1 tokens finishes at admission without a
-        decode write) — capped at the cache capacity (a resume holding
-        exactly ``max_len`` tokens finishes as max_len truncation) and at
-        the ring. The worst case over a request's lifetime equals the
-        ``submit``-time completability bound."""
-        n_tokens = len(req.prompt) + len(req.generated)
-        will_decode = len(req.generated) + 1 < req.max_new_tokens
-        n_pos = min(n_tokens + (1 if will_decode else 0), self.max_len)
-        if self.ring_len is not None:
-            n_pos = min(n_pos, self.ring_len)
-        return n_pos
-
-    def _blocks_needed(self, req: Request) -> int:
-        """Worst-case (no sharing) pool blocks to admit ``req``."""
-        return self.pool.blocks_for(self._admit_positions(req))
-
-    def _finish(self, req: Request, slot: int, reason: str,
-                finished: Dict[int, List[int]]):
-        req.done = True
-        req.finish_reason = reason
-        finished[req.uid] = req.generated
-        self._release_slot(slot)
-        self.metrics.completed += 1
-        if reason == "stop":
-            self.metrics.eos_terminated += 1
-        elif reason == "max_len":
-            self.metrics.truncated += 1
-        self._done_uids.append(req.uid)
-        while len(self._done_uids) > self._request_history:
-            old = self._done_uids.popleft()
-            cur = self.requests.get(old)
-            if cur is not None and cur.done:   # uid may have been resubmitted
-                del self.requests[old]
-
-    def _release_slot(self, slot: int) -> None:
-        self.slots[slot] = None
-        self.pos[slot] = 0
-        self.last_token[slot] = 0
-        if self.paged and self.tables[slot] is not None:
-            self.pool.free_table(self.tables[slot])
-            self.tables[slot] = None
-            self._table_arr[slot] = paged_cache.TRASH_BLOCK
-
-    def _preempt_youngest(self, exclude: int) -> None:
-        """Pool exhausted mid-decode: evict the youngest request (least
-        work lost) back to the head of the queue. Its blocks free
-        immediately; it resumes later by re-prefilling prompt+generated."""
-        cand = [s for s, r in enumerate(self.slots)
-                if r is not None and s != exclude]
-        if not cand:
-            raise RuntimeError(
-                f"KV block pool ({self.pool.n_blocks} x {self.block_size}) "
-                f"cannot hold a single request at max_len={self.max_len}; "
-                f"raise n_blocks (budget) or lower max_len")
-        s = max(cand, key=lambda i: (self.slots[i].admit_step, i))
-        req = self.slots[s]
-        self._release_slot(s)
-        req.pending = True
-        req.admit_step = -1
-        # Queue-wait restarts at the requeue: the steps it spent actively
-        # decoding before the preemption are not queue time.
-        req.submit_step = self.metrics.steps
-        self.queue.appendleft(req)
-        self._by_bucket.setdefault(self._bucket(req),
-                                   deque()).appendleft(req)
-        self.metrics.preemptions += 1
-
-    def _ensure_write_targets(self, s: int, n_positions: int) -> None:
-        """Make slot ``s``'s next ``n_positions`` write targets (positions
-        pos..pos+n_positions-1) exist and be private. Growth allocates the
-        next block when a position crosses a block boundary (preempting the
-        youngest request on exhaustion); copy-on-write copies a shared
-        block before it is written (only reachable via forked tables —
-        prompt sharing never covers the write frontier). The single
-        protocol for plain decode (n_positions == 1) and speculative
-        verify windows alike."""
-        for j in range(n_positions):
-            p = int(self.pos[s]) + j
-            slot = p % self.ring_len if self.ring_len is not None else p
-            logical = slot // self.block_size
-            while True:
-                try:
-                    self.pool.ensure_capacity(self.tables[s], logical)
-                    break
-                except paged_cache.PoolExhausted:
-                    self._preempt_youngest(exclude=s)
-            cow = self.pool.ensure_writable(self.tables[s], logical)
-            if cow is not None:
-                self.cache = transformer.copy_cache_block(
-                    self.cfg, self.cache, *cow)
-                self.metrics.cow_copies += 1
-        self._table_arr[s] = self.tables[s].padded(self.max_blocks)
-
-    def _prepare_paged_decode(self) -> None:
-        """Before a decode step: one private write target per active slot."""
-        for s in range(self.n_slots):
-            if self.slots[s] is not None:
-                self._ensure_write_targets(s, 1)
-
-    def _check_done(self, req: Request, slot: int, tok: int,
-                    finished: Dict[int, List[int]]) -> None:
-        """Termination, in priority order: stop token, token budget, cache
-        capacity (per-request max_len truncation)."""
-        if tok in self.stop_ids:
-            self._finish(req, slot, "stop", finished)
-        elif len(req.generated) >= req.max_new_tokens:
-            self._finish(req, slot, "max_new_tokens", finished)
-        elif self.pos[slot] >= self.max_len:
-            self._finish(req, slot, "max_len", finished)
-
-    def _purge_admitted(self):
-        """Drop already-admitted (stale) entries from the queue head, so
-        ``queue`` emptiness keeps meaning "nothing left to admit"."""
-        while self.queue and not self.queue[0].pending:
-            self.queue.popleft()
-
-    def _take_group(self, limit: int) -> List[Request]:
-        """Pop up to ``limit`` same-bucket requests, FIFO: the group takes
-        the head-of-line request's bucket (via the per-bucket index, O(group));
-        non-matching requests keep their relative order.
-
-        Paged admission additionally gates on block availability: a request
-        joins the group only while its worst-case (unshared) block need
-        plus the reservation margin fits the pool — prefix sharing can only
-        reduce the actual allocation, so an admitted group never fails.
-        An empty group means "pool full, wait for completions to free
-        blocks" (head-of-line blocking is deliberate: FIFO fairness).
-        """
-        head_bucket = self._bucket(self.queue[0])
-        bq = self._by_bucket[head_bucket]
-        group: List[Request] = []
-        budget = None
-        if self.paged:
-            budget = self.pool.available - self.reserve_blocks
-            if all(r is None for r in self.slots):
-                # The reserve is decode-growth headroom for *other* active
-                # requests; with nothing in flight it would only wedge a
-                # pool-filling request out of an otherwise idle server.
-                budget = self.pool.available
-        while bq and len(group) < limit:
-            if budget is not None:
-                need = self._blocks_needed(bq[0])
-                if need > budget:
-                    break
-                budget -= need
-            req = bq.popleft()
-            req.pending = False
-            group.append(req)
-        if not bq:
-            del self._by_bucket[head_bucket]
-        self._purge_admitted()
-        return group
-
-    def _sample_admitted(self, logits, group: List[Request]) -> np.ndarray:
-        """First token of each admitted request, via the same per-slot key
-        folding as decode ((uid, token index) -> key), so a preempted
-        request's re-prefill redraws its identical next token."""
-        if self.temperature == 0.0:
-            return np.asarray(jnp.argmax(logits, axis=-1))
-        k = logits.shape[0]
-        uids = np.empty(k, np.uint32)
-        counts = np.empty(k, np.uint32)
-        for i in range(k):
-            req = group[min(i, len(group) - 1)]
-            uids[i] = req.uid
-            counts[i] = len(req.generated)
-        keys = engine.fold_slot_keys(self._base_key, jnp.asarray(uids),
-                                     jnp.asarray(counts))
-        return np.asarray(engine.sample_per_slot(
-            logits, keys, temperature=self.temperature, top_k=self.top_k))
-
-    def _admit(self, finished: Dict[int, List[int]]):
-        m = self.metrics
-        self._purge_admitted()
-        while self.queue:
-            free = [s for s in range(self.n_slots) if self.slots[s] is None]
-            if not free:
-                return
-            group = self._take_group(min(len(free), self.admit_k))
-            if not group:
-                # Block pool full: wait for completions to free blocks. If
-                # nothing is in flight and the pool is already fully free,
-                # waiting can never help — surface the sizing error.
-                if (all(r is None for r in self.slots)
-                        and self.pool.blocks_in_use == 0):
-                    need = self._blocks_needed(self.queue[0])
-                    raise RuntimeError(
-                        f"request uid {self.queue[0].uid} needs {need} KV "
-                        f"blocks + {self.reserve_blocks} reserve but the "
-                        f"pool has only {self.pool.n_blocks}; raise "
-                        f"n_blocks (budget) or block_size")
-                return
-            bucket = self._bucket(group[0])
-            k = self.admit_k
-            # Static [k, bucket] batch: right-pad prompts to the bucket,
-            # pad the group to k by duplicating its last real row (same
-            # slot + same data -> the duplicate scatter writes are
-            # identical, hence exact; works for recurrent state too since
-            # no pad *tokens* are introduced).
-            full = [self._full_tokens(r) for r in group]
-            tokens = np.zeros((k, bucket), np.int64)
-            lens = np.empty(k, np.int32)
-            for i in range(k):
-                ft = full[min(i, len(group) - 1)]
-                tokens[i, :len(ft)] = ft
-                lens[i] = len(ft)
-            if self.paged:
-                logits = self._admit_prefill_paged(group, full, tokens, lens,
-                                                   free, bucket)
-            else:
-                slots_arr = np.empty(k, np.int32)
-                for i in range(k):
-                    slots_arr[i] = free[min(i, len(group) - 1)]
-                logits, self.cache = self._prefill(
-                    self.params, self.cache, jnp.asarray(tokens),
-                    jnp.asarray(slots_arr), jnp.asarray(lens))
-            nxt = self._sample_admitted(logits, group)
-            m.prefill_calls += 1
-            m.padded_prefill_tokens += k * bucket
-            m.bucket_admits[bucket] = m.bucket_admits.get(bucket, 0) + 1
-            for i, req in enumerate(group):
-                s = free[i]
-                self.slots[s] = req
-                self.pos[s] = len(full[i])
-                self.last_token[s] = int(nxt[i])
-                req.generated.append(int(nxt[i]))
-                req.admit_step = m.steps
-                m.admitted += 1
-                m.prefill_tokens += len(full[i])
-                m.queue_wait_steps += m.steps - req.submit_step
-                self._check_done(req, s, int(nxt[i]), finished)
-
-    def _admit_prefill_paged(self, group: List[Request],
-                             full: List[np.ndarray], tokens: np.ndarray,
-                             lens: np.ndarray, free: List[int],
-                             bucket: int):
-        """Allocate block tables (sharing full prompt blocks by chain hash)
-        and prefill through the page scatter. The scratch cache covers
-        ``scr_len`` positions (the bucket, ring-capped); chunks past a
-        request's own blocks write to the trash block."""
-        m = self.metrics
-        k = tokens.shape[0]
-        scr_len = bucket if self.ring_len is None else min(bucket,
-                                                           self.ring_len)
-        nblk_scr = -(-scr_len // self.block_size)
-        block_map = np.full((k, nblk_scr), paged_cache.TRASH_BLOCK, np.int32)
-        for i, (req, ft) in enumerate(zip(group, full)):
-            # _take_group's worst-case gate guarantees this cannot raise.
-            table, hits = self.pool.map_prompt(
-                ft, self._admit_positions(req))
-            m.prefix_hit_tokens += hits
-            s = free[i]
-            self.tables[s] = table
-            self._table_arr[s] = table.padded(self.max_blocks)
-            n = min(len(table.blocks), nblk_scr)
-            block_map[i, :n] = table.blocks[:n]
-        for i in range(len(group), k):     # group padding duplicates a row
-            block_map[i] = block_map[len(group) - 1]
-        logits, self.cache = self._prefill(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(block_map), jnp.asarray(lens))
-        return logits
-
-    # -- speculative decoding (DESIGN.md §11) -------------------------------
-    def _draft_cap(self, req: Request, slot: int) -> int:
-        """Largest useful draft length for this slot: the window must fit
-        the cache (positions pos..pos+L stay under max_len and inside the
-        ring) and the request's remaining token budget (emitting more than
-        the budget would be truncated anyway)."""
-        cap = min(self.spec_k,
-                  self.max_len - 1 - int(self.pos[slot]),
-                  req.max_new_tokens - len(req.generated) - 1)
-        if self.ring_len is not None:
-            cap = min(cap, self.ring_len - 1)
-        return max(cap, 0)
-
-    def _window_new_blocks(self, s: int, n_positions: int) -> int:
-        """Pool blocks slot ``s`` would have to allocate to cover positions
-        pos..pos+n_positions-1 beyond its current table."""
-        need = 0
-        for j in range(n_positions):
-            p = int(self.pos[s]) + j
-            slot = p % self.ring_len if self.ring_len is not None else p
-            need = max(need, slot // self.block_size + 1)
-        return max(0, need - len(self.tables[s].blocks))
-
-    def _stage_spec(self) -> Dict[int, np.ndarray]:
-        """Draft for every active slot, then make the whole verify window's
-        write targets exist and be private (`_ensure_write_targets` over
-        the staged draft length + 1).
-
-        Speculation must be strictly non-harmful under memory pressure: the
-        window's FIRST position keeps plain decode's guarantee (growth may
-        preempt the youngest request — the step cannot proceed without it),
-        but the draft tail is trimmed to the blocks obtainable from the
-        free list, so a maybe-rejected draft never evicts committed work
-        to fund its pages."""
-        staged: Dict[int, np.ndarray] = {}
-        budget = self.pool.available
-        for s in range(self.n_slots):
-            req = self.slots[s]
-            if req is None:
-                continue
-            cap = self._draft_cap(req, s)
-            d = np.empty(0, np.int64)
-            if cap > 0:
-                d = np.asarray(self.drafter.propose(self._full_tokens(req),
-                                                    cap),
-                               dtype=np.int64)[:cap]
-            base_new = self._window_new_blocks(s, 1)
-            L = len(d)
-            while L > 0 and (self._window_new_blocks(s, L + 1)
-                             - base_new) > max(budget - base_new, 0):
-                L -= 1
-            staged[s] = d[:L]
-            budget -= self._window_new_blocks(s, L + 1)
-        for s in range(self.n_slots):
-            if self.slots[s] is not None:
-                self._ensure_write_targets(s, len(staged.get(s, ())) + 1)
-        return staged
-
-    def _rollback_spec_blocks(self, s: int) -> None:
-        """Roll rejected window pages back to the pool: free table blocks
-        past the committed frontier. Their contents were never dirtied —
-        `engine.verify_step` redirects rejected positions to the trash
-        block — so this is pure bookkeeping and leaves the pool
-        invariant-clean."""
-        if self.ring_len is not None:
-            return                  # ring tables are cyclic and capped
-        tbl = self.tables[s]
-        keep = self.pool.blocks_for(int(self.pos[s]))
-        while len(tbl.blocks) > keep:
-            self.pool.decref(tbl.blocks.pop())
-        self._table_arr[s] = tbl.padded(self.max_blocks)
-
-    def _spec_step(self, active: List[int], staged: Dict[int, np.ndarray],
-                   finished: Dict[int, List[int]]) -> None:
-        """One verify step over all active slots: window column 0 is the
-        slot's last token, columns 1..L its drafts. Emitted tokens replay
-        the baseline loop one at a time (same stop/budget/max_len priority
-        order), so a stop token mid-window truncates exactly where the
-        non-speculative stream would have stopped."""
-        m = self.metrics
-        W = self.spec_k + 1
-        tokens = np.zeros((self.n_slots, W), np.int64)
-        tokens[:, 0] = self.last_token
-        draft_lens = np.zeros(self.n_slots, np.int32)
-        uids_np = np.zeros(self.n_slots, np.uint32)
-        counts_np = np.zeros(self.n_slots, np.uint32)
-        for s in active:
-            req = self.slots[s]
-            d = staged.get(s, np.empty(0, np.int64))
-            tokens[s, 1:1 + len(d)] = d
-            draft_lens[s] = len(d)
-            uids_np[s] = req.uid
-            counts_np[s] = len(req.generated)
-            m.drafted += len(d)
-        tgt, n_acc, self.cache = self._verify(
-            self.params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(self.pos), jnp.asarray(self._table_arr),
-            jnp.asarray(draft_lens), jnp.asarray(uids_np),
-            jnp.asarray(counts_np))
-        tgt = np.asarray(tgt)
-        n_acc = np.asarray(n_acc)
-        for s in active:
-            req = self.slots[s]
-            a = int(n_acc[s])
-            emitted = 0
-            for t in tgt[s, :a + 1]:
-                t = int(t)
-                req.generated.append(t)
-                self.pos[s] += 1
-                self.last_token[s] = t
-                emitted += 1
-                m.decode_tokens += 1
-                self._check_done(req, s, t, finished)
-                if req.done:
-                    break
-            # Credit only drafts that became output (the bonus token is not
-            # a draft): a stop token mid-window discards the accepted tail,
-            # so accept_rate stays an emitted-throughput quantity and
-            # decode_tokens >= accepted holds by construction.
-            m.accepted += max(emitted - 1, 0)
-            if not req.done:
-                self._rollback_spec_blocks(s)
-
-    def _plain_decode_step(self, active: List[int],
-                           finished: Dict[int, List[int]]) -> None:
-        """One ordinary batched decode token for every active slot."""
-        m = self.metrics
-        tokens = jnp.asarray(self.last_token[:, None])
-        pos_vec = jnp.asarray(self.pos)
-        uids = counts = None
-        if self.temperature != 0.0:
-            uids_np = np.zeros(self.n_slots, np.uint32)
-            counts_np = np.zeros(self.n_slots, np.uint32)
-            for s in active:
-                uids_np[s] = self.slots[s].uid
-                counts_np[s] = len(self.slots[s].generated)
-            uids, counts = jnp.asarray(uids_np), jnp.asarray(counts_np)
-        tables = jnp.asarray(self._table_arr) if self.paged else None
-        tok, self.cache = self._decode(self.params, self.cache, tokens,
-                                       pos_vec, tables, uids, counts)
-        nxt = np.asarray(tok)
-        m.decode_tokens += len(active)
-        for s in active:
-            req = self.slots[s]
-            req.generated.append(int(nxt[s]))
-            self.pos[s] += 1
-            self.last_token[s] = int(nxt[s])
-            self._check_done(req, s, int(nxt[s]), finished)
+    def cancel(self, uid: int) -> Optional[Request]:
+        """Cancel a live request in any state (queued, active, preempted);
+        see :meth:`Scheduler.cancel`."""
+        return self.sched.cancel(uid)
 
     def step(self) -> Dict[int, List[int]]:
         """Admit + decode one token for all active slots (1 + accepted
         drafts with ``spec_k``). Returns finished."""
-        m = self.metrics
+        sched = self.sched
+        m = sched.metrics
         finished: Dict[int, List[int]] = {}
         t0 = time.monotonic()
-        self._admit(finished)
+        while True:
+            plan = sched.plan_admission()
+            if plan is None:
+                break
+            logits = self.stepper.prefill(plan.tokens, plan.targets,
+                                          plan.lens)
+            nxt = self.stepper.sample_admitted(logits, plan.uids,
+                                               plan.counts)
+            sched.commit_admission(plan, nxt, finished)
         m.admit_time_s += time.monotonic() - t0
         staged: Dict[int, np.ndarray] = {}
         if self.paged:
             # Growth / copy-on-write / preemption happen before the step,
             # so the jitted decode sees fully-valid tables.
             if self.spec_k:
-                staged = self._stage_spec()
+                staged, copies = sched.stage_spec()
             else:
-                self._prepare_paged_decode()
-            m.blocks_in_use = self.pool.blocks_in_use
+                copies = sched.prepare_decode()
+            self.stepper.apply_copies(copies)
+            m.blocks_in_use = sched.pool.blocks_in_use
             m.peak_blocks_in_use = max(m.peak_blocks_in_use, m.blocks_in_use)
-        active = [s for s in range(self.n_slots) if self.slots[s] is not None]
+        active = sched.active_slot_ids()
         m.steps += 1
         m.slot_steps += self.n_slots
         m.active_slot_steps += len(active)
@@ -826,23 +307,31 @@ class ContinuousBatcher:
             return finished
         t0 = time.monotonic()
         if self.spec_k and any(len(staged.get(s, ())) for s in active):
-            self._spec_step(active, staged, finished)
+            vb = sched.build_verify(active, staged)
+            tgt, n_acc = self.stepper.verify(
+                vb.tokens, sched.pos, sched.table_arr, vb.draft_lens,
+                vb.uids, vb.counts)
+            sched.commit_verify(active, tgt, n_acc, finished)
         else:
             # No drafts anywhere (or spec off): ordinary one-token decode —
             # the drafter contract's degradation path, at window width 1
             # instead of a wasted (k+1)-wide verify.
-            self._plain_decode_step(active, finished)
+            uids, counts = sched.decode_folds(active)
+            nxt = self.stepper.decode(sched.last_token, sched.pos,
+                                      sched.table_arr if self.paged else None,
+                                      uids, counts)
+            sched.commit_decode(active, nxt, finished)
         m.decode_time_s += time.monotonic() - t0
         if self.paged:
             # refresh after completions freed their tables (the pre-decode
             # sample above is the high-water mark)
-            m.blocks_in_use = self.pool.blocks_in_use
+            m.blocks_in_use = sched.pool.blocks_in_use
         return finished
 
     def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         out: Dict[int, List[int]] = {}
         for _ in range(max_steps):
             out.update(self.step())
-            if not self.queue and all(s is None for s in self.slots):
+            if not self.busy:
                 break
         return out

@@ -1,0 +1,256 @@
+"""Trace-driven open-loop load generation for the serving stack.
+
+DESIGN.md §13: the measurement half of the session API. The hand-rolled
+"submit everything, run to completion" workloads the benches used to carry
+say nothing about *user-visible* latency — an open-loop generator does:
+requests arrive on their own schedule (Poisson) whether or not the server
+keeps up, so queueing delay shows up in TTFT instead of being hidden by
+closed-loop back-to-back submission.
+
+Three pieces:
+
+* **Traces** — :func:`make_trace` draws a reproducible request trace from
+  a single ``numpy`` Generator seed: Poisson arrivals at ``rate`` requests
+  per (virtual) second, multiplexed over weighted :class:`TenantSpec`
+  tenants, each with its own fixed shared prompt prefix (drawn once per
+  tenant — the prefix-cache workload knob), suffix-length range, and
+  output-budget range. Same seed → byte-identical trace
+  (:func:`trace_fingerprint` is the regression gate's receipt).
+* **Virtual time** — :class:`StepClock` advances a fixed ``dt`` per engine
+  step and doubles as the batcher's latency ``clock``, so replayed TTFT /
+  TPOT are *deterministic* functions of scheduling decisions (units:
+  steps), immune to runner speed — the only latency form a CI gate can
+  diff (`benchmarks/check_regression.py` module docstring). Wall-clock
+  latencies are measured alongside and reported, ungated.
+* **Replay** — :func:`replay` feeds a trace into a
+  `serving.api.StreamingServer` open-loop: submit everything whose arrival
+  time has passed, step once, tick. `api.Backpressure` rejections shed the
+  request (recorded, not retried). :class:`ReplayResult` summarizes both
+  clocks' percentiles plus completion/rejection counts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving import api
+from repro.serving.scheduler import latency_summary
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One traffic class. ``prefix_len`` tokens are drawn once per tenant
+    and shared by all its requests (0 = no sharing); suffixes are unique.
+    Ranges are ``[lo, hi)`` like ``numpy.random.Generator.integers``."""
+
+    name: str
+    weight: float = 1.0
+    prefix_len: int = 0
+    suffix_len: Tuple[int, int] = (8, 16)
+    max_new: Tuple[int, int] = (8, 9)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One arrival: at virtual time ``t``, tenant ``tenant`` submits
+    ``prompt`` with a ``max_new_tokens`` budget."""
+
+    t: float
+    rid: int
+    tenant: str
+    prompt: np.ndarray
+    max_new_tokens: int
+
+
+def make_trace(*, seed: int, n_requests: int, rate: float,
+               tenants: Sequence[TenantSpec], vocab: int
+               ) -> List[TraceRequest]:
+    """Draw a Poisson-arrival trace. Every random quantity comes from one
+    ``default_rng(seed)`` in a fixed draw order (tenant prefixes first,
+    then per-request inter-arrival / tenant / suffix / budget), so the
+    trace is byte-for-byte reproducible from ``seed`` alone."""
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be positive, got {rate}")
+    rng = np.random.default_rng(seed)
+    prefixes = {t.name: rng.integers(0, vocab, t.prefix_len)
+                .astype(np.int64) for t in tenants}
+    weights = np.asarray([t.weight for t in tenants], np.float64)
+    weights = weights / weights.sum()
+    trace: List[TraceRequest] = []
+    t = 0.0
+    for rid in range(n_requests):
+        t += float(rng.exponential(1.0 / rate))
+        spec = tenants[int(rng.choice(len(tenants), p=weights))]
+        suffix = rng.integers(0, vocab,
+                              int(rng.integers(*spec.suffix_len)))
+        prompt = np.concatenate([prefixes[spec.name],
+                                 suffix.astype(np.int64)])
+        trace.append(TraceRequest(
+            t=t, rid=rid, tenant=spec.name, prompt=prompt,
+            max_new_tokens=int(rng.integers(*spec.max_new))))
+    return trace
+
+
+def trace_fingerprint(trace: Sequence[TraceRequest]) -> str:
+    """sha256 over every field of every request — byte-for-byte trace
+    identity for the reproducibility contract (same --seed, same hash)."""
+    h = hashlib.sha256()
+    for r in trace:
+        h.update(f"{r.t!r}|{r.rid}|{r.tenant}|{r.max_new_tokens}|"
+                 .encode())
+        h.update(np.ascontiguousarray(r.prompt, np.int64).tobytes())
+    return h.hexdigest()
+
+
+class StepClock:
+    """Virtual clock: ``dt`` seconds per engine step. Passed as the
+    batcher's ``clock``, it makes every latency stamp a deterministic
+    function of scheduling decisions (a TTFT of 3.0 at dt=1.0 means "first
+    token at the third step"), which is what lets CI gate p99 latency
+    without runner-speed noise."""
+
+    def __init__(self, dt: float = 1.0, t0: float = 0.0):
+        self.dt = dt
+        self.t = t0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def tick(self) -> None:
+        self.t += self.dt
+
+
+@dataclasses.dataclass
+class _WallStamps:
+    submit: float
+    first_token: float = -1.0
+    finish: float = -1.0
+    tokens: int = 0
+
+
+@dataclasses.dataclass
+class ReplayResult:
+    """What one open-loop replay did, on both clocks."""
+
+    responses: List[api.GenerationResponse]
+    rejected: List[int]                  # rids shed by backpressure
+    steps: int
+    wall_s: float                        # total replay wall time
+    wall_ttft_s: List[float]
+    wall_tpot_s: List[float]
+
+    def summary(self) -> Dict[str, Any]:
+        done = [r for r in self.responses
+                if r.finish_reason != "cancelled"]
+        toks = sum(len(r.tokens) for r in done)
+        return {
+            "completed": len(done),
+            "cancelled": len(self.responses) - len(done),
+            "rejected": len(self.rejected),
+            "steps": self.steps,
+            "tokens": toks,
+            "tok_per_s": toks / max(self.wall_s, 1e-9),
+            # virtual = the server clock's stamps (deterministic under
+            # StepClock; units = virtual seconds, i.e. steps at dt=1)
+            "virtual": {
+                "ttft": latency_summary(
+                    [r.ttft_s for r in done if r.ttft_s is not None]),
+                "tpot": latency_summary(
+                    [r.tpot_s for r in done if r.tpot_s is not None]),
+            },
+            # wall = host time around the same replay (runner-dependent;
+            # reported for humans, never gated)
+            "wall": {
+                "ttft": latency_summary(self.wall_ttft_s),
+                "tpot": latency_summary(self.wall_tpot_s),
+            },
+        }
+
+
+def replay(server: api.StreamingServer, trace: Sequence[TraceRequest],
+           clock: StepClock, max_steps: int = 100_000) -> ReplayResult:
+    """Open-loop replay: before each step, submit every request whose
+    arrival time has passed on the virtual clock (idle steps advance time
+    when the server is ahead of the trace); rejections shed. Wall TTFT /
+    TPOT are stamped here from the streaming callbacks, independent of the
+    server's (possibly virtual) latency clock."""
+    pending = deque(sorted(trace, key=lambda r: (r.t, r.rid)))
+    responses: List[api.GenerationResponse] = []
+    rejected: List[int] = []
+    stamps: Dict[str, _WallStamps] = {}
+
+    def on_token(ev: api.TokenEvent) -> None:
+        st = stamps[ev.session_id]
+        if st.first_token < 0:
+            st.first_token = time.monotonic()
+        st.tokens = ev.index + 1
+        if ev.finish_reason:
+            st.finish = time.monotonic()
+
+    steps = 0
+    t0 = time.monotonic()
+    while pending or server.busy:
+        if steps >= max_steps:
+            raise RuntimeError(
+                f"replay did not drain within {max_steps} steps "
+                f"({len(pending)} arrivals pending)")
+        while pending and pending[0].t <= clock():
+            tr = pending.popleft()
+            sid = f"{tr.tenant}/{tr.rid}"
+            stamps[sid] = _WallStamps(submit=time.monotonic())
+            try:
+                server.submit(api.GenerationRequest(
+                    prompt=tr.prompt, max_new_tokens=tr.max_new_tokens,
+                    session_id=sid, on_token=on_token))
+            except api.Backpressure:
+                del stamps[sid]
+                rejected.append(tr.rid)
+        responses.extend(server.step())
+        clock.tick()
+        steps += 1
+    wall_s = time.monotonic() - t0
+    wall_ttft = [st.first_token - st.submit for st in stamps.values()
+                 if st.first_token >= 0]
+    wall_tpot = [(st.finish - st.first_token) / (st.tokens - 1)
+                 for st in stamps.values()
+                 if st.finish >= 0 and st.tokens >= 2]
+    return ReplayResult(responses=responses, rejected=rejected,
+                        steps=steps, wall_s=wall_s,
+                        wall_ttft_s=wall_ttft, wall_tpot_s=wall_tpot)
+
+
+def sample_prompts(*, seed: int, n: int, tenants: Sequence[TenantSpec],
+                   vocab: int) -> List[Tuple[str, np.ndarray]]:
+    """Closed-loop helper: the same tenant/prefix/suffix machinery as
+    :func:`make_trace` without arrival times — for benches that submit a
+    whole workload up front (`benchmarks/e2e_throughput.py`). Returns
+    ``(tenant_name, prompt)`` pairs, reproducible from ``seed``."""
+    trace = make_trace(seed=seed, n_requests=n, rate=1.0,
+                       tenants=tenants, vocab=vocab)
+    return [(r.tenant, r.prompt) for r in trace]
+
+
+def open_loop_trace(*, seed: int, n_requests: int, rate: float,
+                    vocab: int,
+                    shared_frac: Optional[float] = None
+                    ) -> List[TraceRequest]:
+    """Convenience two-tenant mix: a shared-prefix tenant (weight
+    ``shared_frac``) plus a unique-prompt tenant. The default smoke/bench
+    traffic shape; pass explicit :class:`TenantSpec`\\ s to
+    :func:`make_trace` for anything richer."""
+    if shared_frac is None:
+        shared_frac = 0.5
+    tenants = [
+        TenantSpec("shared", weight=shared_frac, prefix_len=16,
+                   suffix_len=(3, 7), max_new=(6, 9)),
+        TenantSpec("unique", weight=1.0 - shared_frac, prefix_len=0,
+                   suffix_len=(8, 15), max_new=(6, 9)),
+    ]
+    return make_trace(seed=seed, n_requests=n_requests, rate=rate,
+                      tenants=tenants, vocab=vocab)

@@ -1,0 +1,826 @@
+"""Scheduling-policy core of the serving stack (DESIGN.md §13).
+
+This module is the *state machine* half of what used to be the monolithic
+``serving/batching.py``: admission (bucketed FIFO groups, block-availability
+gating), preemption (youngest-first requeue on pool exhaustion), speculative
+window staging, cancellation, and termination — pure host-side logic over
+the request pool and decode slots. It imports numpy and the block pool only:
+**no jax, no device work**. Every device interaction is expressed as data —
+an :class:`AdmissionPlan` to prefill, a list of ``(src, dst)`` block copies
+to apply, a :class:`VerifyBatch` to score — executed by the device layer
+(`serving/step.py`) and fed back through ``commit_*`` calls. The thin
+`serving.batching.ContinuousBatcher` facade wires the two together.
+
+Request lifecycle (DESIGN.md §13 state machine)::
+
+    submit -> QUEUED -(plan/commit_admission)-> ACTIVE -(commit_decode /
+    commit_verify)-> ... -> FINISHED(stop | max_new_tokens | max_len)
+    ACTIVE -(pool exhaustion)-> QUEUED (preempted; resume tokens carried)
+    QUEUED | ACTIVE -(cancel)-> FINISHED(cancelled)   # state fully released
+
+Cancellation is legal in every live state: a queued request goes stale in
+the FIFO (purged lazily, O(1) amortized), an active one releases its slot
+and block table immediately, and a preempted one is just the queued case —
+the pool's ref-count invariants hold after every path (asserted by
+`tests/test_serving_api.py`).
+
+Wall-clock latency: the scheduler stamps ``submit_t`` / ``first_token_t`` /
+``finish_t`` on every request from an injectable ``clock`` (defaults to
+``time.monotonic``; `serving/loadgen.py` injects a virtual step clock for
+deterministic replay) and folds finished requests' TTFT (submit to first
+generated token) and TPOT (mean inter-token time after the first) into
+:class:`SchedulerMetrics` percentile summaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple)
+
+import numpy as np
+
+from repro.serving import paged_cache
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # [S] token ids
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    pending: bool = True            # still queued (not yet taken for admission)
+    finish_reason: str = ""         # "stop" | "max_new_tokens" | "max_len"
+                                    # | "cancelled"
+    submit_step: int = 0            # engine step at submit (queue-wait metric)
+    admit_step: int = -1
+    # wall-clock lifecycle stamps (scheduler clock; -1.0 = not yet reached)
+    submit_t: float = -1.0
+    first_token_t: float = -1.0
+    finish_t: float = -1.0
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Submit-to-first-token latency, None before the first token."""
+        if self.first_token_t < 0:
+            return None
+        return self.first_token_t - self.submit_t
+
+    @property
+    def tpot_s(self) -> Optional[float]:
+        """Mean time per output token after the first (needs >= 2 tokens
+        and a finish stamp)."""
+        if self.finish_t < 0 or self.first_token_t < 0 \
+                or len(self.generated) < 2:
+            return None
+        return ((self.finish_t - self.first_token_t)
+                / (len(self.generated) - 1))
+
+
+def latency_summary(samples: Sequence[float]) -> Dict[str, Any]:
+    """p50/p90/p99/mean summary of a latency sample list (seconds)."""
+    if not samples:
+        return {"n": 0, "mean": None, "p50": None, "p90": None, "p99": None}
+    a = np.asarray(samples, np.float64)
+    return {
+        "n": int(a.size),
+        "mean": float(a.mean()),
+        "p50": float(np.percentile(a, 50)),
+        "p90": float(np.percentile(a, 90)),
+        "p99": float(np.percentile(a, 99)),
+    }
+
+
+@dataclasses.dataclass
+class SchedulerMetrics:
+    """Counters the serving loop maintains; all host-side, no device sync."""
+
+    steps: int = 0
+    admitted: int = 0
+    completed: int = 0
+    eos_terminated: int = 0
+    truncated: int = 0
+    cancelled: int = 0               # session-API cancellations (any state)
+    prefill_calls: int = 0
+    prefill_tokens: int = 0          # real prompt tokens
+    padded_prefill_tokens: int = 0   # incl. bucket padding + group padding
+    decode_tokens: int = 0
+    queue_wait_steps: int = 0        # summed over admitted requests
+    active_slot_steps: int = 0       # occupancy numerator
+    slot_steps: int = 0              # n_slots * steps
+    admit_time_s: float = 0.0
+    decode_time_s: float = 0.0
+    bucket_admits: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # paged-cache counters (all zero under cache_kind="dense")
+    prefix_hit_tokens: int = 0       # prompt tokens served by shared blocks
+    preemptions: int = 0             # pool-exhaustion preempt-and-requeue
+    cow_copies: int = 0              # copy-on-write block copies
+    blocks_in_use: int = 0           # gauge: pool blocks held right now
+    peak_blocks_in_use: int = 0      # high-water mark of the pool
+    peak_active_slots: int = 0       # max concurrently-decoding requests
+    # speculative-decoding counters (zero when spec_k == 0)
+    drafted: int = 0                 # draft tokens submitted to verify
+    accepted: int = 0                # draft tokens accepted by the target
+    # wall-clock latency samples of *finished* requests (scheduler clock;
+    # cancelled requests are excluded — their tail is not a served latency)
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    tpot_s: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefilled prompt tokens backed by shared blocks."""
+        return self.prefix_hit_tokens / max(self.prefill_tokens, 1)
+
+    @property
+    def accept_rate(self) -> float:
+        """Fraction of drafted tokens the target model accepted."""
+        return self.accepted / max(self.drafted, 1)
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Decode tokens emitted per active slot-step — the speculative
+        win's currency: exactly 1.0 for plain decode, 1 + accepted drafts
+        per slot-step with verification."""
+        return self.decode_tokens / max(self.active_slot_steps, 1)
+
+    @property
+    def occupancy(self) -> float:
+        return self.active_slot_steps / max(self.slot_steps, 1)
+
+    @property
+    def prefill_padding_overhead(self) -> float:
+        """Fraction of prefilled tokens that were bucket/group padding.
+
+        0.0 before any prefill has happened (not the 100% overhead the
+        ``max(·, 1)`` denominator guard used to report)."""
+        if self.padded_prefill_tokens == 0:
+            return 0.0
+        return 1.0 - self.prefill_tokens / self.padded_prefill_tokens
+
+    @property
+    def mean_queue_wait_steps(self) -> float:
+        return self.queue_wait_steps / max(self.admitted, 1)
+
+    def as_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["occupancy"] = self.occupancy
+        d["prefill_padding_overhead"] = self.prefill_padding_overhead
+        d["mean_queue_wait_steps"] = self.mean_queue_wait_steps
+        d["prefix_hit_rate"] = self.prefix_hit_rate
+        d["accept_rate"] = self.accept_rate
+        d["tokens_per_step"] = self.tokens_per_step
+        # raw sample lists fold into percentile summaries (JSON-lean)
+        d["ttft"] = latency_summary(d.pop("ttft_s"))
+        d["tpot"] = latency_summary(d.pop("tpot_s"))
+        return d
+
+
+@dataclasses.dataclass
+class AdmissionPlan:
+    """One prefill launch, fully resolved by the scheduler: the device layer
+    runs it verbatim and hands the sampled first tokens back to
+    :meth:`Scheduler.commit_admission`."""
+
+    group: List[Request]            # the real admitted requests
+    slots: List[int]                # target slot per group member
+    bucket: int                     # padded prompt length (compile shape)
+    tokens: np.ndarray              # [k, bucket] right-padded resume tokens
+    lens: np.ndarray                # [k] true token counts
+    targets: np.ndarray             # [k] slot ids (dense) | [k, nblk] block
+                                    # map (paged); rows past the group
+                                    # duplicate the last real row
+    uids: np.ndarray                # [k] uint32 sampling-key folds
+    counts: np.ndarray              # [k] uint32 token indices
+
+
+@dataclasses.dataclass
+class VerifyBatch:
+    """One speculative verify launch over every active slot."""
+
+    tokens: np.ndarray              # [n_slots, spec_k + 1] window columns
+    draft_lens: np.ndarray          # [n_slots] real drafts per slot
+    uids: np.ndarray                # [n_slots] uint32
+    counts: np.ndarray              # [n_slots] uint32
+
+
+class Scheduler:
+    """Pure admission/preemption/termination state machine (DESIGN.md §13).
+
+    Owns the request queue, the per-bucket FIFO index, the slot table, the
+    per-slot position/last-token vectors, the paged block pool, and the
+    metrics. Produces plans and consumes device results; never touches a
+    device array. Construction parameters are plain data — the facade
+    (`serving.batching.ContinuousBatcher`) derives them from the model
+    config once.
+    """
+
+    def __init__(self, *, n_slots: int, max_len: int,
+                 stop_ids: Sequence[int] = (),
+                 admit_k: int = 4,
+                 buckets: Optional[Tuple[int, ...]] = None,
+                 ring_len: Optional[int] = None,
+                 paged: bool = False, block_size: int = 16,
+                 n_blocks: Optional[int] = None,
+                 max_blocks: int = 0, reserve_blocks: int = 1,
+                 prefix_sharing: bool = True,
+                 request_history: int = 1024,
+                 spec_k: int = 0, drafter=None,
+                 sampled: bool = False,
+                 clock: Optional[Callable[[], float]] = None):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.stop_ids = frozenset(int(t) for t in stop_ids)
+        self.admit_k = admit_k
+        self.buckets = buckets
+        self.ring_len = ring_len
+        self.paged = paged
+        self.spec_k = spec_k
+        self.drafter = drafter
+        self.sampled = sampled
+        self.clock = clock if clock is not None else time.monotonic
+        # FIFO arrival order (head-of-line fairness) + per-bucket index so a
+        # same-bucket admission group is O(group), not a full-queue rebuild.
+        # Entries admitted or cancelled go stale in ``queue``/``_by_bucket``
+        # and are lazily purged from the heads (O(1) amortized).
+        self.queue: Deque[Request] = deque()
+        self._by_bucket: Dict[int, Deque[Request]] = {}
+        # uid -> Request for introspection; finished entries are evicted
+        # beyond ``request_history`` so a long-running server stays bounded.
+        self.requests: Dict[int, Request] = {}
+        self._done_uids: Deque[int] = deque()
+        self._request_history = request_history
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.pos = np.zeros(n_slots, np.int32)      # per-slot next position
+        self.last_token = np.zeros(n_slots, np.int64)
+        self.metrics = SchedulerMetrics()
+        self.pool: Optional[paged_cache.BlockPool] = None
+        # CoW copies queued by the current prepare/stage pass, as
+        # (slot, src, dst); preempting a slot prunes its entries so the
+        # device layer never copies into a reallocated block.
+        self._pending_copies: List[Tuple[int, int, int]] = []
+        if paged:
+            assert n_blocks is not None and max_blocks > 0
+            self.block_size = block_size
+            self.max_blocks = max_blocks
+            self.reserve_blocks = max(0, reserve_blocks)
+            # Ring blocks are overwritten cyclically — content is not a pure
+            # function of the token prefix, so sharing is causal-only.
+            self.pool = paged_cache.BlockPool(
+                n_blocks, block_size,
+                prefix_sharing=prefix_sharing and ring_len is None)
+            self.tables: List[Optional[paged_cache.BlockTable]] = \
+                [None] * n_slots
+            self.table_arr = np.full((n_slots, max_blocks),
+                                     paged_cache.TRASH_BLOCK, np.int32)
+        else:
+            self.tables = [None] * n_slots
+            self.table_arr = None
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        """Anything queued (live) or decoding right now."""
+        self._purge_stale()
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+    @property
+    def queue_depth(self) -> int:
+        """Live (pending, uncancelled) queued requests — the backpressure
+        signal the session API gates submissions on."""
+        return sum(1 for r in self.queue if r.pending and not r.done)
+
+    def active_slot_ids(self) -> List[int]:
+        return [s for s in range(self.n_slots) if self.slots[s] is not None]
+
+    # -- submit / cancel ----------------------------------------------------
+    def submit(self, uid: int, prompt: np.ndarray, max_new_tokens: int
+               ) -> Request:
+        prompt = np.asarray(prompt)
+        if prompt.ndim != 1 or prompt.size == 0:
+            raise ValueError(f"prompt must be a non-empty 1-D token array, "
+                             f"got shape {prompt.shape}")
+        if prompt.size > self.max_len - 1:
+            raise ValueError(f"prompt length {prompt.size} needs "
+                             f">= {prompt.size + 1} cache positions; "
+                             f"max_len is {self.max_len}")
+        if not 0 <= uid < 2 ** 32:
+            # per-slot sampling keys fold the uid as uint32 data
+            raise ValueError(f"request uid must fit uint32, got {uid}")
+        if self.paged:
+            # Reject requests the pool can never run to completion: decode
+            # growth reaches blocks_for(prompt + generated K/V positions,
+            # max_len/ring-capped); admitting one and crashing mid-decode
+            # would take down every other in-flight request. This bound
+            # also dominates every (re-)admission's _admit_positions need.
+            n_pos = min(prompt.size + max(max_new_tokens - 1, 0),
+                        self.max_len)
+            if self.ring_len is not None:
+                n_pos = min(n_pos, self.ring_len)
+            need = self.pool.blocks_for(n_pos)
+            if need > self.pool.n_blocks:
+                raise ValueError(
+                    f"request needs up to {need} KV blocks "
+                    f"({n_pos} positions at block_size={self.block_size}) "
+                    f"but the pool has only {self.pool.n_blocks}; raise "
+                    f"n_blocks (budget) or lower max_new_tokens")
+        cur = self.requests.get(uid)
+        if cur is not None and not cur.done:
+            raise ValueError(f"request uid {uid} is still queued or active")
+        req = Request(uid, prompt, max_new_tokens,
+                      submit_step=self.metrics.steps,
+                      submit_t=self.clock())
+        self.queue.append(req)
+        self._by_bucket.setdefault(self._bucket(req), deque()).append(req)
+        self.requests[uid] = req
+        return req
+
+    def cancel(self, uid: int) -> Optional[Request]:
+        """Cancel a live request in ANY state — queued, active (mid-decode),
+        or preempted-and-requeued. Slot and block-table state is released
+        immediately for active requests; queued entries go stale and purge
+        lazily. Returns the request (finish_reason="cancelled"), or None if
+        the uid is unknown or already finished."""
+        req = self.requests.get(uid)
+        if req is None or req.done:
+            return None
+        if req.pending:
+            # queued (fresh or preempted): mark stale; the FIFO heads and
+            # _take_group skip done entries.
+            req.pending = False
+        else:
+            for s in range(self.n_slots):
+                if self.slots[s] is req:
+                    self._release_slot(s)
+                    break
+        req.done = True
+        req.finish_reason = "cancelled"
+        req.finish_t = self.clock()
+        self.metrics.cancelled += 1
+        self._retire(req)
+        return req
+
+    # -- shared helpers ------------------------------------------------------
+    def _full_tokens(self, req: Request) -> np.ndarray:
+        """Tokens a (re-)prefill must process: the prompt plus, for a
+        preempted request, everything it had already generated — greedy
+        re-prefill of that concatenation regenerates the identical next
+        token (recompute-style resume)."""
+        if not req.generated:
+            return req.prompt
+        return np.concatenate(
+            [req.prompt, np.asarray(req.generated, req.prompt.dtype)])
+
+    def _bucket(self, req: Request) -> int:
+        n = len(req.prompt) + len(req.generated)
+        if self.buckets is None:
+            return n
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"token count {n} exceeds largest bucket "
+                         f"{self.buckets[-1]}")
+
+    def _admit_positions(self, req: Request) -> int:
+        """Cache positions ``req``'s (re-)admission must cover: its resume
+        tokens plus one decode-headroom position — charged only if the
+        request will actually decode after the admission's own token (a
+        resume holding max_new - 1 tokens finishes at admission without a
+        decode write) — capped at the cache capacity (a resume holding
+        exactly ``max_len`` tokens finishes as max_len truncation) and at
+        the ring. The worst case over a request's lifetime equals the
+        ``submit``-time completability bound."""
+        n_tokens = len(req.prompt) + len(req.generated)
+        will_decode = len(req.generated) + 1 < req.max_new_tokens
+        n_pos = min(n_tokens + (1 if will_decode else 0), self.max_len)
+        if self.ring_len is not None:
+            n_pos = min(n_pos, self.ring_len)
+        return n_pos
+
+    def _blocks_needed(self, req: Request) -> int:
+        """Worst-case (no sharing) pool blocks to admit ``req``."""
+        return self.pool.blocks_for(self._admit_positions(req))
+
+    def _retire(self, req: Request) -> None:
+        self._done_uids.append(req.uid)
+        while len(self._done_uids) > self._request_history:
+            old = self._done_uids.popleft()
+            cur = self.requests.get(old)
+            if cur is not None and cur.done:   # uid may have been resubmitted
+                del self.requests[old]
+
+    def _finish(self, req: Request, slot: int, reason: str,
+                finished: Dict[int, List[int]]):
+        req.done = True
+        req.finish_reason = reason
+        req.finish_t = self.clock()
+        finished[req.uid] = req.generated
+        self._release_slot(slot)
+        m = self.metrics
+        m.completed += 1
+        if reason == "stop":
+            m.eos_terminated += 1
+        elif reason == "max_len":
+            m.truncated += 1
+        if req.ttft_s is not None:
+            m.ttft_s.append(req.ttft_s)
+        if req.tpot_s is not None:
+            m.tpot_s.append(req.tpot_s)
+        self._retire(req)
+
+    def _release_slot(self, slot: int) -> None:
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.last_token[slot] = 0
+        if self._pending_copies:
+            # queued CoW copies of a released slot must never execute: the
+            # freed blocks may be reallocated before the copy would land
+            self._pending_copies = [
+                c for c in self._pending_copies if c[0] != slot]
+        if self.paged and self.tables[slot] is not None:
+            self.pool.free_table(self.tables[slot])
+            self.tables[slot] = None
+            self.table_arr[slot] = paged_cache.TRASH_BLOCK
+
+    def _preempt_youngest(self, exclude: int) -> None:
+        """Pool exhausted mid-decode: evict the youngest request (least
+        work lost) back to the head of the queue. Its blocks free
+        immediately; it resumes later by re-prefilling prompt+generated."""
+        cand = [s for s, r in enumerate(self.slots)
+                if r is not None and s != exclude]
+        if not cand:
+            raise RuntimeError(
+                f"KV block pool ({self.pool.n_blocks} x {self.block_size}) "
+                f"cannot hold a single request at max_len={self.max_len}; "
+                f"raise n_blocks (budget) or lower max_len")
+        s = max(cand, key=lambda i: (self.slots[i].admit_step, i))
+        req = self.slots[s]
+        self._release_slot(s)
+        req.pending = True
+        req.admit_step = -1
+        # Queue-wait restarts at the requeue: the steps it spent actively
+        # decoding before the preemption are not queue time. (The wall-clock
+        # submit_t stamp does NOT reset — user-visible latency keeps
+        # counting across preemptions.)
+        req.submit_step = self.metrics.steps
+        self.queue.appendleft(req)
+        self._by_bucket.setdefault(self._bucket(req),
+                                   deque()).appendleft(req)
+        self.metrics.preemptions += 1
+
+    def _ensure_write_targets(self, s: int, n_positions: int) -> None:
+        """Make slot ``s``'s next ``n_positions`` write targets (positions
+        pos..pos+n_positions-1) exist and be private. Growth allocates the
+        next block when a position crosses a block boundary (preempting the
+        youngest request on exhaustion); copy-on-write queues a device copy
+        of a shared block before it is written (only reachable via forked
+        tables — prompt sharing never covers the write frontier). The single
+        protocol for plain decode (n_positions == 1) and speculative
+        verify windows alike."""
+        for j in range(n_positions):
+            p = int(self.pos[s]) + j
+            slot = p % self.ring_len if self.ring_len is not None else p
+            logical = slot // self.block_size
+            while True:
+                try:
+                    self.pool.ensure_capacity(self.tables[s], logical)
+                    break
+                except paged_cache.PoolExhausted:
+                    self._preempt_youngest(exclude=s)
+            cow = self.pool.ensure_writable(self.tables[s], logical)
+            if cow is not None:
+                self._pending_copies.append((s, *cow))
+                self.metrics.cow_copies += 1
+        self.table_arr[s] = self.tables[s].padded(self.max_blocks)
+
+    def _drain_copies(self) -> List[Tuple[int, int]]:
+        copies = [(src, dst) for (_s, src, dst) in self._pending_copies]
+        self._pending_copies = []
+        return copies
+
+    def prepare_decode(self) -> List[Tuple[int, int]]:
+        """Before a plain decode step: one private write target per active
+        slot. Returns the (src, dst) device block copies the step layer
+        must apply before launching."""
+        for s in range(self.n_slots):
+            if self.slots[s] is not None:
+                self._ensure_write_targets(s, 1)
+        return self._drain_copies()
+
+    def check_done(self, req: Request, slot: int, tok: int,
+                   finished: Dict[int, List[int]]) -> None:
+        """Termination, in priority order: stop token, token budget, cache
+        capacity (per-request max_len truncation)."""
+        if tok in self.stop_ids:
+            self._finish(req, slot, "stop", finished)
+        elif len(req.generated) >= req.max_new_tokens:
+            self._finish(req, slot, "max_new_tokens", finished)
+        elif self.pos[slot] >= self.max_len:
+            self._finish(req, slot, "max_len", finished)
+
+    # -- admission -----------------------------------------------------------
+    def _purge_stale(self):
+        """Drop admitted/cancelled (stale) entries from the queue head, so
+        ``queue`` emptiness keeps meaning "nothing left to admit"."""
+        while self.queue and (self.queue[0].done
+                              or not self.queue[0].pending):
+            self.queue.popleft()
+
+    def _take_group(self, limit: int) -> List[Request]:
+        """Pop up to ``limit`` same-bucket requests, FIFO: the group takes
+        the head-of-line request's bucket (via the per-bucket index,
+        O(group)); non-matching requests keep their relative order.
+        Cancelled entries purge as they surface.
+
+        Paged admission additionally gates on block availability: a request
+        joins the group only while its worst-case (unshared) block need
+        plus the reservation margin fits the pool — prefix sharing can only
+        reduce the actual allocation, so an admitted group never fails.
+        An empty group means "pool full, wait for completions to free
+        blocks" (head-of-line blocking is deliberate: FIFO fairness).
+        """
+        head_bucket = self._bucket(self.queue[0])
+        bq = self._by_bucket[head_bucket]
+        group: List[Request] = []
+        budget = None
+        if self.paged:
+            budget = self.pool.available - self.reserve_blocks
+            if all(r is None for r in self.slots):
+                # The reserve is decode-growth headroom for *other* active
+                # requests; with nothing in flight it would only wedge a
+                # pool-filling request out of an otherwise idle server.
+                budget = self.pool.available
+        while bq and len(group) < limit:
+            if bq[0].done or not bq[0].pending:     # cancelled / stale
+                bq.popleft()
+                continue
+            if budget is not None:
+                need = self._blocks_needed(bq[0])
+                if need > budget:
+                    break
+                budget -= need
+            req = bq.popleft()
+            req.pending = False
+            group.append(req)
+        if not bq:
+            del self._by_bucket[head_bucket]
+        self._purge_stale()
+        return group
+
+    def plan_admission(self) -> Optional[AdmissionPlan]:
+        """Resolve the next prefill launch, or None when admission must
+        stall (no free slot, empty queue, or the block gate holds the
+        head-of-line request back until completions free pool blocks)."""
+        self._purge_stale()
+        if not self.queue:
+            return None
+        free = [s for s in range(self.n_slots) if self.slots[s] is None]
+        if not free:
+            return None
+        group = self._take_group(min(len(free), self.admit_k))
+        if not group:
+            # Block pool full: wait for completions to free blocks. If
+            # nothing is in flight and the pool is already fully free,
+            # waiting can never help — surface the sizing error.
+            if not self.queue:
+                return None
+            if (all(r is None for r in self.slots)
+                    and self.pool.blocks_in_use == 0):
+                need = self._blocks_needed(self.queue[0])
+                raise RuntimeError(
+                    f"request uid {self.queue[0].uid} needs {need} KV "
+                    f"blocks + {self.reserve_blocks} reserve but the "
+                    f"pool has only {self.pool.n_blocks}; raise "
+                    f"n_blocks (budget) or block_size")
+            return None
+        bucket = self._bucket(group[0])
+        k = self.admit_k
+        # Static [k, bucket] batch: right-pad prompts to the bucket, pad
+        # the group to k by duplicating its last real row (same target +
+        # same data -> the duplicate scatter writes are identical, hence
+        # exact; works for recurrent state too since no pad *tokens* are
+        # introduced).
+        full = [self._full_tokens(r) for r in group]
+        tokens = np.zeros((k, bucket), np.int64)
+        lens = np.empty(k, np.int32)
+        uids = np.empty(k, np.uint32)
+        counts = np.empty(k, np.uint32)
+        for i in range(k):
+            j = min(i, len(group) - 1)
+            ft = full[j]
+            tokens[i, :len(ft)] = ft
+            lens[i] = len(ft)
+            uids[i] = group[j].uid
+            counts[i] = len(group[j].generated)
+        if self.paged:
+            targets = self._map_group_blocks(group, full, free, bucket, k)
+        else:
+            targets = np.empty(k, np.int32)
+            for i in range(k):
+                targets[i] = free[min(i, len(group) - 1)]
+        return AdmissionPlan(group=group, slots=free[:len(group)],
+                             bucket=bucket, tokens=tokens, lens=lens,
+                             targets=targets, uids=uids, counts=counts)
+
+    def _map_group_blocks(self, group: List[Request],
+                          full: List[np.ndarray], free: List[int],
+                          bucket: int, k: int) -> np.ndarray:
+        """Allocate block tables (sharing full prompt blocks by chain hash)
+        for an admission group. The scratch cache covers ``scr_len``
+        positions (the bucket, ring-capped); chunks past a request's own
+        blocks write to the trash block."""
+        m = self.metrics
+        scr_len = bucket if self.ring_len is None else min(bucket,
+                                                           self.ring_len)
+        nblk_scr = -(-scr_len // self.block_size)
+        block_map = np.full((k, nblk_scr), paged_cache.TRASH_BLOCK, np.int32)
+        for i, (req, ft) in enumerate(zip(group, full)):
+            # _take_group's worst-case gate guarantees this cannot raise.
+            table, hits = self.pool.map_prompt(
+                ft, self._admit_positions(req))
+            m.prefix_hit_tokens += hits
+            s = free[i]
+            self.tables[s] = table
+            self.table_arr[s] = table.padded(self.max_blocks)
+            n = min(len(table.blocks), nblk_scr)
+            block_map[i, :n] = table.blocks[:n]
+        for i in range(len(group), k):     # group padding duplicates a row
+            block_map[i] = block_map[len(group) - 1]
+        return block_map
+
+    def commit_admission(self, plan: AdmissionPlan, next_tokens: np.ndarray,
+                         finished: Dict[int, List[int]]) -> None:
+        """Apply the sampled first tokens of an executed admission plan."""
+        m = self.metrics
+        m.prefill_calls += 1
+        m.padded_prefill_tokens += plan.tokens.shape[0] * plan.bucket
+        m.bucket_admits[plan.bucket] = \
+            m.bucket_admits.get(plan.bucket, 0) + 1
+        now = self.clock()
+        for i, req in enumerate(plan.group):
+            s = plan.slots[i]
+            self.slots[s] = req
+            self.pos[s] = int(plan.lens[i])
+            self.last_token[s] = int(next_tokens[i])
+            req.generated.append(int(next_tokens[i]))
+            if req.first_token_t < 0:
+                req.first_token_t = now
+            req.admit_step = m.steps
+            m.admitted += 1
+            m.prefill_tokens += int(plan.lens[i])
+            m.queue_wait_steps += m.steps - req.submit_step
+            self.check_done(req, s, int(next_tokens[i]), finished)
+
+    # -- decode --------------------------------------------------------------
+    def decode_folds(self, active: List[int]
+                     ) -> Tuple[Optional[np.ndarray], Optional[np.ndarray]]:
+        """Per-slot (uid, token index) sampling-key folds for a plain decode
+        step; (None, None) for greedy decoding (keys dead-code-eliminate)."""
+        if not self.sampled:
+            return None, None
+        uids = np.zeros(self.n_slots, np.uint32)
+        counts = np.zeros(self.n_slots, np.uint32)
+        for s in active:
+            uids[s] = self.slots[s].uid
+            counts[s] = len(self.slots[s].generated)
+        return uids, counts
+
+    def commit_decode(self, active: List[int], next_tokens: np.ndarray,
+                      finished: Dict[int, List[int]]) -> None:
+        """Apply one batched decode step's tokens to every active slot."""
+        m = self.metrics
+        m.decode_tokens += len(active)
+        for s in active:
+            req = self.slots[s]
+            req.generated.append(int(next_tokens[s]))
+            self.pos[s] += 1
+            self.last_token[s] = int(next_tokens[s])
+            self.check_done(req, s, int(next_tokens[s]), finished)
+
+    # -- speculative staging + commit (DESIGN.md §11) ------------------------
+    def _draft_cap(self, req: Request, slot: int) -> int:
+        """Largest useful draft length for this slot: the window must fit
+        the cache (positions pos..pos+L stay under max_len and inside the
+        ring) and the request's remaining token budget (emitting more than
+        the budget would be truncated anyway)."""
+        cap = min(self.spec_k,
+                  self.max_len - 1 - int(self.pos[slot]),
+                  req.max_new_tokens - len(req.generated) - 1)
+        if self.ring_len is not None:
+            cap = min(cap, self.ring_len - 1)
+        return max(cap, 0)
+
+    def _window_new_blocks(self, s: int, n_positions: int) -> int:
+        """Pool blocks slot ``s`` would have to allocate to cover positions
+        pos..pos+n_positions-1 beyond its current table."""
+        need = 0
+        for j in range(n_positions):
+            p = int(self.pos[s]) + j
+            slot = p % self.ring_len if self.ring_len is not None else p
+            need = max(need, slot // self.block_size + 1)
+        return max(0, need - len(self.tables[s].blocks))
+
+    def stage_spec(self) -> Tuple[Dict[int, np.ndarray],
+                                  List[Tuple[int, int]]]:
+        """Draft for every active slot, then make the whole verify window's
+        write targets exist and be private (`_ensure_write_targets` over
+        the staged draft length + 1). Returns (staged drafts per slot,
+        device block copies to apply before the verify launch).
+
+        Speculation must be strictly non-harmful under memory pressure: the
+        window's FIRST position keeps plain decode's guarantee (growth may
+        preempt the youngest request — the step cannot proceed without it),
+        but the draft tail is trimmed to the blocks obtainable from the
+        free list, so a maybe-rejected draft never evicts committed work
+        to fund its pages."""
+        staged: Dict[int, np.ndarray] = {}
+        budget = self.pool.available
+        for s in range(self.n_slots):
+            req = self.slots[s]
+            if req is None:
+                continue
+            cap = self._draft_cap(req, s)
+            d = np.empty(0, np.int64)
+            if cap > 0:
+                d = np.asarray(self.drafter.propose(self._full_tokens(req),
+                                                    cap),
+                               dtype=np.int64)[:cap]
+            base_new = self._window_new_blocks(s, 1)
+            L = len(d)
+            while L > 0 and (self._window_new_blocks(s, L + 1)
+                             - base_new) > max(budget - base_new, 0):
+                L -= 1
+            staged[s] = d[:L]
+            budget -= self._window_new_blocks(s, L + 1)
+        for s in range(self.n_slots):
+            if self.slots[s] is not None:
+                self._ensure_write_targets(s, len(staged.get(s, ())) + 1)
+        return staged, self._drain_copies()
+
+    def build_verify(self, active: List[int],
+                     staged: Dict[int, np.ndarray]) -> VerifyBatch:
+        """Assemble the [n_slots, k+1] verify window batch: column 0 is the
+        slot's last token, columns 1..L its staged drafts."""
+        m = self.metrics
+        W = self.spec_k + 1
+        tokens = np.zeros((self.n_slots, W), np.int64)
+        tokens[:, 0] = self.last_token
+        draft_lens = np.zeros(self.n_slots, np.int32)
+        uids = np.zeros(self.n_slots, np.uint32)
+        counts = np.zeros(self.n_slots, np.uint32)
+        for s in active:
+            req = self.slots[s]
+            d = staged.get(s, np.empty(0, np.int64))
+            tokens[s, 1:1 + len(d)] = d
+            draft_lens[s] = len(d)
+            uids[s] = req.uid
+            counts[s] = len(req.generated)
+            m.drafted += len(d)
+        return VerifyBatch(tokens=tokens, draft_lens=draft_lens,
+                           uids=uids, counts=counts)
+
+    def _rollback_spec_blocks(self, s: int) -> None:
+        """Roll rejected window pages back to the pool: free table blocks
+        past the committed frontier. Their contents were never dirtied —
+        `engine.verify_step` redirects rejected positions to the trash
+        block — so this is pure bookkeeping and leaves the pool
+        invariant-clean."""
+        if self.ring_len is not None:
+            return                  # ring tables are cyclic and capped
+        tbl = self.tables[s]
+        keep = self.pool.blocks_for(int(self.pos[s]))
+        while len(tbl.blocks) > keep:
+            self.pool.decref(tbl.blocks.pop())
+        self.table_arr[s] = tbl.padded(self.max_blocks)
+
+    def commit_verify(self, active: List[int], tgt: np.ndarray,
+                      n_accept: np.ndarray,
+                      finished: Dict[int, List[int]]) -> None:
+        """Apply one executed verify step: emitted tokens replay the
+        baseline loop one at a time (same stop/budget/max_len priority
+        order), so a stop token mid-window truncates exactly where the
+        non-speculative stream would have stopped."""
+        m = self.metrics
+        for s in active:
+            req = self.slots[s]
+            a = int(n_accept[s])
+            emitted = 0
+            for t in tgt[s, :a + 1]:
+                t = int(t)
+                req.generated.append(t)
+                self.pos[s] += 1
+                self.last_token[s] = t
+                emitted += 1
+                m.decode_tokens += 1
+                self.check_done(req, s, t, finished)
+                if req.done:
+                    break
+            # Credit only drafts that became output (the bonus token is not
+            # a draft): a stop token mid-window discards the accepted tail,
+            # so accept_rate stays an emitted-throughput quantity and
+            # decode_tokens >= accepted holds by construction.
+            m.accepted += max(emitted - 1, 0)
+            if not req.done:
+                self._rollback_spec_blocks(s)

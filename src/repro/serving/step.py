@@ -1,0 +1,170 @@
+"""Device-stepping layer of the serving stack (DESIGN.md §13).
+
+The other half of the old ``serving/batching.py`` monolith: everything that
+touches a device array lives here. :class:`DeviceStepper` owns the model
+params, the K/V cache (dense slots or the paged block pool's physical
+blocks), and the three jitted entry points — bucketed prefill
+(`engine.prefill_into_slots` / `engine.prefill_into_pages`), per-slot-
+position batched decode, and the speculative verify window
+(`engine.verify_step`). It executes whatever the scheduling core
+(`serving/scheduler.py`) planned, verbatim: a stepper call never changes
+scheduling state, and the scheduler never sees a device array — numpy in,
+numpy out across the boundary.
+
+Sampling matches `engine.generate` semantics (temperature / top-k via
+`engine.sample`): each slot draws with a key folded by (request uid, token
+index), so streams are independent of admission order and preemption. The
+scheduler supplies the (uid, count) folds; the key material and the fold
+itself stay on this side of the boundary.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serving import engine
+
+
+class DeviceStepper:
+    """Owns params + cache + jitted prefill/decode/verify for one server.
+
+    ``physical_blocks`` selects the paged cache (pass the pool's physical
+    block count, i.e. usable blocks + the trash block); None selects the
+    dense ``[n_slots, max_len]`` cache. ``spec_k > 0`` additionally builds
+    the verify-window jit.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
+                 max_len: int, backend: str = "auto",
+                 physical_blocks: Optional[int] = None, block_size: int = 16,
+                 ring_len: Optional[int] = None,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 spec_k: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.backend = backend
+        self.ring_len = ring_len
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._base_key = jax.random.PRNGKey(seed)
+        self.paged = physical_blocks is not None
+        if self.paged:
+            self.cache = transformer.init_paged_cache(
+                cfg, physical_blocks, block_size)
+            self._prefill = jax.jit(
+                lambda p, c, t, bm, l: engine.prefill_into_pages(
+                    p, c, t, bm, l, self.cfg, backend=self.backend))
+        else:
+            self.cache = transformer.init_cache(cfg, n_slots, max_len)
+            self._prefill = jax.jit(
+                lambda p, c, t, s, l: engine.prefill_into_slots(
+                    p, c, t, s, l, self.cfg, backend=self.backend))
+        self._decode = jax.jit(
+            lambda p, c, t, pos, tab, u, n: self._decode_step(
+                p, c, t, pos, tab, u, n))
+        if spec_k:
+            self._verify = jax.jit(
+                lambda p, c, t, pos, tab, dl, u, n: engine.verify_step(
+                    p, c, t, pos, tab, dl, u, n, self.cfg,
+                    ring_len=self.ring_len, temperature=self.temperature,
+                    top_k=self.top_k, base_key=self._base_key,
+                    backend=self.backend))
+
+    # -- jitted per-slot-position decode: positions differ per slot --------
+    def _decode_step(self, params, cache, token, pos_vec, tables, uids,
+                     counts):
+        """token: [B,1]; pos_vec: [B] — per-slot absolute positions.
+
+        The decode path accepts a position *vector*: each slot's K/V is
+        written at its own cache index and masked by its own causal bound,
+        so one batched step serves slots at heterogeneous progress.
+        ``tables`` routes the paged block-pool path; ``uids``/``counts``
+        fold the per-slot sampling keys (unused — and dead-code-eliminated
+        — for greedy decoding).
+        """
+        logits, cache, _ = transformer.forward(
+            params, {"tokens": token}, self.cfg, mode="decode",
+            cache=cache, pos=pos_vec, block_tables=tables,
+            ring_len=self.ring_len if tables is not None else None,
+            backend=self.backend)
+        logits = logits[:, -1]
+        if self.temperature == 0.0:
+            tok = jnp.argmax(logits, axis=-1)
+        else:
+            keys = engine.fold_slot_keys(self._base_key, uids, counts)
+            tok = engine.sample_per_slot(logits, keys,
+                                         temperature=self.temperature,
+                                         top_k=self.top_k)
+        return tok, cache
+
+    # -- execution surface the facade drives --------------------------------
+    @property
+    def prefill_compiles(self) -> Optional[int]:
+        """Distinct prefill shapes compiled so far (one per bucket hit);
+        None if the jit internals moved and the count is unavailable."""
+        try:
+            return int(self._prefill._cache_size())
+        except Exception:
+            return None
+
+    def prefill(self, tokens: np.ndarray, targets: np.ndarray,
+                lens: np.ndarray):
+        """Run one admission plan's prefill; ``targets`` is the slot vector
+        (dense) or the scratch block map (paged). Returns last-position
+        logits [k, V] (device array — fed straight to sample_admitted)."""
+        logits, self.cache = self._prefill(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(targets), jnp.asarray(lens))
+        return logits
+
+    def sample_admitted(self, logits, uids: np.ndarray,
+                        counts: np.ndarray) -> np.ndarray:
+        """First token of each admitted request, via the same per-slot key
+        folding as decode ((uid, token index) -> key), so a preempted
+        request's re-prefill redraws its identical next token."""
+        if self.temperature == 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        keys = engine.fold_slot_keys(self._base_key, jnp.asarray(uids),
+                                     jnp.asarray(counts))
+        return np.asarray(engine.sample_per_slot(
+            logits, keys, temperature=self.temperature, top_k=self.top_k))
+
+    def apply_copies(self, copies: Iterable[Tuple[int, int]]) -> None:
+        """Apply the scheduler's queued copy-on-write block copies (device
+        gather/scatter) before the decode/verify launch reads them."""
+        for src, dst in copies:
+            self.cache = transformer.copy_cache_block(
+                self.cfg, self.cache, src, dst)
+
+    def decode(self, last_token: np.ndarray, pos: np.ndarray,
+               table_arr: Optional[np.ndarray],
+               uids: Optional[np.ndarray],
+               counts: Optional[np.ndarray]) -> np.ndarray:
+        """One batched decode token for every slot (inactive slots produce
+        garbage the scheduler ignores). Returns next tokens [n_slots]."""
+        tables = jnp.asarray(table_arr) if table_arr is not None else None
+        if uids is not None:
+            uids, counts = jnp.asarray(uids), jnp.asarray(counts)
+        tok, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(last_token[:, None]),
+            jnp.asarray(pos), tables, uids, counts)
+        return np.asarray(tok)
+
+    def verify(self, tokens: np.ndarray, pos: np.ndarray,
+               table_arr: np.ndarray, draft_lens: np.ndarray,
+               uids: np.ndarray, counts: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """One speculative verify window over every slot; returns the
+        target-emitted tokens [n_slots, k+1] and per-slot accept counts."""
+        tgt, n_acc, self.cache = self._verify(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(table_arr),
+            jnp.asarray(draft_lens), jnp.asarray(uids),
+            jnp.asarray(counts))
+        return np.asarray(tgt), np.asarray(n_acc)

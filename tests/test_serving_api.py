@@ -1,0 +1,376 @@
+"""Session API: streaming, cancellation, backpressure, latency metrics.
+
+DESIGN.md §13 edge matrix: cancel in every lifecycle state (queued /
+just-admitted / mid-decode / preempted, greedy and speculative), rejected
+submits leaving zero residual state, backpressure signalling, and the
+pool's free-list + ref-count invariants after every path. Plus the loadgen
+reproducibility contract (same seed, byte-identical trace) and the
+deterministic virtual-clock TTFT/TPOT stamps the CI gate diffs.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.serving import api, batching, loadgen
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, L).astype(np.int64) for L in lens]
+
+
+def _server(model, **kw):
+    params, cfg = model
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("cache_kind", "paged")
+    kw.setdefault("block_size", 4)
+    kw.setdefault("n_blocks", 16)
+    return api.StreamingServer(params, cfg, **kw)
+
+
+def _assert_drained_clean(server):
+    assert not server.busy
+    assert server.live_sessions() == []
+    server.batcher.pool.check_invariants()
+    assert server.batcher.pool.blocks_in_use == 0
+
+
+# -- streaming ---------------------------------------------------------------
+
+def test_stream_matches_batcher_and_orders_tokens(model):
+    """Streamed events reconstruct each response exactly (every index once,
+    in order, finish reason only on the last), and the whole session run is
+    token-identical to the plain batcher on the same workload."""
+    params, cfg = model
+    prompts = _prompts(cfg, [3, 6, 4, 5])
+    events = {}
+    server = _server(model)
+    for i, p in enumerate(prompts):
+        server.submit(api.GenerationRequest(
+            p, max_new_tokens=5, session_id=f"s{i}",
+            on_token=lambda ev: events.setdefault(ev.session_id,
+                                                  []).append(ev)))
+    responses = {r.session_id: r for r in server.run_until_drained()}
+    assert set(responses) == {f"s{i}" for i in range(len(prompts))}
+    for sid, resp in responses.items():
+        evs = events[sid]
+        assert [e.index for e in evs] == list(range(len(resp.tokens)))
+        assert [e.token for e in evs] == resp.tokens
+        assert [e.finish_reason for e in evs] == \
+            [""] * (len(evs) - 1) + [resp.finish_reason]
+    b = batching.ContinuousBatcher(
+        params, cfg, n_slots=2, max_len=32, cache_kind="paged",
+        block_size=4, n_blocks=16)
+    for i, p in enumerate(prompts):
+        b.submit(i, p, 5)
+    want = b.run_to_completion()
+    assert {f"s{u}": toks for u, toks in want.items()} == \
+        {sid: r.tokens for sid, r in responses.items()}
+    _assert_drained_clean(server)
+
+
+# -- cancellation ------------------------------------------------------------
+
+def test_cancel_while_queued(model):
+    """A cancelled queued request never touches a slot or a block, and the
+    survivors' greedy streams are exactly the no-cancel streams (greedy
+    slots are independent; admission order cannot change tokens)."""
+    params, cfg = model
+    prompts = _prompts(cfg, [3, 4, 5, 6])
+    base = _server(model)
+    for i, p in enumerate(prompts[:3]):
+        base.submit(api.GenerationRequest(p, 6, session_id=f"s{i}"))
+    want = {r.session_id: r.tokens for r in base.run_until_drained()}
+
+    server = _server(model)
+    for i, p in enumerate(prompts):
+        server.submit(api.GenerationRequest(p, 6, session_id=f"s{i}"))
+    # 2 slots: s2/s3 start queued; cancel s3 before it is ever admitted
+    assert server.queue_depth >= 2
+    resp = server.cancel("s3")
+    assert resp.finish_reason == "cancelled" and resp.tokens == []
+    assert resp.ttft_s is None
+    got = {r.session_id: r.tokens for r in server.run_until_drained()}
+    assert got == want
+    assert server.metrics.cancelled == 1
+    _assert_drained_clean(server)
+
+
+def test_cancel_just_admitted(model):
+    """Cancelling a request in the step window right after its prefill
+    (one token out, slot + prompt blocks held) releases everything."""
+    params, cfg = model
+    server = _server(model)
+    server.submit(api.GenerationRequest(_prompts(cfg, [5])[0], 8,
+                                        session_id="x"))
+    server.step()                       # admitted + first token this step
+    assert server.batcher.requests[0].admit_step >= 0
+    assert server.batcher.pool.blocks_in_use > 0
+    resp = server.cancel("x")
+    assert resp.finish_reason == "cancelled"
+    assert len(resp.tokens) >= 1 and resp.ttft_s is not None
+    _assert_drained_clean(server)
+
+
+def test_cancel_mid_decode_leaves_others_intact(model):
+    """Cancel one of several actively decoding requests: its blocks free
+    immediately and every other stream finishes with exactly the tokens it
+    would have produced anyway."""
+    params, cfg = model
+    prompts = _prompts(cfg, [3, 4, 5])
+    base = _server(model, n_slots=3)
+    for i, p in enumerate(prompts[:2]):
+        base.submit(api.GenerationRequest(p, 8, session_id=f"s{i}"))
+    want = {r.session_id: r.tokens for r in base.run_until_drained()}
+
+    server = _server(model, n_slots=3)
+    for i, p in enumerate(prompts):
+        server.submit(api.GenerationRequest(p, 8, session_id=f"s{i}"))
+    for _ in range(3):
+        server.step()
+    in_use_before = server.batcher.pool.blocks_in_use
+    resp = server.cancel("s2")
+    assert resp.finish_reason == "cancelled" and len(resp.tokens) >= 1
+    assert server.batcher.pool.blocks_in_use < in_use_before
+    server.batcher.pool.check_invariants()
+    got = {r.session_id: r.tokens
+           for r in server.run_until_drained()}
+    assert got == {k: v for k, v in want.items()}
+    _assert_drained_clean(server)
+
+
+def test_cancel_while_preempted(model):
+    """Cancel a request that pool exhaustion preempted back into the queue
+    (blocks already freed, tokens generated): cancellation must not
+    double-free, and the other requests still complete."""
+    params, cfg = model
+    prompts = _prompts(cfg, [3, 4, 5], seed=4)
+    # test_paged_cache's forcing box: growth to ~5 blocks/request against a
+    # 6-block pool guarantees mid-decode preemption.
+    server = _server(model, n_slots=3, max_len=32, block_size=4, n_blocks=6)
+    for i, p in enumerate(prompts):
+        server.submit(api.GenerationRequest(p, 12, session_id=f"s{i}"))
+    preempted_sid = None
+    for _ in range(200):
+        server.step()
+        server.batcher.pool.check_invariants()
+        if server.metrics.preemptions > 0:
+            for i in range(3):
+                req = server.batcher.requests.get(i)
+                if req is not None and not req.done and req.pending \
+                        and req.generated:
+                    preempted_sid = f"s{i}"
+                    break
+        if preempted_sid or not server.busy:
+            break
+    assert preempted_sid is not None, "scenario no longer forces preemption"
+    resp = server.cancel(preempted_sid)
+    assert resp.finish_reason == "cancelled" and len(resp.tokens) >= 1
+    server.batcher.pool.check_invariants()
+    done = server.run_until_drained()
+    assert {r.finish_reason for r in done} == {"max_new_tokens"}
+    assert len(done) == 2
+    _assert_drained_clean(server)
+
+
+def test_cancel_under_speculation(model):
+    """Cancellation with spec_k > 0: staged verify windows + rollback must
+    not leak blocks when a session disappears between steps."""
+    params, cfg = model
+    prompts = _prompts(cfg, [4, 6, 5])
+    server = _server(model, n_slots=3, spec_k=3)
+    for i, p in enumerate(prompts):
+        server.submit(api.GenerationRequest(p, 10, session_id=f"s{i}"))
+    server.step()
+    server.step()
+    server.batcher.pool.check_invariants()
+    resp = server.cancel("s1")
+    assert resp.finish_reason == "cancelled"
+    server.batcher.pool.check_invariants()
+    done = server.run_until_drained()
+    for r in done:
+        assert r.finish_reason == "max_new_tokens"
+        assert len(r.tokens) == 10
+    _assert_drained_clean(server)
+
+
+def test_cancel_unknown_and_double_cancel(model):
+    params, cfg = model
+    server = _server(model)
+    server.submit(api.GenerationRequest(_prompts(cfg, [3])[0], 4,
+                                        session_id="a"))
+    assert server.cancel("nope") is None
+    assert server.cancel("a").finish_reason == "cancelled"
+    assert server.cancel("a") is None             # idempotent
+    assert server.metrics.cancelled == 1
+    _assert_drained_clean(server)
+
+
+# -- rejection / backpressure ------------------------------------------------
+
+def test_rejected_submit_leaves_no_state(model):
+    """Never-completable and malformed submissions raise RequestRejected
+    and leave the server byte-identical: no session, no queue entry, and
+    the uid is reusable."""
+    params, cfg = model
+    server = _server(model, n_blocks=4)         # pool too small for 20+16
+    big = _prompts(cfg, [20])[0]
+    with pytest.raises(api.RequestRejected, match="KV blocks"):
+        server.submit(api.GenerationRequest(big, 16, session_id="big"))
+    with pytest.raises(api.RequestRejected, match="1-D"):
+        server.submit(api.GenerationRequest(np.zeros((2, 3), np.int64), 4))
+    assert server.live_sessions() == [] and server.queue_depth == 0
+    assert not server.busy and len(server.batcher.requests) == 0
+    # the failed submits consumed nothing: a good request still runs
+    sid = server.submit(api.GenerationRequest(_prompts(cfg, [3])[0], 4,
+                                              session_id="big"))
+    assert sid == "big"
+    out = server.run_until_drained()
+    assert len(out) == 1 and len(out[0].tokens) == 4
+    _assert_drained_clean(server)
+
+
+def test_duplicate_live_session_id_rejected(model):
+    params, cfg = model
+    server = _server(model)
+    p = _prompts(cfg, [3])[0]
+    server.submit(api.GenerationRequest(p, 4, session_id="dup"))
+    with pytest.raises(api.RequestRejected, match="still live"):
+        server.submit(api.GenerationRequest(p, 4, session_id="dup"))
+    server.run_until_drained()
+    # finished ids are reusable
+    server.submit(api.GenerationRequest(p, 4, session_id="dup"))
+    server.run_until_drained()
+    _assert_drained_clean(server)
+
+
+def test_backpressure_sheds_and_recovers(model):
+    """Beyond max_queue waiting sessions, submit raises Backpressure with
+    the queue/pool picture; a rejected submit leaves no state, and the
+    same request is admittable once the queue drains."""
+    params, cfg = model
+    prompts = _prompts(cfg, [3, 4, 5, 6])
+    server = _server(model, max_queue=1)        # 2 slots + 1 waiting
+    # admission happens inside step(), so drain the queue between submits:
+    # s0/s1 get the two slots, s2 is the one allowed waiter
+    for i, p in enumerate(prompts[:3]):
+        server.submit(api.GenerationRequest(p, 6, session_id=f"s{i}"))
+        if i < 2:
+            server.step()
+    with pytest.raises(api.Backpressure) as ei:
+        server.submit(api.GenerationRequest(prompts[3], 6, session_id="s3"))
+    assert ei.value.queue_depth == 1 and ei.value.max_queue == 1
+    assert ei.value.blocks_available is not None
+    assert server.live_sessions() == ["s0", "s1", "s2"]
+    assert "s3" not in server.batcher.requests
+    server.run_until_drained()
+    sid = server.submit(api.GenerationRequest(prompts[3], 6,
+                                              session_id="s3"))
+    assert sid == "s3"
+    out = server.run_until_drained()
+    assert len(out) == 1 and len(out[0].tokens) == 6
+    _assert_drained_clean(server)
+
+
+# -- latency metrics ---------------------------------------------------------
+
+def test_virtual_clock_latency_stamps(model):
+    """With a StepClock, TTFT/TPOT are deterministic step counts: a request
+    admitted at step k has ttft == k (clock ticks after each step), TPOT is
+    bounded by 1 step/token, and cancelled sessions never contribute
+    samples to the metrics summaries."""
+    params, cfg = model
+    clock = loadgen.StepClock(dt=1.0)
+    server = _server(model, clock=clock)
+    prompts = _prompts(cfg, [3, 4, 5])
+    for i, p in enumerate(prompts):
+        server.submit(api.GenerationRequest(p, 6, session_id=f"s{i}"))
+    responses = {}
+    for _ in range(40):
+        for r in server.step():
+            responses[r.session_id] = r
+        clock.tick()
+        if not server.busy:
+            break
+    # 2 slots: s0/s1 admitted at virtual t=0, s2 waits for a free slot
+    assert responses["s0"].ttft_s == 0.0
+    assert responses["s1"].ttft_s == 0.0
+    assert responses["s2"].ttft_s > 0.0
+    for r in responses.values():
+        assert 0.0 < r.tpot_s <= 1.0
+        assert r.finish_t - r.submit_t >= r.ttft_s
+    m = server.metrics.as_dict()
+    assert m["ttft"]["n"] == 3 and m["tpot"]["n"] == 3
+    assert m["ttft"]["p99"] <= 40 and m["tpot"]["p99"] <= 1.0
+    assert m["cancelled"] == 0
+
+
+def test_metrics_exclude_cancelled_latencies(model):
+    params, cfg = model
+    server = _server(model)
+    for i, p in enumerate(_prompts(cfg, [3, 4])):
+        server.submit(api.GenerationRequest(p, 8, session_id=f"s{i}"))
+    server.step()
+    server.cancel("s1")
+    server.run_until_drained()
+    m = server.metrics
+    assert m.completed == 1 and m.cancelled == 1
+    assert len(m.ttft_s) == 1 and len(m.tpot_s) == 1
+    _assert_drained_clean(server)
+
+
+# -- loadgen -----------------------------------------------------------------
+
+def test_trace_reproducible_and_seed_sensitive():
+    t1 = loadgen.open_loop_trace(seed=3, n_requests=20, rate=0.5, vocab=256)
+    t2 = loadgen.open_loop_trace(seed=3, n_requests=20, rate=0.5, vocab=256)
+    t3 = loadgen.open_loop_trace(seed=4, n_requests=20, rate=0.5, vocab=256)
+    f1, f2, f3 = (loadgen.trace_fingerprint(t) for t in (t1, t2, t3))
+    assert f1 == f2 and f1 != f3
+    for a, b in zip(t1, t2):
+        assert a.t == b.t and a.max_new_tokens == b.max_new_tokens
+        np.testing.assert_array_equal(a.prompt, b.prompt)
+    # arrivals strictly ordered, tenants from the declared mix
+    assert all(a.t < b.t for a, b in zip(t1, t1[1:]))
+    assert {r.tenant for r in t1} <= {"shared", "unique"}
+
+
+def test_replay_parity_and_determinism(model):
+    """Open-loop replay through the session API produces exactly the plain
+    batcher's outputs, and two replays of one trace produce identical
+    virtual latency summaries."""
+    params, cfg = model
+    trace = loadgen.open_loop_trace(seed=11, n_requests=8, rate=0.6,
+                                    vocab=cfg.vocab)
+
+    def one_replay():
+        clock = loadgen.StepClock(dt=1.0)
+        server = _server(model, n_slots=3, clock=clock)
+        res = loadgen.replay(server, trace, clock)
+        _assert_drained_clean(server)
+        return res
+
+    r1, r2 = one_replay(), one_replay()
+    s1, s2 = r1.summary(), r2.summary()
+    assert s1["virtual"] == s2["virtual"]
+    assert s1["completed"] == len(trace) and s1["rejected"] == 0
+
+    b = batching.ContinuousBatcher(params, cfg, n_slots=3, max_len=32,
+                                   cache_kind="paged", block_size=4,
+                                   n_blocks=16)
+    for tr in trace:
+        b.submit(tr.rid, tr.prompt, tr.max_new_tokens)
+    want = b.run_to_completion()
+    got = {int(r.session_id.split("/")[1]): r.tokens for r in r1.responses}
+    assert got == {int(u): v for u, v in want.items()}
