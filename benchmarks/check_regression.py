@@ -1,8 +1,8 @@
 """CI bench-regression gate: diff smoke bench runs against committed baselines.
 
-Every CI run produces smoke editions of the four committed benchmarks
+Every CI run produces smoke editions of the five committed benchmarks
 (`BENCH_kernel_smoke.json`, `BENCH_e2e_smoke.json`, `BENCH_spec_smoke.json`,
-`BENCH_serve_smoke.json`).
+`BENCH_serve_smoke.json`, `BENCH_chaos_smoke.json`).
 Wall-clock numbers are not comparable across runners, and smoke workloads
 are smaller than the committed full runs — but the *dimensionless quality
 metrics* (schedule-selector effective speedup, concurrency gain at fixed KV
@@ -37,6 +37,8 @@ baseline in the same PR that intentionally moves a gated metric:
         --json benchmarks/baselines/BENCH_spec_smoke.json
     PYTHONPATH=src python -m benchmarks.serving_load --smoke \
         --json benchmarks/baselines/BENCH_serve_smoke.json
+    PYTHONPATH=src python -m benchmarks.chaos --smoke \
+        --json benchmarks/baselines/BENCH_chaos_smoke.json
 
 Usage (what `.github/workflows/ci.yml` runs):
 
@@ -94,6 +96,20 @@ METRICS: Dict[str, List[Metric]] = {
         ("scenarios.steady.virtual.ttft.p99", "lower", 0.10, 3.0),
         ("scenarios.steady.virtual.tpot.p99", "lower", 0.10, 1.0),
         ("scenarios.overload.virtual.ttft.p99", "lower", 0.15, 8.0),
+    ],
+    # Chaos gate (DESIGN.md §14): under the seeded FaultPlan every session
+    # must end with an explicit finish_reason (zero hung — a hard ceiling),
+    # enough traffic must still complete, streams untouched by the faults
+    # must bitwise-match the fault-free replay, and a kill-and-restore of
+    # the server mid-run must resume with exactly-once token events. All
+    # booleans are encoded as 1.0 floors so a drop to 0.0 is a hard fail.
+    "chaos": [
+        ("hung_sessions", "lower", 0.0, 0.0),
+        ("completion_rate", "higher", 0.10, 0.6),
+        ("unaffected_parity", "higher", 0.0, 1.0),
+        ("restore.exactly_once", "higher", 0.0, 1.0),
+        ("restore.parity", "higher", 0.0, 1.0),
+        ("restore.hung", "lower", 0.0, 0.0),
     ],
 }
 

@@ -23,8 +23,9 @@ Scenarios:
   to `ContinuousBatcher.run_to_completion` on the same trace (the session
   layer adds zero scheduling behavior — asserted here, in-bench).
 * ``overload`` — arrivals far above capacity with a short admission queue:
-  backpressure sheds load (``rejected > 0``) and queueing pushes p99 TTFT
-  up; the gate watches that the degradation stays bounded.
+  backpressure sheds load (``shed > 0``; ``rejected`` counts only
+  never-runnable requests) and queueing pushes p99 TTFT up; the gate
+  watches that the degradation stays bounded.
 
 ``--smoke`` is the CI edition (committed baseline:
 ``benchmarks/baselines/BENCH_serve_smoke.json``); the committed full run is
@@ -108,8 +109,9 @@ def report(full: bool = False, seed: int = 0) -> Dict[str, Any]:
             params, cfg, seed=seed + 1, n_requests=n_req, rate=2.0,
             max_queue=4, parity=False),
     }
+    assert scenarios["steady"]["shed"] == 0
     assert scenarios["steady"]["rejected"] == 0
-    assert scenarios["overload"]["rejected"] > 0, \
+    assert scenarios["overload"]["shed"] > 0, \
         "overload scenario produced no backpressure"
     return {
         "bench": "serving_load",
@@ -131,7 +133,7 @@ def run(full: bool = False, seed: int = 0):
         v = s["virtual"]
         rows.append(
             f"serve_{name},0,"
-            f"completed={s['completed']};rejected={s['rejected']};"
+            f"completed={s['completed']};shed={s['shed']};"
             f"steps={s['steps']};preempt={s['preemptions']};"
             f"ttft_p50={v['ttft']['p50']:.1f};"
             f"ttft_p99={v['ttft']['p99']:.2f};"
@@ -164,7 +166,7 @@ def main() -> None:
               f"{st['ttft']['p50']:.1f}/{st['ttft']['p99']:.2f} steps, "
               f"tpot p99 = {st['tpot']['p99']:.2f}; overload ttft p99 = "
               f"{ov['ttft']['p99']:.2f} "
-              f"({rep['scenarios']['overload']['rejected']} shed)")
+              f"({rep['scenarios']['overload']['shed']} shed)")
     else:
         for row in run(full, args.seed):
             print(row)

@@ -48,6 +48,7 @@ RULES: Dict[str, str] = {
     "PY-TRACED-BRANCH": "Python if/while branches on a traced value",
     "PY-MUT-DEFAULT": "mutable default argument",
     "PY-DICT-MUT": "dict/list mutated while being iterated",
+    "PY-SWALLOW": "bare/over-broad except in serving/ drops the exception",
 }
 
 _IGNORE_RE = re.compile(r"#\s*repro:\s*ignore\[([A-Z0-9,\- ]+)\]")

@@ -28,6 +28,16 @@ PY-MUT-DEFAULT    mutable default argument (shared across calls).
 PY-DICT-MUT       a dict/list mutated (``del``/``pop``/item-assign) inside
           a ``for`` iterating it directly — RuntimeError at runtime.
 
+Serving-only fault hygiene:
+
+PY-SWALLOW  a bare ``except:`` or ``except Exception/BaseException`` in
+          ``serving/`` whose handler neither re-raises nor references the
+          bound exception: the serving stack's fault doctrine (DESIGN.md
+          §14) is that every failure is *contained and recorded* — a
+          handler that silently drops the exception turns a per-session
+          fault into an invisible wedge. Narrow the type, re-raise, or
+          bind it (``except Exception as e``) and record it.
+
 Suppression: inline ``# repro: ignore[RULE]`` on (or directly above) the
 flagged line — see ``analysis.findings``.
 """
@@ -205,6 +215,44 @@ class _FileLinter(ast.NodeVisitor):
                           "key chain depends on scheduling history",
                           "fold the base key by (uid, token index): "
                           "engine.fold_slot_keys / jax.random.fold_in")
+        self.generic_visit(node)
+
+    # -- exception swallowing (serving fault doctrine) --------------------
+    @staticmethod
+    def _broad_handler(h: ast.ExceptHandler) -> bool:
+        if h.type is None:
+            return True
+        types = (h.type.elts if isinstance(h.type, ast.Tuple)
+                 else [h.type])
+        return any(_dotted(t).rsplit(".", 1)[-1]
+                   in ("Exception", "BaseException") for t in types)
+
+    @staticmethod
+    def _handler_swallows(h: ast.ExceptHandler) -> bool:
+        """True when the body neither re-raises nor touches the bound
+        exception name — nothing downstream can ever see the failure."""
+        for stmt in h.body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Raise):
+                    return False
+                if (h.name and isinstance(sub, ast.Name)
+                        and sub.id == h.name):
+                    return False
+        return True
+
+    def visit_Try(self, node: ast.Try) -> None:
+        if self.serving:
+            for h in node.handlers:
+                if self._broad_handler(h) and self._handler_swallows(h):
+                    what = ("bare `except:`" if h.type is None else
+                            f"`except {_dotted(h.type) or '...'}`")
+                    self._add("PY-SWALLOW", h,
+                              f"{what} drops the exception — serving "
+                              f"faults must be contained and recorded, "
+                              f"never silently swallowed",
+                              "narrow the exception type, re-raise, or "
+                              "bind it (`except Exception as e`) and "
+                              "record it (metrics / logs)")
         self.generic_visit(node)
 
     # -- dict-iteration mutation -----------------------------------------

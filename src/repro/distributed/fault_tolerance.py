@@ -72,6 +72,81 @@ def _unflatten_like(template, arrays: Dict[str, np.ndarray],
 
 
 # ---------------------------------------------------------------------------
+# atomic JSON publication — shared by checkpoints and serving snapshots
+# ---------------------------------------------------------------------------
+
+def atomic_write_json(path: str, payload: dict) -> None:
+    """Write ``payload`` to ``path`` crash-consistently: serialize to a
+    same-directory temp file, fsync, then ``os.replace`` — a reader (or a
+    restart) sees either the old complete file or the new complete file,
+    never a torn write."""
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, sort_keys=True)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)                   # atomic publish
+
+
+class SnapshotStore:
+    """Small-state sibling of :class:`CheckpointManager`: numbered JSON
+    snapshots published atomically, newest-wins restore, bounded history.
+
+    The serving stack uses it for scheduler/session state (DESIGN.md §14)
+    — host-side dicts, no device arrays — so one fsync'd JSON file per
+    snapshot is the whole persistence story; model params are immutable
+    and restored from their own source.
+    """
+
+    def __init__(self, directory: str, *, prefix: str = "snapshot",
+                 keep: int = 3):
+        self.dir = directory
+        self.prefix = prefix
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, seq: int) -> str:
+        return os.path.join(self.dir, f"{self.prefix}_{seq:010d}.json")
+
+    def all_seqs(self):
+        out = []
+        pat = re.compile(rf"{re.escape(self.prefix)}_(\d+)\.json")
+        for name in os.listdir(self.dir):
+            m = pat.fullmatch(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def save(self, payload: dict, *, seq: Optional[int] = None) -> str:
+        """Publish one snapshot (auto-incrementing sequence number unless
+        given); returns its path. Old snapshots beyond ``keep`` are GC'd
+        *after* the new one is durable."""
+        if seq is None:
+            seqs = self.all_seqs()
+            seq = (seqs[-1] + 1) if seqs else 0
+        path = self._path(seq)
+        atomic_write_json(path, payload)
+        if self.keep:
+            for s in self.all_seqs()[:-self.keep]:
+                try:
+                    os.remove(self._path(s))
+                except OSError:
+                    pass  # concurrent GC / already gone — harmless
+        return path
+
+    def latest_path(self) -> Optional[str]:
+        seqs = self.all_seqs()
+        return self._path(seqs[-1]) if seqs else None
+
+    def latest(self) -> Optional[dict]:
+        path = self.latest_path()
+        if path is None:
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+
+# ---------------------------------------------------------------------------
 # checkpoint manager
 # ---------------------------------------------------------------------------
 
@@ -108,10 +183,7 @@ class CheckpointManager:
         os.makedirs(tmp)
         np.savez(os.path.join(tmp, "leaves.npz"),
                  **{k: v for k, v in arrays.items()})
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(meta, f)
-            f.flush()
-            os.fsync(f.fileno())
+        atomic_write_json(os.path.join(tmp, "manifest.json"), meta)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)               # atomic publish

@@ -12,6 +12,13 @@ weight-bytes saving. Default is a closed-loop drain (submit everything,
 run until done); ``--trace-rate R`` switches to an open-loop Poisson trace
 (`serving.loadgen`) at R requests per engine step, where queueing delay
 shows up in TTFT and ``--max-queue`` sheds load via backpressure.
+
+Fault-tolerance knobs (DESIGN.md §14): ``--deadline-ms`` /
+``--ttft-deadline-ms`` attach latency budgets to every request
+(finish_reason="deadline" on a miss), ``--fault-plan plan.json`` injects a
+saved `serving.faults.FaultPlan` (chaos replay from a file), and
+``--snapshot-dir`` restores in-flight sessions from the newest snapshot at
+startup and writes a crash-consistent one after the run drains.
 """
 
 from __future__ import annotations
@@ -26,7 +33,7 @@ from repro import configs
 from repro.core import pruning, tiled_csl
 from repro.distributed import fault_tolerance as ft
 from repro.models import transformer, nn
-from repro.serving import api, budget, loadgen, speculative
+from repro.serving import api, budget, faults, loadgen, speculative
 from repro.serving.scheduler import latency_summary
 
 
@@ -71,6 +78,18 @@ def main() -> None:
     ap.add_argument("--max-queue", type=int, default=None,
                     help="admission queue bound; beyond it submissions are "
                          "shed with backpressure (open-loop mode)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="total latency budget per request; missing it ends "
+                         "the session with finish_reason='deadline'")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=None,
+                    help="first-token latency budget per request")
+    ap.add_argument("--fault-plan", default=None, metavar="PATH",
+                    help="JSON FaultPlan (serving.faults) injected into the "
+                         "run — chaos replay from a file")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="write a crash-consistent scheduler/session "
+                         "snapshot here after the run drains (and restore "
+                         "from it at startup when one exists)")
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
@@ -132,13 +151,32 @@ def main() -> None:
             args.drafter, max_ngram=args.max_ngram,
             draft_params=draft_params, draft_cfg=draft_cfg,
             vocab=cfg.vocab if args.drafter == "model" else None)
-    server = api.StreamingServer(
-        params, cfg, max_queue=args.max_queue,
+    plan = faults.FaultPlan.load(args.fault_plan) if args.fault_plan else None
+    if plan is not None:
+        print(f"fault plan: {len(plan)} events, "
+              f"fingerprint {plan.fingerprint()[:12]}")
+    server_kwargs = dict(
         n_slots=args.slots, max_len=args.max_len,
         cache_kind="paged" if args.paged else "dense",
         block_size=args.block_size, n_blocks=n_blocks,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
-        spec_k=args.spec_k, drafter=drafter)
+        spec_k=args.spec_k, drafter=drafter, fault_plan=plan)
+    resume = None
+    if args.snapshot_dir:
+        resume = ft.SnapshotStore(args.snapshot_dir).latest_path()
+    if resume is not None:
+        server = api.StreamingServer.restore(
+            args.snapshot_dir, params, cfg, max_queue=args.max_queue,
+            **server_kwargs)
+        print(f"restored {len(server.live_sessions())} in-flight "
+              f"session(s) from {resume}")
+    else:
+        server = api.StreamingServer(params, cfg, max_queue=args.max_queue,
+                                     **server_kwargs)
+    ttft_dl = (args.ttft_deadline_ms / 1e3
+               if args.ttft_deadline_ms is not None else None)
+    total_dl = (args.deadline_ms / 1e3
+                if args.deadline_ms is not None else None)
     b = server.batcher
     t0 = time.time()
     n_shed = 0
@@ -152,17 +190,19 @@ def main() -> None:
             rate=args.trace_rate, vocab=cfg.vocab,
             tenants=[loadgen.TenantSpec(
                 "cli", suffix_len=(lo, hi),
-                max_new=(args.max_new, args.max_new + 1))])
+                max_new=(args.max_new, args.max_new + 1),
+                ttft_deadline=ttft_dl, deadline=total_dl)])
         result = loadgen.replay(server, trace,
                                 loadgen.StepClock(dt=1.0))
-        responses, n_shed = result.responses, len(result.rejected)
+        responses, n_shed = result.responses, len(result.shed)
     else:
         rng = np.random.default_rng(args.seed)
         for uid in range(args.requests):
             plen = int(rng.integers(4, min(16, args.max_len - args.max_new)))
             server.submit(api.GenerationRequest(
                 prompt=rng.integers(0, cfg.vocab, plen).astype(np.int64),
-                max_new_tokens=args.max_new))
+                max_new_tokens=args.max_new,
+                ttft_deadline_s=ttft_dl, deadline_s=total_dl))
         responses = server.run_until_drained()
     dt = time.time() - t0
     done = {r.session_id: r.tokens for r in responses}
@@ -195,6 +235,15 @@ def main() -> None:
               f"drafted={m.drafted} accepted={m.accepted} "
               f"accept_rate={m.accept_rate:.2f} "
               f"tokens_per_step={m.tokens_per_step:.2f}")
+    if plan is not None:
+        rep = b.faults.report()
+        print(f"faults: {rep['fired']}/{rep['plan_events']} events fired "
+              f"{rep['by_kind']}; retries={m.step_retries} "
+              f"quarantined={m.quarantined} deadline={m.deadline_expired} "
+              f"peak_degradation={m.peak_degradation_level}")
+    if args.snapshot_dir:
+        path = server.snapshot(args.snapshot_dir)
+        print(f"snapshot: {path}")
     for sid in sorted(done)[:3]:
         print(f"  {sid}: {done[sid][:8]}...")
 

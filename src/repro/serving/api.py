@@ -48,23 +48,38 @@ from repro.serving.batching import ContinuousBatcher
 
 
 class Backpressure(RuntimeError):
-    """Raised by submit when the server's admission queue is full.
+    """Raised by submit when the server is shedding load — the admission
+    queue is full (``reason="queue_full"``) or the degradation ladder hit
+    its top rung (``reason="shed"``).
 
     Carries what a shedding/retry policy needs: how many sessions are
-    already waiting (``queue_depth`` vs ``max_queue``) and how many KV
-    blocks the pool could currently offer (``blocks_available``; None for
-    the dense cache, which admits on free slots alone).
+    already waiting (``queue_depth`` vs ``max_queue``), how many KV blocks
+    the pool could currently offer (``blocks_available``; None for the
+    dense cache, which admits on free slots alone), and ``retry_after_s``
+    — the server's estimate of when a slot frees, derived from the recent
+    queue drain rate (None until enough sessions have finished to measure
+    one).
     """
 
-    def __init__(self, queue_depth: int, max_queue: int,
-                 blocks_available: Optional[int]):
+    def __init__(self, queue_depth: int, max_queue: Optional[int],
+                 blocks_available: Optional[int],
+                 retry_after_s: Optional[float] = None,
+                 reason: str = "queue_full"):
         self.queue_depth = queue_depth
         self.max_queue = max_queue
         self.blocks_available = blocks_available
-        super().__init__(
-            f"admission queue full ({queue_depth}/{max_queue} waiting"
-            + (f", {blocks_available} KV blocks free" if
-               blocks_available is not None else "") + ")")
+        self.retry_after_s = retry_after_s
+        self.reason = reason
+        hint = (f"; retry after ~{retry_after_s:.2f}s"
+                if retry_after_s is not None else "")
+        if reason == "shed":
+            msg = (f"server shedding load (degraded; {queue_depth} "
+                   f"waiting{hint})")
+        else:
+            msg = (f"admission queue full ({queue_depth}/{max_queue} waiting"
+                   + (f", {blocks_available} KV blocks free"
+                      if blocks_available is not None else "") + hint + ")")
+        super().__init__(msg)
 
 
 class RequestRejected(ValueError):
@@ -77,12 +92,17 @@ class RequestRejected(ValueError):
 class GenerationRequest:
     """One generation call. ``session_id`` is the caller's handle for
     streaming and cancellation (auto-assigned when None); ``on_token``
-    streams tokens as they are generated."""
+    streams tokens as they are generated. The deadlines are latency
+    budgets on the server's clock: miss the TTFT budget before the first
+    token, or the total budget at any point, and the session ends with
+    ``finish_reason="deadline"`` (tokens generated so far are kept)."""
 
     prompt: np.ndarray
     max_new_tokens: int
     session_id: Optional[str] = None
     on_token: Optional[Callable[["TokenEvent"], None]] = None
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -166,9 +186,12 @@ class StreamingServer:
     # -- submit / cancel -----------------------------------------------------
     def submit(self, request: GenerationRequest) -> str:
         """Queue a generation; returns its session id. Raises
-        :class:`Backpressure` (queue full) or :class:`RequestRejected`
-        (never-runnable request / duplicate live session id) — both before
-        any state is created."""
+        :class:`RequestRejected` (never-runnable request / duplicate live
+        session id — permanent, don't retry) or :class:`Backpressure`
+        (queue full or shedding — transient, retry after its hint). Both
+        raise before any state is created, and validation runs *first*:
+        a request the configured pool can never complete is rejected even
+        when the queue is full, so callers learn the right failure."""
         sid = request.session_id
         if sid is None:
             sid = f"s{self._next_uid}"
@@ -176,15 +199,28 @@ class StreamingServer:
             raise RequestRejected(
                 f"session id {sid!r} is still live; cancel it or pick "
                 f"another id")
+        sched = self.batcher.sched
+        try:
+            sched.validate_request(request.prompt, request.max_new_tokens)
+        except ValueError as e:
+            raise RequestRejected(str(e)) from e
         depth = self.queue_depth
+        pool = self.batcher.pool
+        avail = pool.available if pool is not None else None
+        if sched.shedding:
+            sched.metrics.degradation_sheds += 1
+            raise Backpressure(depth, self.max_queue, avail,
+                               retry_after_s=sched.retry_after_s(),
+                               reason="shed")
         if self.max_queue is not None and depth >= self.max_queue:
-            pool = self.batcher.pool
-            raise Backpressure(depth, self.max_queue,
-                               pool.available if pool is not None else None)
+            raise Backpressure(depth, self.max_queue, avail,
+                               retry_after_s=sched.retry_after_s())
         uid = self._next_uid
         try:
-            req = self.batcher.submit(uid, request.prompt,
-                                      request.max_new_tokens)
+            req = self.batcher.submit(
+                uid, request.prompt, request.max_new_tokens,
+                ttft_deadline_s=request.ttft_deadline_s,
+                deadline_s=request.deadline_s)
         except ValueError as e:
             raise RequestRejected(str(e)) from e
         self._next_uid += 1
@@ -232,6 +268,69 @@ class StreamingServer:
             if not self.busy:
                 break
         return out
+
+    # -- crash recovery (DESIGN.md §14) --------------------------------------
+    def snapshot(self, directory: str) -> str:
+        """Publish a crash-consistent snapshot of the server's host state
+        (scheduler queue + in-flight requests as-if-preempted, session
+        watermarks, uid counter, virtual-clock time) through the atomic-
+        rename machinery in `distributed.fault_tolerance`. Call at a step
+        boundary only. Returns the snapshot path.
+
+        Model params and KV blocks are deliberately NOT captured: params
+        are immutable inputs, and the restored requests re-prefill their
+        prompt+generated tokens on re-admission (recompute resume), which
+        regenerates bitwise-identical greedy *and* sampled streams via the
+        (uid, token-index)-folded keys."""
+        from repro.distributed.fault_tolerance import SnapshotStore
+        payload = {
+            "version": 1,
+            "scheduler": self.batcher.sched.export_state(),
+            "sessions": [
+                {"sid": s.session_id, "uid": s.uid,
+                 "delivered": s.delivered}
+                for s in sorted(self._by_uid.values(), key=lambda s: s.uid)],
+            "next_uid": self._next_uid,
+        }
+        t = getattr(self.batcher.sched.clock, "t", None)
+        if t is not None:
+            payload["clock_t"] = float(t)
+        return SnapshotStore(directory).save(payload)
+
+    @classmethod
+    def restore(cls, directory: str, params, cfg, *,
+                on_token: Optional[Callable[[TokenEvent], None]] = None,
+                max_queue: Optional[int] = None,
+                **batcher_kwargs) -> "StreamingServer":
+        """Rebuild a server from the newest snapshot in ``directory`` —
+        the crashed process's in-flight sessions resume queued (in their
+        original admission order, ahead of the old queue) and stream
+        *exactly once*: each restored session's delivered watermark
+        suppresses re-emission of tokens already streamed before the
+        crash. ``on_token`` (one callback; events carry the session id)
+        reattaches streaming to every restored session. Batcher kwargs
+        must match the crashed server's (same pool geometry, sampling,
+        and clock kind) — the snapshot holds state, not configuration."""
+        from repro.distributed.fault_tolerance import SnapshotStore
+        payload = SnapshotStore(directory).latest()
+        if payload is None:
+            raise FileNotFoundError(f"no snapshot in {directory!r}")
+        server = cls(params, cfg, max_queue=max_queue, **batcher_kwargs)
+        clock = server.batcher.sched.clock
+        if "clock_t" in payload and hasattr(clock, "t"):
+            clock.t = float(payload["clock_t"])
+        reqs = server.batcher.sched.restore_state(payload["scheduler"])
+        by_uid = {r.uid: r for r in reqs}
+        for s in payload["sessions"]:
+            req = by_uid.get(int(s["uid"]))
+            if req is None:
+                continue          # finished before the snapshot — stale row
+            sess = _Session(int(s["uid"]), s["sid"], req, on_token,
+                            delivered=int(s["delivered"]))
+            server._sessions[s["sid"]] = sess
+            server._by_uid[sess.uid] = sess
+        server._next_uid = int(payload["next_uid"])
+        return server
 
     # -- internals -----------------------------------------------------------
     def _drain_stream(self, sess: _Session, req) -> None:

@@ -77,9 +77,9 @@ import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
-from repro.serving import engine, speculative
-from repro.serving.scheduler import (Request, Scheduler,  # noqa: F401
-                                     SchedulerMetrics)
+from repro.serving import engine, faults, speculative
+from repro.serving.scheduler import (DegradationPolicy,  # noqa: F401
+                                     Request, Scheduler, SchedulerMetrics)
 from repro.serving.step import DeviceStepper
 
 
@@ -127,7 +127,9 @@ class ContinuousBatcher:
                  prefix_sharing: bool = True,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  spec_k: int = 0, drafter=None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 fault_plan=None, degradation=None,
+                 max_step_retries: int = 4, retry_backoff_s: float = 0.25):
         if cfg.n_codebooks:
             raise ValueError("codebook (audio) archs need [n_cb, S] prompts; "
                              "drive engine.generate directly")
@@ -176,6 +178,12 @@ class ContinuousBatcher:
                 cfg, max_len, block_size)
             if n_blocks is None:
                 n_blocks = n_slots * self.max_blocks   # dense byte-equivalent
+        self.max_step_retries = int(max_step_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.faults = (fault_plan if isinstance(fault_plan,
+                                                faults.FaultInjector)
+                       else faults.FaultInjector(fault_plan)
+                       if fault_plan is not None else None)
         self.sched = Scheduler(
             n_slots=n_slots, max_len=max_len, stop_ids=stop,
             admit_k=self.admit_k, buckets=buckets, ring_len=self.ring_len,
@@ -184,14 +192,14 @@ class ContinuousBatcher:
             reserve_blocks=reserve_blocks, prefix_sharing=prefix_sharing,
             request_history=request_history, spec_k=self.spec_k,
             drafter=self.drafter, sampled=self.temperature != 0.0,
-            clock=clock)
+            clock=clock, degradation=degradation)
         self.stepper = DeviceStepper(
             params, cfg, n_slots=n_slots, max_len=max_len, backend=backend,
             physical_blocks=(self.sched.pool.physical_blocks
                              if self.paged else None),
             block_size=block_size, ring_len=self.ring_len,
             temperature=temperature, top_k=top_k, seed=seed,
-            spec_k=self.spec_k)
+            spec_k=self.spec_k, faults=self.faults)
 
     # -- delegation: the monolith's introspection surface -------------------
     @property
@@ -261,37 +269,78 @@ class ContinuousBatcher:
         return self.sched.busy
 
     # -- public API ---------------------------------------------------------
-    def submit(self, uid: int, prompt: np.ndarray,
-               max_new_tokens: int) -> Request:
-        return self.sched.submit(uid, prompt, max_new_tokens)
+    def submit(self, uid: int, prompt: np.ndarray, max_new_tokens: int, *,
+               ttft_deadline_s: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> Request:
+        return self.sched.submit(uid, prompt, max_new_tokens,
+                                 ttft_deadline_s=ttft_deadline_s,
+                                 deadline_s=deadline_s)
 
     def cancel(self, uid: int) -> Optional[Request]:
         """Cancel a live request in any state (queued, active, preempted);
         see :meth:`Scheduler.cancel`."""
         return self.sched.cancel(uid)
 
+    def _launch(self, op: str, fn):
+        """Run one device launch, retrying injected (or wrapped-real)
+        transient failures with bounded exponential backoff. A
+        ``TransientStepError`` raises *before* anything touches the device,
+        so re-running ``fn`` is bitwise the launch that should have
+        happened; each backoff advances the virtual clock (deadlines see
+        the lost time). Exhausting the budget raises ``StepFault`` —
+        scheduler state is still consistent, the step just never ran."""
+        delay = self.retry_backoff_s
+        attempt = 0
+        while True:
+            try:
+                return fn()
+            except faults.TransientStepError as e:
+                attempt += 1
+                self.sched.metrics.step_retries += 1
+                self.sched.note_fault()
+                if attempt > self.max_step_retries:
+                    raise faults.StepFault(op, attempt, e) from e
+                self.sched.advance_clock(delay)
+                delay *= 2.0
+
     def step(self) -> Dict[int, List[int]]:
         """Admit + decode one token for all active slots (1 + accepted
-        drafts with ``spec_k``). Returns finished."""
+        drafts with ``spec_k``). Returns finished — which under fault
+        injection may include sessions ended by deadline expiry or slot
+        quarantine, each with its explicit ``finish_reason``."""
         sched = self.sched
         m = sched.metrics
         finished: Dict[int, List[int]] = {}
+        inj = self.faults
+        if inj is not None:
+            inj.begin_step(m.steps)
+            delay = inj.delay_s()
+            if delay:
+                sched.advance_clock(delay)       # latency spike → deadlines
+            sched.inject_drafter_fault = inj.drafter_fails()
+            if self.paged:
+                for ev in inj.storms():
+                    sched.seize_blocks(ev.blocks, ev.duration)
+        if self.paged:
+            sched.release_seized()               # expired storms give back
+        sched.expire_deadlines(finished)
+        sched.update_degradation()
         t0 = time.monotonic()
-        while True:
+        while not sched.shedding:
             plan = sched.plan_admission()
             if plan is None:
                 break
-            logits = self.stepper.prefill(plan.tokens, plan.targets,
-                                          plan.lens)
-            nxt = self.stepper.sample_admitted(logits, plan.uids,
-                                               plan.counts)
-            sched.commit_admission(plan, nxt, finished)
+            logits = self._launch("prefill", lambda: self.stepper.prefill(
+                plan.tokens, plan.targets, plan.lens))
+            nxt, ok = self.stepper.sample_admitted(logits, plan.uids,
+                                                   plan.counts)
+            sched.commit_admission(plan, nxt, finished, ok=ok)
         m.admit_time_s += time.monotonic() - t0
         staged: Dict[int, np.ndarray] = {}
         if self.paged:
             # Growth / copy-on-write / preemption happen before the step,
             # so the jitted decode sees fully-valid tables.
-            if self.spec_k:
+            if self.spec_k and sched.effective_spec_k:
                 staged, copies = sched.stage_spec()
             else:
                 copies = sched.prepare_decode()
@@ -308,19 +357,24 @@ class ContinuousBatcher:
         t0 = time.monotonic()
         if self.spec_k and any(len(staged.get(s, ())) for s in active):
             vb = sched.build_verify(active, staged)
-            tgt, n_acc = self.stepper.verify(
+            tgt, n_acc = self._launch("verify", lambda: self.stepper.verify(
                 vb.tokens, sched.pos, sched.table_arr, vb.draft_lens,
-                vb.uids, vb.counts)
+                vb.uids, vb.counts))
             sched.commit_verify(active, tgt, n_acc, finished)
         else:
             # No drafts anywhere (or spec off): ordinary one-token decode —
             # the drafter contract's degradation path, at window width 1
             # instead of a wasted (k+1)-wide verify.
             uids, counts = sched.decode_folds(active)
-            nxt = self.stepper.decode(sched.last_token, sched.pos,
-                                      sched.table_arr if self.paged else None,
-                                      uids, counts)
-            sched.commit_decode(active, nxt, finished)
+            nxt, ok = self._launch("decode", lambda: self.stepper.decode(
+                sched.last_token, sched.pos,
+                sched.table_arr if self.paged else None, uids, counts))
+            good = [s for s in active if ok[s]]
+            for s in active:
+                if not ok[s]:                    # non-finite logits: contain
+                    sched.quarantine_slot(s, finished)
+            if good:
+                sched.commit_decode(good, nxt, finished)
         m.decode_time_s += time.monotonic() - t0
         if self.paged:
             # refresh after completions freed their tables (the pre-decode

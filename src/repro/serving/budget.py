@@ -97,6 +97,28 @@ class Plan:
         per_slot = max_len * (self.block_bytes // self.block)
         return self.kv_bytes // max(per_slot, 1)
 
+    def worst_case_blocks(self, prompt_len: int, max_new_tokens: int,
+                          max_len: int,
+                          ring_len: Optional[int] = None) -> int:
+        """KV blocks a request can grow to before it completes — the same
+        bound `Scheduler.validate_request` enforces at submit: K/V
+        positions reach prompt + (max_new − 1) generated (the last sampled
+        token is never written back), capped by ``max_len`` and the
+        sliding-window ring."""
+        n_pos = min(prompt_len + max(max_new_tokens - 1, 0), max_len)
+        if ring_len is not None:
+            n_pos = min(n_pos, ring_len)
+        return -(-n_pos // self.block)          # ceil div
+
+    def can_serve(self, prompt_len: int, max_new_tokens: int,
+                  max_len: int, ring_len: Optional[int] = None) -> bool:
+        """Whether this plan's pool can ever run such a request to
+        completion — the deploy-time twin of the server's submit-time
+        `RequestRejected` check, so sizing scripts learn the answer before
+        a server exists."""
+        return self.worst_case_blocks(prompt_len, max_new_tokens, max_len,
+                                      ring_len) <= self.n_blocks
+
     def as_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
         d["kv_positions"] = self.kv_positions

@@ -24,9 +24,14 @@ Three pieces:
   latencies are measured alongside and reported, ungated.
 * **Replay** — :func:`replay` feeds a trace into a
   `serving.api.StreamingServer` open-loop: submit everything whose arrival
-  time has passed, step once, tick. `api.Backpressure` rejections shed the
-  request (recorded, not retried). :class:`ReplayResult` summarizes both
-  clocks' percentiles plus completion/rejection counts.
+  time has passed, step once, tick. `api.Backpressure` sheds the request
+  and `api.RequestRejected` rejects it (both recorded as distinct
+  counters, never retried). :class:`ReplayResult` summarizes both clocks'
+  percentiles plus completion / shed / rejected / deadline-missed /
+  quarantined counts — the failure-mode split the chaos bench gates on.
+  Deadline budgets ride the trace (per-tenant), so chaos scenarios replay
+  bit-exactly: same trace seed + same `serving.faults.FaultPlan` seed →
+  the same failures at the same steps under the virtual clock.
 """
 
 from __future__ import annotations
@@ -54,6 +59,10 @@ class TenantSpec:
     prefix_len: int = 0
     suffix_len: Tuple[int, int] = (8, 16)
     max_new: Tuple[int, int] = (8, 9)
+    # Latency budgets (virtual seconds) every request of this tenant
+    # carries; None = no deadline (the default keeps old traces identical).
+    ttft_deadline: Optional[float] = None
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +75,8 @@ class TraceRequest:
     tenant: str
     prompt: np.ndarray
     max_new_tokens: int
+    ttft_deadline: Optional[float] = None
+    deadline: Optional[float] = None
 
 
 def make_trace(*, seed: int, n_requests: int, rate: float,
@@ -93,7 +104,8 @@ def make_trace(*, seed: int, n_requests: int, rate: float,
                                  suffix.astype(np.int64)])
         trace.append(TraceRequest(
             t=t, rid=rid, tenant=spec.name, prompt=prompt,
-            max_new_tokens=int(rng.integers(*spec.max_new))))
+            max_new_tokens=int(rng.integers(*spec.max_new)),
+            ttft_deadline=spec.ttft_deadline, deadline=spec.deadline))
     return trace
 
 
@@ -103,7 +115,7 @@ def trace_fingerprint(trace: Sequence[TraceRequest]) -> str:
     h = hashlib.sha256()
     for r in trace:
         h.update(f"{r.t!r}|{r.rid}|{r.tenant}|{r.max_new_tokens}|"
-                 .encode())
+                 f"{r.ttft_deadline!r}|{r.deadline!r}|".encode())
         h.update(np.ascontiguousarray(r.prompt, np.int64).tobytes())
     return h.hexdigest()
 
@@ -125,6 +137,12 @@ class StepClock:
     def tick(self) -> None:
         self.t += self.dt
 
+    def advance(self, dt: float) -> None:
+        """Extra time beyond the per-step tick — injected latency spikes
+        and retry backoff (`Scheduler.advance_clock`), so deadline math
+        sees the lost time deterministically."""
+        self.t += dt
+
 
 @dataclasses.dataclass
 class _WallStamps:
@@ -134,24 +152,38 @@ class _WallStamps:
     tokens: int = 0
 
 
+#: finish reasons that end a session *without* completing it — the replay
+#: summary counts them apart from natural stop/budget completions.
+FAILURE_REASONS = ("cancelled", "deadline", "quarantined")
+
+
 @dataclasses.dataclass
 class ReplayResult:
     """What one open-loop replay did, on both clocks."""
 
     responses: List[api.GenerationResponse]
-    rejected: List[int]                  # rids shed by backpressure
+    rejected: List[int]                  # rids refused (never runnable)
     steps: int
     wall_s: float                        # total replay wall time
     wall_ttft_s: List[float]
     wall_tpot_s: List[float]
+    shed: List[int] = dataclasses.field(default_factory=list)
+    # rids shed by Backpressure (transient — a client would retry)
 
     def summary(self) -> Dict[str, Any]:
         done = [r for r in self.responses
-                if r.finish_reason != "cancelled"]
+                if r.finish_reason not in FAILURE_REASONS]
+        by_reason: Dict[str, int] = {}
+        for r in self.responses:
+            by_reason[r.finish_reason] = by_reason.get(r.finish_reason,
+                                                       0) + 1
         toks = sum(len(r.tokens) for r in done)
         return {
             "completed": len(done),
-            "cancelled": len(self.responses) - len(done),
+            "cancelled": by_reason.get("cancelled", 0),
+            "deadline_missed": by_reason.get("deadline", 0),
+            "quarantined": by_reason.get("quarantined", 0),
+            "shed": len(self.shed),
             "rejected": len(self.rejected),
             "steps": self.steps,
             "tokens": toks,
@@ -174,15 +206,21 @@ class ReplayResult:
 
 
 def replay(server: api.StreamingServer, trace: Sequence[TraceRequest],
-           clock: StepClock, max_steps: int = 100_000) -> ReplayResult:
+           clock: StepClock, max_steps: int = 100_000,
+           on_step=None) -> ReplayResult:
     """Open-loop replay: before each step, submit every request whose
     arrival time has passed on the virtual clock (idle steps advance time
-    when the server is ahead of the trace); rejections shed. Wall TTFT /
-    TPOT are stamped here from the streaming callbacks, independent of the
-    server's (possibly virtual) latency clock."""
+    when the server is ahead of the trace). `api.Backpressure` sheds the
+    arrival (transient refusal — counted in ``shed``), `api.
+    RequestRejected` drops it permanently (``rejected``); neither retries.
+    Wall TTFT / TPOT are stamped here from the streaming callbacks,
+    independent of the server's (possibly virtual) latency clock.
+    ``on_step(step_index, server)``, if given, runs after each engine step
+    — the chaos bench's hook for mid-run snapshots and kill points."""
     pending = deque(sorted(trace, key=lambda r: (r.t, r.rid)))
     responses: List[api.GenerationResponse] = []
     rejected: List[int] = []
+    shed: List[int] = []
     stamps: Dict[str, _WallStamps] = {}
 
     def on_token(ev: api.TokenEvent) -> None:
@@ -207,11 +245,18 @@ def replay(server: api.StreamingServer, trace: Sequence[TraceRequest],
             try:
                 server.submit(api.GenerationRequest(
                     prompt=tr.prompt, max_new_tokens=tr.max_new_tokens,
-                    session_id=sid, on_token=on_token))
+                    session_id=sid, on_token=on_token,
+                    ttft_deadline_s=tr.ttft_deadline,
+                    deadline_s=tr.deadline))
             except api.Backpressure:
+                del stamps[sid]
+                shed.append(tr.rid)
+            except api.RequestRejected:
                 del stamps[sid]
                 rejected.append(tr.rid)
         responses.extend(server.step())
+        if on_step is not None:
+            on_step(steps, server)
         clock.tick()
         steps += 1
     wall_s = time.monotonic() - t0
@@ -222,7 +267,8 @@ def replay(server: api.StreamingServer, trace: Sequence[TraceRequest],
                  if st.finish >= 0 and st.tokens >= 2]
     return ReplayResult(responses=responses, rejected=rejected,
                         steps=steps, wall_s=wall_s,
-                        wall_ttft_s=wall_ttft, wall_tpot_s=wall_tpot)
+                        wall_ttft_s=wall_ttft, wall_tpot_s=wall_tpot,
+                        shed=shed)
 
 
 def sample_prompts(*, seed: int, n: int, tenants: Sequence[TenantSpec],

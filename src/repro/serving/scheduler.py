@@ -17,12 +17,27 @@ Request lifecycle (DESIGN.md §13 state machine)::
     commit_verify)-> ... -> FINISHED(stop | max_new_tokens | max_len)
     ACTIVE -(pool exhaustion)-> QUEUED (preempted; resume tokens carried)
     QUEUED | ACTIVE -(cancel)-> FINISHED(cancelled)   # state fully released
+    QUEUED | ACTIVE -(deadline budget exceeded)-> FINISHED(deadline)
+    ACTIVE -(non-finite logits detected)-> FINISHED(quarantined)
 
 Cancellation is legal in every live state: a queued request goes stale in
 the FIFO (purged lazily, O(1) amortized), an active one releases its slot
 and block table immediately, and a preempted one is just the queued case —
 the pool's ref-count invariants hold after every path (asserted by
 `tests/test_serving_api.py`).
+
+Failure containment (DESIGN.md §14): per-request TTFT / total-latency
+deadlines expire through :meth:`Scheduler.expire_deadlines` at the step
+boundary; a slot whose logits fail the device layer's non-finite scan is
+*quarantined* — its session alone fails and its blocks free, the rest of
+the batch commits untouched. Sustained pressure or repeated faults walk
+the graceful-degradation ladder (:class:`DegradationState`: shrink
+speculation, then admission, then shed at submit), with hysteresis so one
+bad step doesn't flap the server. :meth:`export_state` /
+:meth:`restore_state` round-trip the whole scheduler (queue, slots,
+per-request progress) as plain JSON at a step boundary — restored requests
+re-enter as preempted entries, so recompute-resume regenerates bitwise
+streams.
 
 Wall-clock latency: the scheduler stamps ``submit_t`` / ``first_token_t`` /
 ``finish_t`` on every request from an injectable ``clock`` (defaults to
@@ -54,7 +69,12 @@ class Request:
     done: bool = False
     pending: bool = True            # still queued (not yet taken for admission)
     finish_reason: str = ""         # "stop" | "max_new_tokens" | "max_len"
-                                    # | "cancelled"
+                                    # | "cancelled" | "deadline" | "quarantined"
+    # latency budgets on the scheduler clock (None = unbounded): TTFT
+    # (submit -> first token) and total (submit -> finish); exceeding one
+    # fails the request with finish_reason="deadline" at the step boundary
+    ttft_deadline_s: Optional[float] = None
+    deadline_s: Optional[float] = None
     submit_step: int = 0            # engine step at submit (queue-wait metric)
     admit_step: int = -1
     # wall-clock lifecycle stamps (scheduler clock; -1.0 = not yet reached)
@@ -124,8 +144,20 @@ class SchedulerMetrics:
     # speculative-decoding counters (zero when spec_k == 0)
     drafted: int = 0                 # draft tokens submitted to verify
     accepted: int = 0                # draft tokens accepted by the target
+    # fault-tolerance counters (DESIGN.md §14)
+    quarantined: int = 0             # sessions failed on non-finite logits
+    deadline_expired: int = 0        # sessions failed on a latency budget
+    step_retries: int = 0            # transient launch failures retried
+    drafter_errors: int = 0          # drafter faults degraded to plain decode
+    storms: int = 0                  # pool-exhaustion storms applied
+    seized_blocks: int = 0           # gauge: blocks a storm holds right now
+    degradation_level: int = 0       # gauge: current ladder level (0=normal)
+    peak_degradation_level: int = 0
+    degraded_steps: int = 0          # steps spent at level > 0
+    degradation_sheds: int = 0       # submits shed by the ladder's top rung
     # wall-clock latency samples of *finished* requests (scheduler clock;
-    # cancelled requests are excluded — their tail is not a served latency)
+    # cancelled/deadline/quarantined requests are excluded — their tail is
+    # not a served latency)
     ttft_s: List[float] = dataclasses.field(default_factory=list)
     tpot_s: List[float] = dataclasses.field(default_factory=list)
 
@@ -176,6 +208,50 @@ class SchedulerMetrics:
         d["ttft"] = latency_summary(d.pop("ttft_s"))
         d["tpot"] = latency_summary(d.pop("tpot_s"))
         return d
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradationPolicy:
+    """Knobs of the graceful-degradation ladder (DESIGN.md §14).
+
+    The ladder escalates one level after ``escalate_after`` consecutive
+    pressured steps and recovers one level after ``recover_after`` calm
+    steps (hysteresis: escalation is fast, recovery is slow, so a flapping
+    signal cannot oscillate the server every step). Levels:
+
+    0 normal · 1 spec_k halved · 2 speculation off · 3 admission serialized
+    (admit_k -> 1) · 4 shed new submissions (the session API's
+    :class:`~repro.serving.api.Backpressure` path).
+
+    ``fault_hi`` recent faults (detected NaNs, retried launches, storms,
+    drafter errors) within ``fault_window`` steps always count as pressure;
+    pool/queue *load* pressure participates only when ``pressure=True`` —
+    closed-loop benches legitimately run deep queues and full pools, so
+    load-based degradation is an open-loop serving opt-in.
+    """
+
+    fault_window: int = 8
+    fault_hi: int = 2
+    pressure: bool = False
+    pool_hi: float = 0.95            # blocks_in_use / n_blocks threshold
+    queue_hi_factor: float = 2.0     # queue_depth >= factor * n_slots
+    escalate_after: int = 2
+    recover_after: int = 8
+    max_level: int = 4
+
+
+@dataclasses.dataclass
+class DegradationState:
+    """Where the server sits on the ladder right now (surfaced through
+    ``SchedulerMetrics.degradation_level`` and the chaos bench report)."""
+
+    level: int = 0
+    since_step: int = 0              # step of the last level change
+    pressure_streak: int = 0
+    calm_streak: int = 0
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
 
 
 @dataclasses.dataclass
@@ -229,7 +305,8 @@ class Scheduler:
                  request_history: int = 1024,
                  spec_k: int = 0, drafter=None,
                  sampled: bool = False,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 degradation: Optional[DegradationPolicy] = None):
         self.n_slots = n_slots
         self.max_len = max_len
         self.stop_ids = frozenset(int(t) for t in stop_ids)
@@ -241,6 +318,15 @@ class Scheduler:
         self.drafter = drafter
         self.sampled = sampled
         self.clock = clock if clock is not None else time.monotonic
+        # -- fault tolerance (DESIGN.md §14) --------------------------------
+        self.degradation_policy = degradation or DegradationPolicy()
+        self.degradation = DegradationState()
+        self._fault_steps: Deque[int] = deque()   # recent-fault step window
+        self._seized: List[List[Any]] = []        # [release_step, [blocks]]
+        self._terminal_t: Deque[float] = deque(maxlen=32)  # drain-rate taps
+        self._live_deadlines = 0                  # live reqs with any budget
+        self.inject_drafter_fault = False         # chaos hook (faults.py)
+        self.last_drafter_error: Optional[Exception] = None
         # FIFO arrival order (head-of-line fairness) + per-bucket index so a
         # same-bucket admission group is O(group), not a full-queue rebuild.
         # Entries admitted or cancelled go stale in ``queue``/``_by_bucket``
@@ -296,8 +382,14 @@ class Scheduler:
         return [s for s in range(self.n_slots) if self.slots[s] is not None]
 
     # -- submit / cancel ----------------------------------------------------
-    def submit(self, uid: int, prompt: np.ndarray, max_new_tokens: int
-               ) -> Request:
+    def validate_request(self, prompt: np.ndarray,
+                         max_new_tokens: int) -> np.ndarray:
+        """Everything a request must satisfy to be *runnable*, checked
+        before any state exists; raises ValueError otherwise. Returns the
+        normalized prompt. The session API calls this ahead of its
+        backpressure gate, so a never-completable request is rejected
+        outright instead of shed with a retryable signal (retrying it could
+        never succeed)."""
         prompt = np.asarray(prompt)
         if prompt.ndim != 1 or prompt.size == 0:
             raise ValueError(f"prompt must be a non-empty 1-D token array, "
@@ -306,9 +398,6 @@ class Scheduler:
             raise ValueError(f"prompt length {prompt.size} needs "
                              f">= {prompt.size + 1} cache positions; "
                              f"max_len is {self.max_len}")
-        if not 0 <= uid < 2 ** 32:
-            # per-slot sampling keys fold the uid as uint32 data
-            raise ValueError(f"request uid must fit uint32, got {uid}")
         if self.paged:
             # Reject requests the pool can never run to completion: decode
             # growth reaches blocks_for(prompt + generated K/V positions,
@@ -326,16 +415,32 @@ class Scheduler:
                     f"({n_pos} positions at block_size={self.block_size}) "
                     f"but the pool has only {self.pool.n_blocks}; raise "
                     f"n_blocks (budget) or lower max_new_tokens")
+        return prompt
+
+    def submit(self, uid: int, prompt: np.ndarray, max_new_tokens: int,
+               *, ttft_deadline_s: Optional[float] = None,
+               deadline_s: Optional[float] = None) -> Request:
+        prompt = self.validate_request(prompt, max_new_tokens)
+        if not 0 <= uid < 2 ** 32:
+            # per-slot sampling keys fold the uid as uint32 data
+            raise ValueError(f"request uid must fit uint32, got {uid}")
         cur = self.requests.get(uid)
         if cur is not None and not cur.done:
             raise ValueError(f"request uid {uid} is still queued or active")
         req = Request(uid, prompt, max_new_tokens,
+                      ttft_deadline_s=ttft_deadline_s,
+                      deadline_s=deadline_s,
                       submit_step=self.metrics.steps,
                       submit_t=self.clock())
-        self.queue.append(req)
-        self._by_bucket.setdefault(self._bucket(req), deque()).append(req)
+        self._enqueue(req)
         self.requests[uid] = req
         return req
+
+    def _enqueue(self, req: Request) -> None:
+        self.queue.append(req)
+        self._by_bucket.setdefault(self._bucket(req), deque()).append(req)
+        if req.ttft_deadline_s is not None or req.deadline_s is not None:
+            self._live_deadlines += 1
 
     def cancel(self, uid: int) -> Optional[Request]:
         """Cancel a live request in ANY state — queued, active (mid-decode),
@@ -404,6 +509,9 @@ class Scheduler:
         return self.pool.blocks_for(self._admit_positions(req))
 
     def _retire(self, req: Request) -> None:
+        if req.ttft_deadline_s is not None or req.deadline_s is not None:
+            self._live_deadlines -= 1
+        self._terminal_t.append(req.finish_t)   # drain-rate sample window
         self._done_uids.append(req.uid)
         while len(self._done_uids) > self._request_history:
             old = self._done_uids.popleft()
@@ -430,6 +538,198 @@ class Scheduler:
             m.tpot_s.append(req.tpot_s)
         self._retire(req)
 
+    def _fail(self, req: Request, slot: Optional[int], reason: str,
+              finished: Dict[int, List[int]]) -> None:
+        """Terminal *failure* path (deadline / quarantined): like _finish,
+        but counted as a failure rather than a served completion and
+        excluded from the latency samples. Partial output still surfaces
+        through ``finished`` so streams close with an explicit reason.
+        ``slot=None`` fails a queued entry in place (stale-purged later)."""
+        req.done = True
+        req.pending = False
+        req.finish_reason = reason
+        req.finish_t = self.clock()
+        finished[req.uid] = req.generated
+        if slot is not None:
+            self._release_slot(slot)
+        if reason == "deadline":
+            self.metrics.deadline_expired += 1
+        else:
+            self.metrics.quarantined += 1
+        self._retire(req)
+
+    # -- deadlines / quarantine (DESIGN.md §14) -----------------------------
+    def _deadline_expired(self, req: Request, now: float) -> bool:
+        """Strictly-exceeded latency budgets on the scheduler clock: the
+        total budget always applies; the TTFT budget only before the first
+        token (a preempted request keeps its first_token_t stamp — resume
+        recompute is not a second first token)."""
+        if req.deadline_s is not None and now - req.submit_t > req.deadline_s:
+            return True
+        return (req.ttft_deadline_s is not None and req.first_token_t < 0
+                and now - req.submit_t > req.ttft_deadline_s)
+
+    def expire_deadlines(self, finished: Dict[int, List[int]]) -> None:
+        """Sweep every live request's budgets at the step boundary (before
+        admission, so a freed slot can be refilled the same step). Active
+        slots release immediately; queued entries fail in place."""
+        if self._live_deadlines <= 0:
+            return
+        now = self.clock()
+        for s in range(self.n_slots):
+            req = self.slots[s]
+            if req is not None and self._deadline_expired(req, now):
+                self._fail(req, s, "deadline", finished)
+        for req in list(self.queue):
+            if (req.pending and not req.done
+                    and self._deadline_expired(req, now)):
+                self._fail(req, None, "deadline", finished)
+        self._purge_stale()
+
+    def quarantine_slot(self, slot: int,
+                        finished: Dict[int, List[int]]) -> None:
+        """Contain a poisoned slot (device layer's non-finite logit scan
+        said this row cannot be trusted): fail only its session, free its
+        blocks; every other slot's commit proceeds untouched."""
+        req = self.slots[slot]
+        if req is None:
+            return
+        self.note_fault()
+        self._fail(req, slot, "quarantined", finished)
+
+    # -- graceful degradation (DESIGN.md §14) --------------------------------
+    def note_fault(self) -> None:
+        """Record one detected fault (NaN quarantine, retried launch,
+        storm, drafter error) in the pressure window."""
+        self._fault_steps.append(self.metrics.steps)
+
+    def update_degradation(self) -> None:
+        """One hysteresis tick of the ladder, called once per engine step:
+        escalate after ``escalate_after`` consecutive pressured steps,
+        recover one level after ``recover_after`` calm ones."""
+        pol = self.degradation_policy
+        st = self.degradation
+        m = self.metrics
+        while (self._fault_steps
+               and self._fault_steps[0] <= m.steps - pol.fault_window):
+            self._fault_steps.popleft()
+        pressured = len(self._fault_steps) >= pol.fault_hi
+        if not pressured and pol.pressure:
+            if self.paged and self.pool.n_blocks:
+                pressured = (self.pool.blocks_in_use / self.pool.n_blocks
+                             >= pol.pool_hi)
+            pressured = pressured or (self.queue_depth
+                                      >= pol.queue_hi_factor * self.n_slots)
+        if pressured:
+            st.pressure_streak += 1
+            st.calm_streak = 0
+            if (st.pressure_streak >= pol.escalate_after
+                    and st.level < pol.max_level):
+                st.level += 1
+                st.since_step = m.steps
+                st.pressure_streak = 0
+        else:
+            st.calm_streak += 1
+            st.pressure_streak = 0
+            if st.calm_streak >= pol.recover_after and st.level > 0:
+                st.level -= 1
+                st.since_step = m.steps
+                st.calm_streak = 0
+        m.degradation_level = st.level
+        m.peak_degradation_level = max(m.peak_degradation_level, st.level)
+        if st.level:
+            m.degraded_steps += 1
+
+    @property
+    def effective_spec_k(self) -> int:
+        """Ladder-adjusted draft length: L1 halves it, L2+ turns it off.
+        Compile shapes never change — the verify window stays spec_k+1 wide
+        and shorter drafts ride the existing padding."""
+        if self.spec_k == 0:
+            return 0
+        lvl = self.degradation.level
+        if lvl <= 0:
+            return self.spec_k
+        if lvl == 1:
+            return max(1, self.spec_k // 2)
+        return 0
+
+    @property
+    def effective_admit_k(self) -> int:
+        """Ladder-adjusted admission width: L3+ serializes admission."""
+        return 1 if self.degradation.level >= 3 else self.admit_k
+
+    @property
+    def shedding(self) -> bool:
+        """Top rung: the session API sheds new submissions outright."""
+        return self.degradation.level >= self.degradation_policy.max_level
+
+    # -- chaos storms + clock (faults.py hooks) ------------------------------
+    def seize_blocks(self, n: int, duration: int) -> int:
+        """Pool-exhaustion storm: hold up to ``n`` free blocks for
+        ``duration`` steps. Clamped to keep one max-size request's worth of
+        headroom (plus the reserve) so a storm pressures the scheduler into
+        preemption/degradation without wedging a lone request; if growth
+        still corners the pool, ``_preempt_youngest`` force-releases the
+        storm rather than crash. Returns the blocks actually seized."""
+        if not self.paged or n <= 0:
+            return 0
+        cap = min(self.max_len,
+                  self.ring_len if self.ring_len is not None else self.max_len)
+        margin = self.reserve_blocks + self.pool.blocks_for(cap)
+        take = min(n, self.pool.available - margin)
+        if take <= 0:
+            return 0
+        blocks = [self.pool.alloc() for _ in range(take)]
+        self._seized.append([self.metrics.steps + duration, blocks])
+        self.metrics.storms += 1
+        self.metrics.seized_blocks = sum(len(b) for _, b in self._seized)
+        self.note_fault()
+        return take
+
+    def release_seized(self, force: bool = False) -> int:
+        """Free storm blocks whose hold expired (or all, when forced by
+        the liveness path). Called at every step boundary."""
+        kept, freed = [], 0
+        for until, blocks in self._seized:
+            if force or self.metrics.steps >= until:
+                for b in blocks:
+                    self.pool.decref(b)
+                freed += len(blocks)
+            else:
+                kept.append([until, blocks])
+        self._seized = kept
+        self.metrics.seized_blocks = sum(len(b) for _, b in self._seized)
+        return freed
+
+    def advance_clock(self, dt: float) -> None:
+        """Push the injected clock forward (slow-step spikes, retry
+        backoff) when it supports it — `loadgen.StepClock.advance`; the
+        wall monotonic clock advances itself."""
+        tick = getattr(self.clock, "advance", None)
+        if tick is not None and dt > 0:
+            tick(dt)
+
+    # -- backpressure hints --------------------------------------------------
+    def drain_rate(self) -> Optional[float]:
+        """Recent terminal events per clock second (any finish reason —
+        each frees capacity), from the last ``_terminal_t`` window; None
+        until two samples exist or when the clock hasn't advanced."""
+        if len(self._terminal_t) < 2:
+            return None
+        span = self._terminal_t[-1] - self._terminal_t[0]
+        if span <= 0:
+            return None
+        return (len(self._terminal_t) - 1) / span
+
+    def retry_after_s(self) -> Optional[float]:
+        """Backpressure hint: clock seconds until the queue has plausibly
+        drained one slot's worth at the current rate — (depth+1)/rate."""
+        rate = self.drain_rate()
+        if rate is None:
+            return None
+        return (self.queue_depth + 1) / rate
+
     def _release_slot(self, slot: int) -> None:
         self.slots[slot] = None
         self.pos[slot] = 0
@@ -451,6 +751,10 @@ class Scheduler:
         cand = [s for s, r in enumerate(self.slots)
                 if r is not None and s != exclude]
         if not cand:
+            # Liveness: an injected storm must never wedge a lone request —
+            # give its blocks back before declaring the pool undersized.
+            if self.release_seized(force=True):
+                return
             raise RuntimeError(
                 f"KV block pool ({self.pool.n_blocks} x {self.block_size}) "
                 f"cannot hold a single request at max_len={self.max_len}; "
@@ -579,7 +883,7 @@ class Scheduler:
         free = [s for s in range(self.n_slots) if self.slots[s] is None]
         if not free:
             return None
-        group = self._take_group(min(len(free), self.admit_k))
+        group = self._take_group(min(len(free), self.effective_admit_k))
         if not group:
             # Block pool full: wait for completions to free blocks. If
             # nothing is in flight and the pool is already fully free,
@@ -651,8 +955,12 @@ class Scheduler:
         return block_map
 
     def commit_admission(self, plan: AdmissionPlan, next_tokens: np.ndarray,
-                         finished: Dict[int, List[int]]) -> None:
-        """Apply the sampled first tokens of an executed admission plan."""
+                         finished: Dict[int, List[int]],
+                         ok: Optional[np.ndarray] = None) -> None:
+        """Apply the sampled first tokens of an executed admission plan.
+        ``ok`` ([k] bool, the device layer's non-finite logit scan)
+        quarantines poisoned rows — those sessions fail alone and their
+        just-mapped blocks free; healthy rows commit untouched."""
         m = self.metrics
         m.prefill_calls += 1
         m.padded_prefill_tokens += plan.tokens.shape[0] * plan.bucket
@@ -662,6 +970,12 @@ class Scheduler:
         for i, req in enumerate(plan.group):
             s = plan.slots[i]
             self.slots[s] = req
+            if ok is not None and not ok[i]:
+                # a poisoned row's sampled token is garbage: no stream
+                # state is created (slot routed through _release_slot)
+                self.note_fault()
+                self._fail(req, s, "quarantined", finished)
+                continue
             self.pos[s] = int(plan.lens[i])
             self.last_token[s] = int(next_tokens[i])
             req.generated.append(int(next_tokens[i]))
@@ -705,7 +1019,7 @@ class Scheduler:
         the cache (positions pos..pos+L stay under max_len and inside the
         ring) and the request's remaining token budget (emitting more than
         the budget would be truncated anyway)."""
-        cap = min(self.spec_k,
+        cap = min(self.effective_spec_k,
                   self.max_len - 1 - int(self.pos[slot]),
                   req.max_new_tokens - len(req.generated) - 1)
         if self.ring_len is not None:
@@ -744,9 +1058,20 @@ class Scheduler:
             cap = self._draft_cap(req, s)
             d = np.empty(0, np.int64)
             if cap > 0:
-                d = np.asarray(self.drafter.propose(self._full_tokens(req),
-                                                    cap),
-                               dtype=np.int64)[:cap]
+                try:
+                    if self.inject_drafter_fault:
+                        raise RuntimeError("injected drafter fault")
+                    d = np.asarray(
+                        self.drafter.propose(self._full_tokens(req), cap),
+                        dtype=np.int64)[:cap]
+                except Exception as e:
+                    # Drafts are advisory: a crashing drafter degrades this
+                    # slot to plain decode (empty draft), never kills the
+                    # stream. The fault still feeds the ladder.
+                    self.last_drafter_error = e
+                    self.metrics.drafter_errors += 1
+                    self.note_fault()
+                    d = np.empty(0, np.int64)
             base_new = self._window_new_blocks(s, 1)
             L = len(d)
             while L > 0 and (self._window_new_blocks(s, L + 1)
@@ -824,3 +1149,59 @@ class Scheduler:
             m.accepted += max(emitted - 1, 0)
             if not req.done:
                 self._rollback_spec_blocks(s)
+
+    # -- crash-consistent snapshot / restore (DESIGN.md §14) -----------------
+    def export_state(self) -> Dict[str, Any]:
+        """Serialize every live request as plain JSON at a step boundary.
+
+        Active requests are exported *as if preempted* — in admission order
+        ahead of the queue, with their prompt + generated tokens — so a
+        restore re-prefills them through the ordinary recompute-resume
+        machinery; folded (uid, token-index) sampling keys make the resumed
+        streams bitwise the uninterrupted ones, greedy and sampled alike.
+        Block tables are deliberately NOT exported: cache content is
+        recomputable state, the token lists are the durable truth."""
+        if self._pending_copies:
+            raise RuntimeError(
+                "snapshot only at a step boundary: CoW copies are pending")
+
+        def ser(req: Request) -> Dict[str, Any]:
+            return {"uid": req.uid,
+                    "prompt": [int(t) for t in req.prompt],
+                    "max_new_tokens": req.max_new_tokens,
+                    "generated": [int(t) for t in req.generated],
+                    "submit_step": req.submit_step,
+                    "submit_t": req.submit_t,
+                    "first_token_t": req.first_token_t,
+                    "ttft_deadline_s": req.ttft_deadline_s,
+                    "deadline_s": req.deadline_s}
+
+        active = [r for r in self.slots if r is not None]
+        active.sort(key=lambda r: (r.admit_step, r.uid))
+        queued = [r for r in self.queue if r.pending and not r.done]
+        return {"steps": self.metrics.steps,
+                "requests": [ser(r) for r in active + queued]}
+
+    def restore_state(self, state: Dict[str, Any]) -> List[Request]:
+        """Rebuild a fresh scheduler's queue from :meth:`export_state`
+        output: every request re-enters as a preempted (pending) entry with
+        its progress carried, ready for recompute-resume re-admission."""
+        if self.busy:
+            raise RuntimeError("restore_state needs a fresh scheduler")
+        self.metrics.steps = int(state["steps"])
+        restored: List[Request] = []
+        for d in state["requests"]:
+            req = Request(int(d["uid"]),
+                          np.asarray(d["prompt"], np.int64),
+                          int(d["max_new_tokens"]),
+                          ttft_deadline_s=d.get("ttft_deadline_s"),
+                          deadline_s=d.get("deadline_s"),
+                          submit_step=min(int(d["submit_step"]),
+                                          self.metrics.steps),
+                          submit_t=float(d["submit_t"]))
+            req.generated = [int(t) for t in d["generated"]]
+            req.first_token_t = float(d["first_token_t"])
+            self._enqueue(req)
+            self.requests[req.uid] = req
+            restored.append(req)
+        return restored

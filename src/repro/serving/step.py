@@ -16,6 +16,15 @@ Sampling matches `engine.generate` semantics (temperature / top-k via
 index), so streams are independent of admission order and preemption. The
 scheduler supplies the (uid, count) folds; the key material and the fold
 itself stay on this side of the boundary.
+
+Fault surface (DESIGN.md §14): an optional `serving.faults.FaultInjector`
+hooks every launch — ``check_launch`` may raise a ``TransientStepError``
+*before* anything touches the device (the facade retries; no state moved,
+so the retried launch is bitwise the original), and ``poison_mask`` rows
+get their logits overwritten with NaN *inside the computation*, so the
+per-step non-finite scan (``ok`` masks returned by decode /
+sample_admitted) exercises the same detection path a real numerical fault
+would take. Injection off ⇒ both hooks are dead code.
 """
 
 from __future__ import annotations
@@ -45,7 +54,7 @@ class DeviceStepper:
                  physical_blocks: Optional[int] = None, block_size: int = 16,
                  ring_len: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 spec_k: int = 0):
+                 spec_k: int = 0, faults=None):
         self.params = params
         self.cfg = cfg
         self.backend = backend
@@ -53,6 +62,8 @@ class DeviceStepper:
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self._base_key = jax.random.PRNGKey(seed)
+        self.faults = faults                    # serving.faults.FaultInjector
+        self._no_poison = np.zeros(n_slots, bool)
         self.paged = physical_blocks is not None
         if self.paged:
             self.cache = transformer.init_paged_cache(
@@ -66,8 +77,8 @@ class DeviceStepper:
                 lambda p, c, t, s, l: engine.prefill_into_slots(
                     p, c, t, s, l, self.cfg, backend=self.backend))
         self._decode = jax.jit(
-            lambda p, c, t, pos, tab, u, n: self._decode_step(
-                p, c, t, pos, tab, u, n))
+            lambda p, c, t, pos, tab, u, n, poison: self._decode_step(
+                p, c, t, pos, tab, u, n, poison))
         if spec_k:
             self._verify = jax.jit(
                 lambda p, c, t, pos, tab, dl, u, n: engine.verify_step(
@@ -78,7 +89,7 @@ class DeviceStepper:
 
     # -- jitted per-slot-position decode: positions differ per slot --------
     def _decode_step(self, params, cache, token, pos_vec, tables, uids,
-                     counts):
+                     counts, poison):
         """token: [B,1]; pos_vec: [B] — per-slot absolute positions.
 
         The decode path accepts a position *vector*: each slot's K/V is
@@ -86,7 +97,9 @@ class DeviceStepper:
         so one batched step serves slots at heterogeneous progress.
         ``tables`` routes the paged block-pool path; ``uids``/``counts``
         fold the per-slot sampling keys (unused — and dead-code-eliminated
-        — for greedy decoding).
+        — for greedy decoding). ``poison`` ([B] bool) overwrites injected
+        rows' logits with NaN before the non-finite scan — chaos testing
+        exercises the same ``ok`` detection a real numerical fault hits.
         """
         logits, cache, _ = transformer.forward(
             params, {"tokens": token}, self.cfg, mode="decode",
@@ -94,6 +107,8 @@ class DeviceStepper:
             ring_len=self.ring_len if tables is not None else None,
             backend=self.backend)
         logits = logits[:, -1]
+        logits = jnp.where(poison[:, None], jnp.nan, logits)
+        ok = jnp.all(jnp.isfinite(logits), axis=-1)
         if self.temperature == 0.0:
             tok = jnp.argmax(logits, axis=-1)
         else:
@@ -101,7 +116,7 @@ class DeviceStepper:
             tok = engine.sample_per_slot(logits, keys,
                                          temperature=self.temperature,
                                          top_k=self.top_k)
-        return tok, cache
+        return tok, ok, cache
 
     # -- execution surface the facade drives --------------------------------
     @property
@@ -110,7 +125,7 @@ class DeviceStepper:
         None if the jit internals moved and the count is unavailable."""
         try:
             return int(self._prefill._cache_size())
-        except Exception:
+        except (AttributeError, TypeError):   # jit internals moved
             return None
 
     def prefill(self, tokens: np.ndarray, targets: np.ndarray,
@@ -118,22 +133,33 @@ class DeviceStepper:
         """Run one admission plan's prefill; ``targets`` is the slot vector
         (dense) or the scratch block map (paged). Returns last-position
         logits [k, V] (device array — fed straight to sample_admitted)."""
+        if self.faults is not None:
+            self.faults.check_launch("prefill")
         logits, self.cache = self._prefill(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(targets), jnp.asarray(lens))
+        if self.faults is not None:
+            mask = self.faults.poison_mask("prefill", logits.shape[0])
+            if mask is not None:
+                logits = jnp.where(jnp.asarray(mask)[:, None], jnp.nan,
+                                   logits)
         return logits
 
-    def sample_admitted(self, logits, uids: np.ndarray,
-                        counts: np.ndarray) -> np.ndarray:
+    def sample_admitted(self, logits, uids: np.ndarray, counts: np.ndarray
+                        ) -> Tuple[np.ndarray, np.ndarray]:
         """First token of each admitted request, via the same per-slot key
         folding as decode ((uid, token index) -> key), so a preempted
-        request's re-prefill redraws its identical next token."""
+        request's re-prefill redraws its identical next token. Also
+        returns the rows' non-finite scan ([k] bool ``ok``) — the
+        scheduler quarantines rows that fail it."""
+        ok = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
         if self.temperature == 0.0:
-            return np.asarray(jnp.argmax(logits, axis=-1))
+            return np.asarray(jnp.argmax(logits, axis=-1)), ok
         keys = engine.fold_slot_keys(self._base_key, jnp.asarray(uids),
                                      jnp.asarray(counts))
         return np.asarray(engine.sample_per_slot(
-            logits, keys, temperature=self.temperature, top_k=self.top_k))
+            logits, keys, temperature=self.temperature,
+            top_k=self.top_k)), ok
 
     def apply_copies(self, copies: Iterable[Tuple[int, int]]) -> None:
         """Apply the scheduler's queued copy-on-write block copies (device
@@ -145,23 +171,37 @@ class DeviceStepper:
     def decode(self, last_token: np.ndarray, pos: np.ndarray,
                table_arr: Optional[np.ndarray],
                uids: Optional[np.ndarray],
-               counts: Optional[np.ndarray]) -> np.ndarray:
+               counts: Optional[np.ndarray]
+               ) -> Tuple[np.ndarray, np.ndarray]:
         """One batched decode token for every slot (inactive slots produce
-        garbage the scheduler ignores). Returns next tokens [n_slots]."""
+        garbage the scheduler ignores). Returns (next tokens [n_slots],
+        non-finite-scan ``ok`` [n_slots] — False rows get quarantined)."""
+        if self.faults is not None:
+            self.faults.check_launch("decode")
+            poison = self.faults.poison_mask("decode", len(self._no_poison))
+        else:
+            poison = None
+        if poison is None:
+            poison = self._no_poison
         tables = jnp.asarray(table_arr) if table_arr is not None else None
         if uids is not None:
             uids, counts = jnp.asarray(uids), jnp.asarray(counts)
-        tok, self.cache = self._decode(
+        tok, ok, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(last_token[:, None]),
-            jnp.asarray(pos), tables, uids, counts)
-        return np.asarray(tok)
+            jnp.asarray(pos), tables, uids, counts, jnp.asarray(poison))
+        return np.asarray(tok), np.asarray(ok)
 
     def verify(self, tokens: np.ndarray, pos: np.ndarray,
                table_arr: np.ndarray, draft_lens: np.ndarray,
                uids: np.ndarray, counts: np.ndarray
                ) -> Tuple[np.ndarray, np.ndarray]:
         """One speculative verify window over every slot; returns the
-        target-emitted tokens [n_slots, k+1] and per-slot accept counts."""
+        target-emitted tokens [n_slots, k+1] and per-slot accept counts.
+        (NaN injection targets the prefill/decode launches; under repeated
+        faults the degradation ladder turns speculation off, so the scanned
+        decode path is the one that keeps running.)"""
+        if self.faults is not None:
+            self.faults.check_launch("verify")
         tgt, n_acc, self.cache = self._verify(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(pos), jnp.asarray(table_arr),

@@ -1,0 +1,63 @@
+"""Golden-bad fault-handling file: swallowed serving exceptions.
+
+NOT imported — parsed by ``lint.lint_file`` in ``tests/test_analysis.py``
+with ``serving=True`` (PY-SWALLOW only applies inside ``serving/``).
+"""
+
+
+def bare_swallow(step):
+    try:
+        return step()
+    except:                                              # PY-SWALLOW (bare)
+        return None
+
+
+def broad_swallow(step, fallback):
+    try:
+        return step()
+    except Exception:                                    # PY-SWALLOW (broad)
+        return fallback
+
+
+def tuple_swallow(step):
+    try:
+        return step()
+    except (ValueError, Exception):                      # PY-SWALLOW (tuple)
+        return None
+
+
+def bound_but_dropped(step, log):
+    try:
+        return step()
+    except Exception as err:                             # PY-SWALLOW (unused)
+        log("step failed")
+        return None
+
+
+def recorded_is_fine(step, metrics):
+    try:
+        return step()
+    except Exception as e:                               # ok: e is recorded
+        metrics.append(e)
+        return None
+
+
+def reraise_is_fine(step):
+    try:
+        return step()
+    except Exception:                                    # ok: re-raises
+        raise RuntimeError("step failed")
+
+
+def narrow_is_fine(step):
+    try:
+        return step()
+    except KeyError:                                     # ok: narrow type
+        return None
+
+
+def suppressed_swallow(step):
+    try:
+        return step()
+    except Exception:            # repro: ignore[PY-SWALLOW]
+        return None

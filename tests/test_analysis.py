@@ -283,6 +283,27 @@ def test_bad_branch_fixture_caught():
                                    "PY-TRACED-BRANCH", "PY-TRACED-BRANCH"]
 
 
+def test_bad_swallow_fixture_caught():
+    got = lint.lint_file(os.path.join(FIXTURES, "bad_swallow.py"),
+                         serving=True)
+    # four swallows live, the inline-ignored one suppressed; the
+    # recorded / re-raising / narrow handlers stay clean
+    assert _rules(got) == ["PY-SWALLOW"] * 4
+    assert _rules(got, suppressed=True) == ["PY-SWALLOW"]
+    assert all("record" in f.hint for f in got)
+
+
+def test_swallow_rule_scoped_to_serving():
+    src = ("def f(step):\n"
+           "    try:\n"
+           "        return step()\n"
+           "    except Exception:\n"
+           "        return None\n")
+    assert lint.lint_file("models_like.py", serving=False, source=src) == []
+    assert _rules(lint.lint_file("serving_like.py", serving=True,
+                                 source=src)) == ["PY-SWALLOW"]
+
+
 def test_key_rules_scoped_to_serving():
     src = ("import jax\n"
            "def init(keys):\n"

@@ -1,0 +1,472 @@
+"""Fault injection, deadlines, degradation, and crash recovery.
+
+DESIGN.md §14 contract: seeded FaultPlans replay bit-exactly; NaN
+quarantine fails only the poisoned session; transient step errors retry
+to a bitwise-identical stream (greedy AND sampled); retry exhaustion
+surfaces as StepFault with consistent scheduler state; TTFT/total
+deadlines expire queued and active requests with explicit finish
+reasons; storms walk the degradation ladder up and back down
+(hysteresis); snapshot/restore resumes with exactly-once token events;
+and cancellation racing every new failure path leaves the pool
+invariant-clean with zero residual state.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.serving import api, faults, loadgen, scheduler
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, L).astype(np.int64) for L in lens]
+
+
+def _server(model, **kw):
+    params, cfg = model
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 32)
+    kw.setdefault("cache_kind", "paged")
+    kw.setdefault("block_size", 4)
+    kw.setdefault("n_blocks", 16)
+    return api.StreamingServer(params, cfg, **kw)
+
+
+def _assert_drained_clean(server):
+    assert not server.busy
+    assert server.live_sessions() == []
+    server.batcher.pool.check_invariants()
+    assert server.batcher.pool.blocks_in_use == 0
+
+
+def _run(model, plan, lens, max_new=8, seed=0, **kw):
+    """Submit one session per prompt and drain; returns (server, responses
+    by sid). ``plan=None`` is the fault-free reference."""
+    server = _server(model, fault_plan=plan, **kw)
+    params, cfg = model
+    for i, p in enumerate(_prompts(cfg, lens, seed=seed)):
+        server.submit(api.GenerationRequest(p, max_new, session_id=f"s{i}"))
+    out = {r.session_id: r for r in server.run_until_drained()}
+    _assert_drained_clean(server)
+    return server, out
+
+
+# -- the plan itself ---------------------------------------------------------
+
+def test_fault_plan_seeded_deterministic_and_roundtrip(tmp_path):
+    p1 = faults.FaultPlan.seeded(7, horizon=64, drafter=1)
+    p2 = faults.FaultPlan.seeded(7, horizon=64, drafter=1)
+    p3 = faults.FaultPlan.seeded(8, horizon=64, drafter=1)
+    assert p1.fingerprint() == p2.fingerprint() != p3.fingerprint()
+    assert [e for e in p1.events] == [e for e in p2.events]
+    assert all(a.step <= b.step for a, b in zip(p1.events, p1.events[1:]))
+    # json + file roundtrips preserve the schedule byte for byte
+    assert faults.FaultPlan.from_json(p1.to_json()).fingerprint() \
+        == p1.fingerprint()
+    path = str(tmp_path / "plan.json")
+    p1.save(path)
+    assert faults.FaultPlan.load(path).fingerprint() == p1.fingerprint()
+
+
+def test_fault_event_validates_kind_and_step():
+    with pytest.raises(ValueError, match="kind"):
+        faults.FaultEvent(step=1, kind="meteor_strike")
+    with pytest.raises(ValueError, match="step"):
+        faults.FaultEvent(step=-1, kind="nan_logits")
+
+
+# -- detection + containment -------------------------------------------------
+
+def test_nan_quarantine_isolates_poisoned_slot(model):
+    """NaN logits in one slot fail only that session; every other stream
+    is bitwise the fault-free stream and the poisoned slot's blocks are
+    reclaimed immediately."""
+    plan = faults.FaultPlan(
+        [faults.FaultEvent(step=3, kind="nan_logits", slot=0, op="decode")])
+    _, clean = _run(model, None, [3, 5], max_new=8)
+    server, got = _run(model, plan, [3, 5], max_new=8)
+    assert server.metrics.quarantined == 1
+    reasons = {sid: r.finish_reason for sid, r in got.items()}
+    assert sorted(reasons.values()) == ["max_new_tokens", "quarantined"]
+    for sid, r in got.items():
+        if r.finish_reason == "quarantined":
+            assert len(r.tokens) < 8          # cut short, tail untrusted
+        else:
+            assert r.tokens == clean[sid].tokens
+
+
+def test_transient_retry_is_bitwise_greedy_and_sampled(model):
+    """A retried launch re-runs the identical computation: with the fault
+    plan active the streams still match the fault-free run token for
+    token — greedy and sampled (folded per-(uid, index) keys)."""
+    plan = faults.FaultPlan(
+        [faults.FaultEvent(step=2, kind="step_error", op="decode",
+                           attempts=2),
+         faults.FaultEvent(step=0, kind="step_error", op="prefill",
+                           attempts=1)])
+    for sampling in ({}, {"temperature": 0.7, "seed": 5}):
+        _, clean = _run(model, None, [4, 6], max_new=6, **sampling)
+        server, got = _run(model, plan, [4, 6], max_new=6, **sampling)
+        assert server.metrics.step_retries >= 3
+        assert {s: r.tokens for s, r in got.items()} \
+            == {s: r.tokens for s, r in clean.items()}
+
+
+def test_retry_exhaustion_raises_step_fault(model):
+    """More consecutive failures than the retry budget surface as
+    StepFault; the failed launch mutated nothing, so cancelling the
+    sessions afterwards leaves the pool clean."""
+    plan = faults.FaultPlan(
+        [faults.FaultEvent(step=2, kind="step_error", op="decode",
+                           attempts=10)])
+    server = _server(model, fault_plan=plan, max_step_retries=2,
+                     retry_backoff_s=0.0)
+    params, cfg = model
+    for i, p in enumerate(_prompts(cfg, [3, 4])):
+        server.submit(api.GenerationRequest(p, 8, session_id=f"s{i}"))
+    with pytest.raises(faults.StepFault) as ei:
+        for _ in range(10):
+            server.step()
+    assert ei.value.op == "decode" and ei.value.attempts == 3
+    assert isinstance(ei.value.last, faults.TransientStepError)
+    for sid in list(server.live_sessions()):
+        assert server.cancel(sid).finish_reason == "cancelled"
+    _assert_drained_clean(server)
+
+
+def test_slow_step_moves_clock_not_tokens(model):
+    """A latency spike only advances the virtual clock; the token streams
+    are untouched."""
+    plan = faults.FaultPlan(
+        [faults.FaultEvent(step=2, kind="slow_step", delay_s=5.0)])
+    _, clean = _run(model, None, [3, 4], max_new=6)
+    clock = loadgen.StepClock(dt=1.0)
+    server = _server(model, fault_plan=plan, clock=clock)
+    params, cfg = model
+    for i, p in enumerate(_prompts(cfg, [3, 4])):
+        server.submit(api.GenerationRequest(p, 6, session_id=f"s{i}"))
+    steps = 0
+    got = {}
+    while server.busy:
+        for r in server.step():
+            got[r.session_id] = r
+        steps += 1
+        clock.tick()
+    assert clock.t == pytest.approx(steps * 1.0 + 5.0)
+    assert {s: r.tokens for s, r in got.items()} \
+        == {s: r.tokens for s, r in clean.items()}
+    _assert_drained_clean(server)
+
+
+# -- deadlines ---------------------------------------------------------------
+
+def test_deadlines_expire_queued_and_active(model):
+    """A queued request misses its TTFT budget in place (no slot, no
+    blocks ever touched); an active request past its total budget frees
+    its slot the same step. Both end with finish_reason="deadline"."""
+    clock = loadgen.StepClock(dt=1.0)
+    server = _server(model, n_slots=1, clock=clock)
+    params, cfg = model
+    p0, p1 = _prompts(cfg, [3, 4])
+    server.submit(api.GenerationRequest(p0, 20, session_id="active",
+                                        deadline_s=3.0))
+    server.submit(api.GenerationRequest(p1, 4, session_id="queued",
+                                        ttft_deadline_s=2.0))
+    got = {}
+    for _ in range(30):
+        for r in server.step():
+            got[r.session_id] = r
+        clock.tick()
+        if not server.busy:
+            break
+    assert got["queued"].finish_reason == "deadline"
+    assert got["queued"].tokens == [] and got["queued"].ttft_s is None
+    assert got["active"].finish_reason == "deadline"
+    assert 0 < len(got["active"].tokens) < 20
+    assert server.metrics.deadline_expired == 2
+    _assert_drained_clean(server)
+
+
+# -- degradation ladder ------------------------------------------------------
+
+def test_storm_degrades_then_recovers(model):
+    """A pool storm seizes blocks and registers fault pressure: the ladder
+    escalates (fast) and, once the window is calm, recovers (slow) back to
+    level 0 — and every seized block is back in the pool at exit."""
+    pol = scheduler.DegradationPolicy(fault_window=3, fault_hi=1,
+                                      escalate_after=1, recover_after=2)
+    plan = faults.FaultPlan(
+        [faults.FaultEvent(step=3, kind="pool_storm", blocks=8,
+                           duration=2)])
+    server, got = _run(model, plan, [3, 4], max_new=16, n_blocks=32,
+                       degradation=pol)
+    m = server.metrics
+    assert m.storms == 1
+    assert m.peak_degradation_level >= 1 and m.degraded_steps >= 1
+    assert m.degradation_level == 0            # recovered by drain time
+    assert {r.finish_reason for r in got.values()} == {"max_new_tokens"}
+
+
+def test_ladder_halves_then_disables_speculation(model):
+    params, cfg = model
+    server = _server(model, spec_k=4)
+    sched = server.batcher.sched
+    assert sched.effective_spec_k == 4
+    sched.degradation.level = 1
+    assert sched.effective_spec_k == 2
+    sched.degradation.level = 2
+    assert sched.effective_spec_k == 0
+    sched.degradation.level = 3
+    assert sched.effective_admit_k == 1
+    assert not sched.shedding
+    sched.degradation.level = 4
+    assert sched.shedding
+
+
+def test_shed_at_max_level_raises_backpressure(model):
+    """At the ladder's top rung submit() sheds with reason="shed" and a
+    retry hint, leaving zero residual state; one rung down the same
+    request is admittable."""
+    server = _server(model)
+    params, cfg = model
+    p = _prompts(cfg, [3])[0]
+    server.batcher.sched.degradation.level = 4
+    with pytest.raises(api.Backpressure) as ei:
+        server.submit(api.GenerationRequest(p, 4, session_id="x"))
+    assert ei.value.reason == "shed"
+    assert server.metrics.degradation_sheds == 1
+    assert server.live_sessions() == [] and server.queue_depth == 0
+    server.batcher.sched.degradation.level = 0
+    assert server.submit(api.GenerationRequest(p, 4, session_id="x")) == "x"
+    server.run_until_drained()
+    _assert_drained_clean(server)
+
+
+def test_drafter_fault_contained_under_speculation(model):
+    """A drafter crash skips that step's speculation (recorded, never
+    propagated); streams still finish with full budgets and match the
+    fault-free speculative run."""
+    plan = faults.FaultPlan(
+        [faults.FaultEvent(step=2, kind="drafter_error"),
+         faults.FaultEvent(step=3, kind="drafter_error")])
+    _, clean = _run(model, None, [4, 6], max_new=8, spec_k=3)
+    server, got = _run(model, plan, [4, 6], max_new=8, spec_k=3)
+    assert server.metrics.drafter_errors >= 1
+    assert {s: r.tokens for s, r in got.items()} \
+        == {s: r.tokens for s, r in clean.items()}
+
+
+# -- validation ordering + replay counters -----------------------------------
+
+def test_validation_precedes_backpressure_and_shed(model):
+    """A never-completable request is rejected against the *configured*
+    pool before any queue-bound or shedding check — callers always learn
+    the permanent failure first."""
+    server = _server(model, n_blocks=4, max_queue=0)
+    params, cfg = model
+    big = _prompts(cfg, [20])[0]
+    ok = _prompts(cfg, [3])[0]
+    # queue bound of 0 sheds every valid submit...
+    with pytest.raises(api.Backpressure):
+        server.submit(api.GenerationRequest(ok, 4, session_id="q"))
+    # ...but an invalid one still reports RequestRejected, not Backpressure
+    with pytest.raises(api.RequestRejected, match="KV blocks"):
+        server.submit(api.GenerationRequest(big, 16, session_id="b1"))
+    server.batcher.sched.degradation.level = 4
+    with pytest.raises(api.RequestRejected, match="KV blocks"):
+        server.submit(api.GenerationRequest(big, 16, session_id="b2"))
+    assert server.live_sessions() == [] and server.queue_depth == 0
+
+
+def test_replay_splits_shed_rejected_and_deadline(model):
+    """loadgen.replay books the three failure families separately: shed
+    (transient backpressure), rejected (permanent), deadline-missed —
+    and `completed` counts none of them."""
+    params, cfg = model
+    rng = np.random.default_rng(2)
+
+    def req(t, rid, prompt_len, max_new, ttft=None):
+        return loadgen.TraceRequest(
+            t=t, rid=rid, tenant="t",
+            prompt=rng.integers(0, cfg.vocab, prompt_len).astype(np.int64),
+            max_new_tokens=max_new, ttft_deadline=ttft)
+
+    trace = [
+        req(0.0, 0, 4, 12),            # hogs the single slot for ~13 steps
+        req(0.5, 1, 20, 16),           # never completable -> rejected
+        req(1.0, 2, 4, 6, ttft=0.5),   # queued behind rid 0 -> TTFT missed
+        req(2.0, 3, 4, 6),             # queue already holds rid 2 -> shed
+        req(4.0, 4, 4, 6),             # rid 2 expired by now -> queued, runs
+        req(5.0, 5, 4, 6),             # queue holds rid 4 -> shed
+    ]
+    clock = loadgen.StepClock(dt=1.0)
+    server = _server(model, n_slots=1, n_blocks=4, clock=clock, max_queue=1)
+    res = loadgen.replay(server, trace, clock)
+    s = res.summary()
+    assert s["rejected"] == 1                  # the 20-token prompt
+    assert s["shed"] >= 1                      # queue bound of 1 tripped
+    assert s["deadline_missed"] >= 1           # 1 slot, tight TTFT budgets
+    assert s["completed"] + s["shed"] + s["rejected"] \
+        + s["deadline_missed"] + s["quarantined"] == len(trace)
+    _assert_drained_clean(server)
+
+
+# -- crash recovery ----------------------------------------------------------
+
+def test_snapshot_restore_exactly_once(model, tmp_path):
+    """Kill the server right after a step-boundary snapshot and restore:
+    the union of pre-kill and post-restore token events has every
+    (session, index) exactly once and equals the uninterrupted run."""
+    params, cfg = model
+    prompts = _prompts(cfg, [3, 5, 4])
+
+    def spin(server, clock, events, max_steps=100, stop_after=None):
+        for step in range(max_steps):
+            server.step()
+            clock.tick()
+            if stop_after is not None and step + 1 == stop_after:
+                return
+            if not server.busy:
+                return
+
+    ref_events = []
+    clock0 = loadgen.StepClock(dt=1.0)
+    ref = _server(model, clock=clock0)
+    for i, p in enumerate(prompts):
+        ref.submit(api.GenerationRequest(
+            p, 8, session_id=f"s{i}",
+            on_token=lambda ev: ref_events.append(ev)))
+    spin(ref, clock0, ref_events)
+    _assert_drained_clean(ref)
+
+    events = []
+    clock1 = loadgen.StepClock(dt=1.0)
+    server = _server(model, clock=clock1)
+    for i, p in enumerate(prompts):
+        server.submit(api.GenerationRequest(
+            p, 8, session_id=f"s{i}",
+            on_token=lambda ev: events.append(ev)))
+    spin(server, clock1, events, stop_after=3)
+    assert server.busy                          # killed mid-run
+    path = server.snapshot(str(tmp_path))
+    assert path.endswith(".json")
+    n_pre = len(events)
+    assert n_pre > 0
+
+    clock2 = loadgen.StepClock(dt=1.0)
+    restored = api.StreamingServer.restore(
+        str(tmp_path), params, cfg,
+        on_token=lambda ev: events.append(ev),
+        n_slots=2, max_len=32, cache_kind="paged", block_size=4,
+        n_blocks=16, clock=clock2)
+    assert clock2.t == clock1.t
+    assert sorted(restored.live_sessions()) == sorted(server.live_sessions())
+    spin(restored, clock2, events)
+    _assert_drained_clean(restored)
+
+    def streams(evs):
+        out = {}
+        for ev in evs:
+            out.setdefault(ev.session_id, []).append((ev.index, ev.token))
+        return out
+
+    got = streams(events)
+    for sid, pairs in got.items():
+        idx = [i for i, _ in pairs]
+        assert idx == sorted(idx) and len(set(idx)) == len(idx), \
+            f"{sid}: duplicated or out-of-order delivery across restore"
+        assert idx == list(range(len(idx))), f"{sid}: gap in delivery"
+    assert got == streams(ref_events)
+
+
+# -- cancellation racing the failure paths -----------------------------------
+
+def test_cancel_races_retry_storm(model):
+    """Cancel a session in the step window where another launch is being
+    retried and a storm holds pool blocks: no leaks, no residual state."""
+    plan = faults.FaultPlan(
+        [faults.FaultEvent(step=2, kind="step_error", op="decode",
+                           attempts=1),
+         faults.FaultEvent(step=2, kind="pool_storm", blocks=4,
+                           duration=3)])
+    server = _server(model, fault_plan=plan, n_blocks=32)
+    params, cfg = model
+    for i, p in enumerate(_prompts(cfg, [3, 4, 5])):
+        server.submit(api.GenerationRequest(p, 10, session_id=f"s{i}"))
+    for _ in range(3):                         # 3rd step is the fault step
+        server.step()
+    assert server.metrics.step_retries >= 1
+    resp = server.cancel("s0")
+    assert resp.finish_reason == "cancelled"
+    server.batcher.pool.check_invariants()
+    done = server.run_until_drained()
+    assert {r.finish_reason for r in done} == {"max_new_tokens"}
+    assert server.metrics.cancelled == 1
+    _assert_drained_clean(server)              # storm blocks released too
+
+
+def test_cancel_races_deadline_expiry(model):
+    """Cancel one step before a deadline would expire: the session books
+    exactly one terminal event (cancelled, not deadline), and cancelling
+    an already-expired session is a benign None."""
+    clock = loadgen.StepClock(dt=1.0)
+    server = _server(model, clock=clock)
+    params, cfg = model
+    p0, p1 = _prompts(cfg, [3, 4])
+    server.submit(api.GenerationRequest(p0, 20, session_id="a",
+                                        deadline_s=3.0))
+    server.submit(api.GenerationRequest(p1, 20, session_id="b",
+                                        deadline_s=3.0))
+    for _ in range(3):
+        server.step()
+        clock.tick()
+    resp = server.cancel("a")                  # t == deadline boundary
+    assert resp.finish_reason == "cancelled"
+    got = {}
+    for _ in range(10):
+        for r in server.step():
+            got[r.session_id] = r
+        clock.tick()
+        if not server.busy:
+            break
+    assert got["b"].finish_reason == "deadline"
+    assert server.metrics.cancelled == 1
+    assert server.metrics.deadline_expired == 1      # only b, never a
+    assert server.cancel("b") is None                # already terminal
+    _assert_drained_clean(server)
+
+
+def test_cancel_quarantined_session_is_benign(model):
+    """A quarantined session is already terminal: a racing cancel returns
+    None, books nothing, and the pool stays clean."""
+    plan = faults.FaultPlan(
+        [faults.FaultEvent(step=2, kind="nan_logits", slot=1,
+                           op="decode")])
+    server = _server(model, fault_plan=plan)
+    params, cfg = model
+    for i, p in enumerate(_prompts(cfg, [3, 4])):
+        server.submit(api.GenerationRequest(p, 8, session_id=f"s{i}"))
+    victim = None
+    for _ in range(20):
+        for r in server.step():
+            if r.finish_reason == "quarantined":
+                victim = r.session_id
+        if victim or not server.busy:
+            break
+    assert victim is not None
+    assert server.cancel(victim) is None
+    assert victim not in server.live_sessions()
+    assert server.metrics.cancelled == 0
+    server.run_until_drained()
+    assert server.metrics.quarantined == 1
+    _assert_drained_clean(server)
