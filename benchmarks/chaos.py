@@ -41,6 +41,8 @@ import tempfile
 from typing import Any, Dict, List, Tuple
 
 from repro import configs
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
 from repro.serving import api, faults, loadgen
 
 MAX_LEN, N_SLOTS, BLOCK = 64, 4, 8
@@ -251,6 +253,9 @@ def _replay_collecting(server, trace, clock, on_token, on_step=None,
     """`loadgen.replay` with one shared token callback (the kill/restore
     scenario reconstructs streams from events, exactly like a client)."""
     pending = sorted(trace, key=lambda r: (r.t, r.rid))
+    tracer = obs_trace.get_tracer()
+    if tracer.enabled:             # --trace-out: virtual timestamps
+        tracer.set_clock(clock)
     i = 0
     steps = 0
     while i < len(pending) or server.busy:
@@ -357,8 +362,15 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="trace/plan seed pair (fingerprints in the report "
                          "prove bit-exact chaos replay)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the chaos run's structured trace as "
+                         "Perfetto/Chrome trace_event JSON (every fault "
+                         "firing, preemption, and ladder transition lands "
+                         "on the timeline)")
     args = ap.parse_args()
     full = args.full and not args.smoke
+    if args.trace_out:
+        obs_trace.get_tracer().enable()
     rep = report(full, args.seed)
     if args.json:
         with open(args.json, "w") as f:
@@ -371,6 +383,13 @@ def main() -> None:
           f"parity={rep['unaffected_parity']:.0f}; restore "
           f"exactly_once={rep['restore']['exactly_once']:.0f} "
           f"parity={rep['restore']['parity']:.0f}")
+    if args.trace_out:
+        tracer = obs_trace.get_tracer()
+        obs_export.write_chrome_trace(tracer.records(), args.trace_out)
+        print(f"wrote {args.trace_out}: {len(tracer)} trace records "
+              f"({tracer.dropped} dropped)")
+        tracer.disable()
+        tracer.clear()
 
 
 if __name__ == "__main__":

@@ -242,23 +242,70 @@ def render_table(rows: List[Row]) -> str:
     return "\n".join(lines)
 
 
+def render_trace_context(traces: List[Tuple[str, str]]) -> str:
+    """Top-5 longest trace spans per exported timeline — failure context.
+
+    When a latency gate regresses, the raw percentile tells you *that* it
+    moved; the Perfetto timeline the bench exported alongside (``--trace-out``)
+    tells you *where the steps went*. This renders the top spans by duration
+    (obs.export.top_spans) as a markdown table per trace so the Actions
+    summary carries the first diagnostic question — "which spans dominate?" —
+    without downloading the artifact."""
+    from repro.obs import export as obs_export
+
+    sections: List[str] = []
+    for kind, path in traces:
+        try:
+            with open(path) as f:
+                trace = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            sections.append(f"### {kind} trace\n\n(unreadable: {e})")
+            continue
+        spans = obs_export.top_spans(trace, n=5)
+        if not spans:
+            sections.append(f"### {kind} trace\n\n(no spans recorded)")
+            continue
+        lines = [f"### {kind} trace — top spans by duration",
+                 "",
+                 "| span | track | start (µs) | duration (µs) | args |",
+                 "|---|---|---|---|---|"]
+        for s in spans:
+            args = json.dumps(s["args"], sort_keys=True) if s["args"] else ""
+            lines.append(f"| {s['name']} | {s['track']} | {s['ts_us']} "
+                         f"| {s['dur_us']} | `{args}` |")
+        sections.append("\n".join(lines))
+    return "\n\n".join(sections)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--check", nargs=3, action="append", required=True,
                     metavar=("KIND", "BASELINE", "CURRENT"),
                     help="bench kind + committed baseline + smoke-run JSON")
+    ap.add_argument("--trace", nargs=2, action="append", default=[],
+                    metavar=("KIND", "PATH"),
+                    help="exported Perfetto timeline for KIND; on gate "
+                         "failure its top-5 spans by duration are appended "
+                         "to the step summary as failure context")
     args = ap.parse_args()
     rows: List[Row] = []
     for kind, baseline, current in args.check:
         rows.extend(check(kind, baseline, current))
     table = render_table(rows)
     print(table)
+    failures = [r for r in rows if r.failed]
+    trace_md = ""
+    if failures and args.trace:
+        trace_md = render_trace_context([(k, p) for k, p in args.trace])
     summary = os.environ.get("GITHUB_STEP_SUMMARY")
     if summary:
         with open(summary, "a") as f:
             f.write("## Bench regression gate\n\n" + table + "\n")
-    failures = [r for r in rows if r.failed]
+            if trace_md:
+                f.write("\n" + trace_md + "\n")
     if failures:
+        if trace_md:
+            print("\n" + trace_md)
         raise SystemExit(
             "bench regression gate FAILED:\n" + "\n".join(
                 f"  {r.bench}: {r.metric} baseline={r.base} "

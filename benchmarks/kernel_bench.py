@@ -240,6 +240,10 @@ def _smoke_kernel_launches() -> List[dict]:
     _case("ops_spmm_auto_schedule",
           ops.spmm(t, b, backend="interpret", out_dtype=jnp.float32),
           ref.spmm_ref(t, b, out_dtype=jnp.float32))
+    _case("ops_spmm_grouped_auto_schedule",
+          ops.spmm_grouped(tg, b, backend="interpret",
+                           out_dtype=jnp.float32),
+          ref.spmm_splitk_grouped_ref(tg, b, 1, out_dtype=jnp.float32))
     return results
 
 
@@ -270,9 +274,17 @@ def run_json(full: bool = False, smoke: bool = False) -> dict:
         "cells": cells,
     }
     if smoke:
-        launches = _smoke_kernel_launches()
+        # Profile the auto-schedule dispatches: the recorded launches are
+        # re-measured fenced, giving a predicted-vs-measured roofline drift
+        # row per unique launch (obs/profile.py). Interpret-mode wall times
+        # carry huge constant factors, so the drift values only anchor the
+        # report shape — the gate never reads them (cells/smoke_ok only).
+        from repro.obs import profile as obs_profile
+        with obs_profile.profiled(obs_profile.KernelProfiler()) as prof:
+            launches = _smoke_kernel_launches()
         payload["smoke_launches"] = launches
         payload["smoke_ok"] = all(r["ok"] for r in launches)
+        payload["kernel_drift"] = prof.drift_report(reps=2)
     return payload
 
 
@@ -342,6 +354,11 @@ def main() -> None:
         for r in payload["smoke_launches"]:
             print(f"  smoke {r['case']}: max_abs_err={r['max_abs_err']:.2e} "
                   f"{'ok' if r['ok'] else 'FAIL'}")
+        from repro.obs import profile as obs_profile
+        drift = payload["kernel_drift"]
+        print(f"kernel drift ({drift['n_unique_launches']} unique "
+              f"auto-schedule launches):")
+        print(obs_profile.render_drift_table(drift["rows"]))
         if not payload["smoke_ok"]:
             raise SystemExit("bench smoke: kernel parity check FAILED")
 

@@ -40,6 +40,8 @@ import json
 from typing import Any, Dict
 
 from repro import configs
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
 from repro.serving import api, loadgen
 
 MAX_LEN, N_SLOTS, BLOCK = 64, 4, 8
@@ -154,8 +156,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0,
                     help="trace seed (fingerprints in the report prove "
                          "reproducibility)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the run's structured trace as Perfetto/"
+                         "Chrome trace_event JSON (load at ui.perfetto.dev)")
     args = ap.parse_args()
     full = args.full and not args.smoke
+    if args.trace_out:
+        obs_trace.get_tracer().enable()
     if args.json:
         rep = report(full, args.seed)
         with open(args.json, "w") as f:
@@ -170,6 +177,13 @@ def main() -> None:
     else:
         for row in run(full, args.seed):
             print(row)
+    if args.trace_out:
+        tr = obs_trace.get_tracer()
+        obs_export.write_chrome_trace(tr.records(), args.trace_out)
+        print(f"wrote {args.trace_out}: {len(tr)} trace records "
+              f"({tr.dropped} dropped)")
+        tr.disable()
+        tr.clear()
 
 
 if __name__ == "__main__":

@@ -49,6 +49,10 @@ RULES: Dict[str, str] = {
     "PY-MUT-DEFAULT": "mutable default argument",
     "PY-DICT-MUT": "dict/list mutated while being iterated",
     "PY-SWALLOW": "bare/over-broad except in serving/ drops the exception",
+    # observability plane (lint.py OB-SYNC; tools/check.py --obs OB-EVENT)
+    "OB-SYNC": "host sync (block_until_ready/.item/asarray) in the step "
+               "hot path without a profiling-fence annotation",
+    "OB-EVENT": "metrics counters and the trace event stream disagree",
 }
 
 _IGNORE_RE = re.compile(r"#\s*repro:\s*ignore\[([A-Z0-9,\- ]+)\]")

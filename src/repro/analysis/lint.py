@@ -38,14 +38,28 @@ PY-SWALLOW  a bare ``except:`` or ``except Exception/BaseException`` in
           fault into an invisible wedge. Narrow the type, re-raise, or
           bind it (``except Exception as e``) and record it.
 
+Step hot-path sync discipline (observability doctrine, DESIGN.md §15):
+
+OB-SYNC   a host-synchronizing call in ``serving/step.py`` — the engine's
+          step hot path must stay async so launches pipeline; one stray
+          sync serializes every step and silently halves throughput.
+          Flagged: ``jax.block_until_ready`` / ``.item()`` anywhere in the
+          file, and ``np.asarray`` *inside a function named ``*_step``*
+          (the jitted bodies — host wrappers materialize results on
+          purpose). Deliberate profiling fences (measurement must sync,
+          outside the jitted body, behind an off-by-default flag) are
+          annotated ``# repro: profiling-fence`` on the flagged line.
+
 Suppression: inline ``# repro: ignore[RULE]`` on (or directly above) the
-flagged line — see ``analysis.findings``.
+flagged line — see ``analysis.findings``; OB-SYNC additionally honors the
+``# repro: profiling-fence`` annotation described above.
 """
 
 from __future__ import annotations
 
 import ast
 import os
+import re
 from typing import Dict, List, Optional, Sequence
 
 from repro.analysis.findings import Finding, apply_inline_ignores
@@ -87,9 +101,13 @@ class _FileLinter(ast.NodeVisitor):
     def __init__(self, rel_path: str, serving: bool):
         self.rel = rel_path
         self.serving = serving
+        # OB-SYNC scopes to the engine step module: the one file whose
+        # whole point is keeping device launches async (DESIGN.md §15).
+        self.step_file = serving and os.path.basename(rel_path) == "step.py"
         self.findings: List[Finding] = []
         self._loop_depth = 0
         self._iter_stack: List[str] = []   # containers under iteration
+        self._fn_stack: List[str] = []     # enclosing function names
 
     # -- helpers ----------------------------------------------------------
     def _add(self, rule: str, node: ast.AST, msg: str, hint: str) -> None:
@@ -106,7 +124,9 @@ class _FileLinter(ast.NodeVisitor):
                           f"mutable default in {node.name}()",
                           "default to None; create the container inside")
         self._check_key_reuse(node)
+        self._fn_stack.append(node.name)
         self.generic_visit(node)
+        self._fn_stack.pop()
 
     visit_FunctionDef = _visit_function
     visit_AsyncFunctionDef = _visit_function
@@ -215,7 +235,31 @@ class _FileLinter(ast.NodeVisitor):
                           "key chain depends on scheduling history",
                           "fold the base key by (uid, token index): "
                           "engine.fold_slot_keys / jax.random.fold_in")
+        if self.step_file:
+            self._check_host_sync(node, callee)
         self.generic_visit(node)
+
+    def _check_host_sync(self, node: ast.Call, callee: str) -> None:
+        """OB-SYNC: host-synchronizing calls in the engine step module."""
+        hint = ("keep the step path async; a deliberate measurement fence "
+                "(off-by-default, outside the jitted body) is annotated "
+                "`# repro: profiling-fence`")
+        if callee.rsplit(".", 1)[-1] == "block_until_ready":
+            self._add("OB-SYNC", node,
+                      "block_until_ready in the step hot path blocks the "
+                      "host on every launch", hint)
+        elif (isinstance(node.func, ast.Attribute)
+                and node.func.attr == "item" and not node.args
+                and not node.keywords):
+            self._add("OB-SYNC", node,
+                      ".item() forces a device->host transfer in the step "
+                      "hot path", hint)
+        elif (callee in ("np.asarray", "numpy.asarray")
+                and self._fn_stack and self._fn_stack[-1].endswith("_step")):
+            self._add("OB-SYNC", node,
+                      f"np.asarray inside jitted step body "
+                      f"{self._fn_stack[-1]}() — materializes the traced "
+                      f"value on host", hint)
 
     # -- exception swallowing (serving fault doctrine) --------------------
     @staticmethod
@@ -295,6 +339,25 @@ class _FileLinter(ast.NodeVisitor):
                       "iterate over list(...) / collect keys first")
 
 
+#: lines carrying this annotation declare a deliberate measurement fence
+#: (OB-SYNC); the annotation documents intent at the call site, unlike a
+#: generic ignore.
+_FENCE_RE = re.compile(r"#\s*repro:\s*profiling-fence\b")
+
+
+def _apply_fence_annotations(findings: List[Finding],
+                             source: str) -> List[Finding]:
+    fenced = set()
+    for i, text in enumerate(source.splitlines(), start=1):
+        if _FENCE_RE.search(text):
+            fenced.update((i, i + 1))   # own line + the statement below
+    for f in findings:
+        if f.rule == "OB-SYNC" and f.line in fenced and not f.suppressed:
+            f.suppressed = True
+            f.justification = "profiling-fence annotation"
+    return findings
+
+
 def lint_file(path: str, *, serving: bool,
               source: Optional[str] = None) -> List[Finding]:
     if source is None:
@@ -303,7 +366,8 @@ def lint_file(path: str, *, serving: bool,
     rel = os.path.relpath(path) if os.path.isabs(path) else path
     linter = _FileLinter(rel, serving)
     linter.visit(ast.parse(source, filename=path))
-    return apply_inline_ignores(linter.findings, {rel: source})
+    out = apply_inline_ignores(linter.findings, {rel: source})
+    return _apply_fence_annotations(out, source)
 
 
 def lint_tree(repo_root: str,

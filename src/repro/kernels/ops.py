@@ -31,6 +31,8 @@ from repro.core import tiled_csl
 from repro.kernels import ref as ref_mod
 from repro.kernels import schedule as schedule_mod
 from repro.kernels import spmm as spmm_mod
+from repro.obs import profile as obs_profile
+from repro.obs import trace as obs_trace
 
 Backend = Literal["auto", "pallas", "interpret", "xla"]
 
@@ -40,15 +42,41 @@ def _on_tpu() -> bool:
 
 
 def _pick_schedule(t: tiled_csl.TiledCSL, n: int, backend: str,
-                   n_tb: int | None, split_k: int | None) -> schedule_mod.Schedule:
+                   n_tb: int | None, split_k: int | None,
+                   kind: str = "spmm") -> schedule_mod.Schedule:
     # Sparsity comes from static metadata only (the true nnz sum is a
     # device value and must not be read under jit); the shared helper keeps
     # dispatch and autotune cache keys bit-identical.
     sparsity = schedule_mod.sparsity_from_max_nnz(t.max_nnz, t.m_tb, t.k_tb)
-    return schedule_mod.select(
+    sched = schedule_mod.select(
         t.shape[0], t.shape[1], n, sparsity,
         m_tb=t.m_tb, k_tb=t.k_tb, n_tb=n_tb, split_k=split_k,
         group=t.group or 1, max_nnz=t.max_nnz, backend=backend)
+    _note_launch(kind, t, n, sparsity, backend, sched)
+    return sched
+
+
+def _note_launch(kind: str, t: tiled_csl.TiledCSL, n: int, sparsity: float,
+                 backend: str, sched: schedule_mod.Schedule) -> None:
+    """Observability hook at the dispatch site (runs at jit-trace time, so
+    once per compiled shape — an honest granularity under jit: per-call
+    wall timing needs the fenced profiling mode, obs/profile.py)."""
+    prof = obs_profile.active()
+    tr = obs_trace.get_tracer()
+    if prof is None and not tr.enabled:
+        return
+    m, k = t.shape[0], t.shape[1]
+    group = t.group or 1
+    if prof is not None:
+        prof.note_dispatch(kind, m, k, n, sparsity, group, t.max_nnz,
+                           t.m_tb, t.k_tb, backend, sched)
+    if tr.enabled:
+        terms = schedule_mod.predicted(m, k, n, sparsity, sched,
+                                       group=group, max_nnz=t.max_nnz)
+        tr.event("kernel", f"{kind} {m}x{k}x{n}", "kernel",
+                 backend=backend, schedule=sched.as_dict(), group=group,
+                 sparsity=round(float(sparsity), 4),
+                 predicted_us=terms.effective_s * 1e6)
 
 
 def spmm(t: tiled_csl.TiledCSL,
@@ -88,7 +116,7 @@ def spmm(t: tiled_csl.TiledCSL,
                                 bias=bias)
 
     n = b.shape[1]
-    sched = _pick_schedule(t, n, backend, n_tb, split_k)
+    sched = _pick_schedule(t, n, backend, n_tb, split_k, kind="spmm")
     n_pad = -(-n // sched.n_tb) * sched.n_tb
     if n_pad != n:
         b = jnp.pad(b, ((0, 0), (0, n_pad - n)))
@@ -132,7 +160,8 @@ def spmm_grouped(t: tiled_csl.TiledCSL,
                                         epilogue=epilogue, bias=bias)
 
     n = b.shape[1]
-    sched = _pick_schedule(t, n, backend, n_tb, split_k)
+    sched = _pick_schedule(t, n, backend, n_tb, split_k,
+                           kind="spmm_grouped")
     n_pad = -(-n // sched.n_tb) * sched.n_tb
     if n_pad != n:
         b = jnp.pad(b, ((0, 0), (0, n_pad - n)))

@@ -128,9 +128,22 @@ class ScheduleCache:
     def __init__(self, path: str):
         self.path = path
         self._data: Dict[str, dict] = _read_entries(path)
+        self._dropped: set = set()     # staleness-invalidated keys
 
     def __len__(self) -> int:
         return len(self._data)
+
+    def entry(self, key: str) -> Optional[dict]:
+        """Raw cache record (incl. ``measured_us``), or None."""
+        ent = self._data.get(key)
+        return dict(ent) if ent else None
+
+    def invalidate(self, key: str) -> bool:
+        """Drop a stale entry (obs.profile drift feedback).  The drop
+        survives ``save()``'s merge-on-save: next ``select()`` falls back
+        to the analytic model instead of the stale measurement."""
+        self._dropped.add(key)
+        return self._data.pop(key, None) is not None
 
     def get(self, key: str) -> Optional[Schedule]:
         ent = self._data.get(key)
@@ -146,6 +159,7 @@ class ScheduleCache:
         ent = sched.as_dict()
         if measured_us is not None:
             ent["measured_us"] = float(measured_us)
+        self._dropped.discard(key)     # a fresh measurement un-drops the key
         self._data[key] = ent
 
     def save(self) -> None:
@@ -154,6 +168,8 @@ class ScheduleCache:
         # (ours win on key collision); tmp + rename keeps the write atomic.
         merged = _read_entries(self.path)
         merged.update(self._data)
+        for key in self._dropped:      # invalidations beat the disk copy
+            merged.pop(key, None)
         self._data = merged
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:

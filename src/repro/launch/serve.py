@@ -19,6 +19,16 @@ Fault-tolerance knobs (DESIGN.md §14): ``--deadline-ms`` /
 saved `serving.faults.FaultPlan` (chaos replay from a file), and
 ``--snapshot-dir`` restores in-flight sessions from the newest snapshot at
 startup and writes a crash-consistent one after the run drains.
+
+Observability knobs (DESIGN.md §15): ``--metrics-port P`` exposes the live
+scheduler counters at ``http://127.0.0.1:P/metrics`` (Prometheus text
+exposition; ``/metrics.json`` for machines) with ``--digest-every S``
+printing a one-line operator digest every S seconds; ``--trace-out t.json``
+records every scheduler decision, engine step, and kernel launch into a
+Perfetto-loadable timeline; ``--profile-kernels`` measures each unique
+sparse-kernel launch after the run drains and prints a predicted-vs-
+measured roofline drift table (pair with ``--backend interpret`` off-TPU —
+the XLA reference path has no schedulable launches to record).
 """
 
 from __future__ import annotations
@@ -33,12 +43,33 @@ from repro import configs
 from repro.core import pruning, tiled_csl
 from repro.distributed import fault_tolerance as ft
 from repro.models import transformer, nn
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
+from repro.obs import trace as obs_trace
 from repro.serving import api, budget, faults, loadgen, speculative
 from repro.serving.scheduler import latency_summary
 
+_EXAMPLES = """\
+examples:
+  # dense smoke serve with live Prometheus metrics + operator digest
+  python -m repro.launch.serve --arch tinyllama_1_1b --smoke \\
+      --metrics-port 9100 --digest-every 2
+
+  # sparse paged serve, exporting a Perfetto timeline of the whole run
+  python -m repro.launch.serve --arch tinyllama_1_1b --smoke --sparsity 0.8 \\
+      --paged --trace-out serve_trace.json   # load at ui.perfetto.dev
+
+  # roofline drift check for every kernel launch the serve dispatched
+  python -m repro.launch.serve --arch tinyllama_1_1b --smoke --sparsity 0.8 \\
+      --backend interpret --profile-kernels
+"""
+
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog=_EXAMPLES)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--sparsity", type=float, default=None)
@@ -90,7 +121,32 @@ def main() -> None:
                     help="write a crash-consistent scheduler/session "
                          "snapshot here after the run drains (and restore "
                          "from it at startup when one exists)")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "xla", "pallas", "interpret"),
+                    help="kernel dispatch for sparse matmuls (kernels.ops); "
+                         "'interpret' runs the Pallas kernels off-TPU and "
+                         "is required for --profile-kernels on CPU")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="P",
+                    help="serve live scheduler metrics on "
+                         "http://127.0.0.1:P/metrics (Prometheus text "
+                         "exposition; /metrics.json for JSON)")
+    ap.add_argument("--digest-every", type=float, default=None, metavar="S",
+                    help="print a one-line operator digest of the key "
+                         "metrics every S seconds while serving")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export the run's structured trace (scheduler "
+                         "decisions, engine steps, kernel launches) as "
+                         "Perfetto/Chrome trace_event JSON")
+    ap.add_argument("--profile-kernels", action="store_true",
+                    help="record every unique kernel launch, re-measure it "
+                         "fenced after the run drains, and print the "
+                         "predicted-vs-measured roofline drift table")
     args = ap.parse_args()
+    if args.trace_out:
+        obs_trace.get_tracer().enable()
+    profiler = obs_profile.KernelProfiler() if args.profile_kernels else None
+    if profiler is not None:
+        obs_profile.set_profiler(profiler)
 
     cfg = configs.smoke(args.arch) if args.smoke else configs.get(args.arch)
     params = transformer.init_model(jax.random.PRNGKey(args.seed), cfg)
@@ -159,6 +215,7 @@ def main() -> None:
         n_slots=args.slots, max_len=args.max_len,
         cache_kind="paged" if args.paged else "dense",
         block_size=args.block_size, n_blocks=n_blocks,
+        backend=args.backend,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
         spec_k=args.spec_k, drafter=drafter, fault_plan=plan)
     resume = None
@@ -178,6 +235,27 @@ def main() -> None:
     total_dl = (args.deadline_ms / 1e3
                 if args.deadline_ms is not None else None)
     b = server.batcher
+    if args.profile_kernels and args.trace_out:
+        b.stepper.profile = True  # wall_us on step spans (fenced, host-side)
+    registry = http_srv = stop_digest = None
+    if args.metrics_port is not None or args.digest_every is not None:
+        registry = obs_metrics.MetricsRegistry()
+        obs_metrics.register_scheduler_metrics(registry, lambda: b.metrics)
+    if args.metrics_port is not None:
+        http_srv = obs_metrics.start_http_server(registry, args.metrics_port)
+        print(f"metrics: http://127.0.0.1:{args.metrics_port}/metrics "
+              f"(/metrics.json for JSON)")
+    if args.digest_every is not None:
+        import threading
+
+        stop_digest = threading.Event()
+
+        def _digest_loop():
+            while not stop_digest.wait(args.digest_every):
+                print("digest: "
+                      + registry.digest(obs_metrics.DIGEST_KEYS))
+
+        threading.Thread(target=_digest_loop, daemon=True).start()
     t0 = time.time()
     n_shed = 0
     if args.trace_rate is not None:
@@ -244,6 +322,24 @@ def main() -> None:
     if args.snapshot_dir:
         path = server.snapshot(args.snapshot_dir)
         print(f"snapshot: {path}")
+    if registry is not None:
+        print("digest: " + registry.digest(obs_metrics.DIGEST_KEYS))
+    if stop_digest is not None:
+        stop_digest.set()
+    if http_srv is not None:
+        http_srv.shutdown()
+    if profiler is not None:
+        obs_profile.set_profiler(None)
+        rep = profiler.drift_report(reps=2)
+        print(f"kernel drift ({rep['n_unique_launches']} unique launches):")
+        print(obs_profile.render_drift_table(rep["rows"]))
+    if args.trace_out:
+        tr = obs_trace.get_tracer()
+        obs_export.write_chrome_trace(tr.records(), args.trace_out)
+        print(f"wrote {args.trace_out}: {len(tr)} trace records "
+              f"({tr.dropped} dropped)")
+        tr.disable()
+        tr.clear()
     for sid in sorted(done)[:3]:
         print(f"  {sid}: {done[sid][:8]}...")
 

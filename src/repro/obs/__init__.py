@@ -1,0 +1,13 @@
+"""Unified observability plane: tracing, metrics, timeline export, profiling.
+
+Zero-dependency by design (stdlib + numpy only at import time): the tracer
+and metrics registry are imported by the host-side scheduler, which must
+stay jax-free (DESIGN §13).  Kernel profiling (``obs.profile``) imports jax
+lazily, only when a measurement is actually requested.
+
+Doctrine: DESIGN §15.
+"""
+
+from repro.obs.trace import TraceRecord, Tracer, get_tracer
+
+__all__ = ["TraceRecord", "Tracer", "get_tracer"]

@@ -77,6 +77,7 @@ import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
+from repro.obs.trace import Tracer, get_tracer
 from repro.serving import engine, faults, speculative
 from repro.serving.scheduler import (DegradationPolicy,  # noqa: F401
                                      Request, Scheduler, SchedulerMetrics)
@@ -129,7 +130,8 @@ class ContinuousBatcher:
                  spec_k: int = 0, drafter=None,
                  clock: Optional[Callable[[], float]] = None,
                  fault_plan=None, degradation=None,
-                 max_step_retries: int = 4, retry_backoff_s: float = 0.25):
+                 max_step_retries: int = 4, retry_backoff_s: float = 0.25,
+                 tracer: Optional[Tracer] = None):
         if cfg.n_codebooks:
             raise ValueError("codebook (audio) archs need [n_cb, S] prompts; "
                              "drive engine.generate directly")
@@ -184,6 +186,9 @@ class ContinuousBatcher:
                                                 faults.FaultInjector)
                        else faults.FaultInjector(fault_plan)
                        if fault_plan is not None else None)
+        self.tracer = tracer if tracer is not None else get_tracer()
+        if self.faults is not None:
+            self.faults.tracer = self.tracer    # one timeline per server
         self.sched = Scheduler(
             n_slots=n_slots, max_len=max_len, stop_ids=stop,
             admit_k=self.admit_k, buckets=buckets, ring_len=self.ring_len,
@@ -192,14 +197,14 @@ class ContinuousBatcher:
             reserve_blocks=reserve_blocks, prefix_sharing=prefix_sharing,
             request_history=request_history, spec_k=self.spec_k,
             drafter=self.drafter, sampled=self.temperature != 0.0,
-            clock=clock, degradation=degradation)
+            clock=clock, degradation=degradation, tracer=self.tracer)
         self.stepper = DeviceStepper(
             params, cfg, n_slots=n_slots, max_len=max_len, backend=backend,
             physical_blocks=(self.sched.pool.physical_blocks
                              if self.paged else None),
             block_size=block_size, ring_len=self.ring_len,
             temperature=temperature, top_k=top_k, seed=seed,
-            spec_k=self.spec_k, faults=self.faults)
+            spec_k=self.spec_k, faults=self.faults, tracer=self.tracer)
 
     # -- delegation: the monolith's introspection surface -------------------
     @property
@@ -298,6 +303,10 @@ class ContinuousBatcher:
                 attempt += 1
                 self.sched.metrics.step_retries += 1
                 self.sched.note_fault()
+                tr = self.tracer
+                if tr.enabled:
+                    tr.event("fault", "retry", "engine", op=op,
+                             attempt=attempt, backoff_s=delay)
                 if attempt > self.max_step_retries:
                     raise faults.StepFault(op, attempt, e) from e
                 self.sched.advance_clock(delay)
@@ -353,6 +362,7 @@ class ContinuousBatcher:
         m.active_slot_steps += len(active)
         m.peak_active_slots = max(m.peak_active_slots, len(active))
         if not active:
+            self._trace_step_end(m, 0, len(finished))
             return finished
         t0 = time.monotonic()
         if self.spec_k and any(len(staged.get(s, ())) for s in active):
@@ -380,7 +390,18 @@ class ContinuousBatcher:
             # refresh after completions freed their tables (the pre-decode
             # sample above is the high-water mark)
             m.blocks_in_use = sched.pool.blocks_in_use
+        self._trace_step_end(m, len(active), len(finished))
         return finished
+
+    def _trace_step_end(self, m, n_active: int, n_finished: int) -> None:
+        """Per-step engine 'tick' event — the timeline's heartbeat (fault
+        firings are traced at the source, ``FaultInjector._fire``)."""
+        tr = self.tracer
+        if not tr.enabled:
+            return
+        tr.event("step", "tick", "engine", step=m.steps, active=n_active,
+                 finished=n_finished, queue=self.sched.queue_depth,
+                 degradation=self.sched.degradation.level)
 
     def run_to_completion(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         out: Dict[int, List[int]] = {}

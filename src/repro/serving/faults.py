@@ -183,19 +183,31 @@ class FaultInjector:
     the chaos bench's receipt that the plan executed, not just parsed.
     """
 
-    def __init__(self, plan: FaultPlan):
+    def __init__(self, plan: FaultPlan, tracer=None):
         self.plan = plan
         self.step = -1
         self._active: List[FaultEvent] = []
         self._attempts: Dict[int, int] = {}      # event index -> raises so far
         self.fired: List[Tuple[int, str]] = []   # (step, kind) log
         self._fired_keys = set()
+        # Structured tracing (DESIGN §15): every firing lands on the
+        # timeline the moment it happens — the obs pass asserts the trace
+        # and ``fired`` never diverge (no silent fault effects). Import is
+        # lazy-free: obs.trace is stdlib-only, faults stays host-side.
+        if tracer is None:
+            from repro.obs.trace import get_tracer
+            tracer = get_tracer()
+        self.tracer = tracer
 
     def _fire(self, ev: FaultEvent) -> None:
         key = (self.step, id(ev))
         if key not in self._fired_keys:
             self._fired_keys.add(key)
             self.fired.append((self.step, ev.kind))
+            tr = self.tracer
+            if tr.enabled:
+                tr.event("fault", ev.kind, "engine", step=self.step,
+                         op=ev.op, slot=ev.slot)
 
     def begin_step(self, step: int) -> List[FaultEvent]:
         self.step = step

@@ -44,6 +44,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import trace as obs_trace
 from repro.serving import api
 from repro.serving.scheduler import latency_summary
 
@@ -218,6 +219,16 @@ def replay(server: api.StreamingServer, trace: Sequence[TraceRequest],
     ``on_step(step_index, server)``, if given, runs after each engine step
     — the chaos bench's hook for mid-run snapshots and kill points."""
     pending = deque(sorted(trace, key=lambda r: (r.t, r.rid)))
+    # Latency reservoirs reseed from the trace fingerprint (obs/metrics.py):
+    # replayed percentiles become a pure function of the trace, independent
+    # of whatever ran on this server before — the determinism the CI
+    # latency gates and the timeline-export tests rely on.
+    server.metrics.seed_latency(trace_fingerprint(trace))
+    # An enabled tracer stamps from the replay's virtual clock (DESIGN §15:
+    # a replayed timeline is a function of the trace, not of the runner).
+    tr = obs_trace.get_tracer()
+    if tr.enabled:
+        tr.set_clock(clock)
     responses: List[api.GenerationResponse] = []
     rejected: List[int] = []
     shed: List[int] = []

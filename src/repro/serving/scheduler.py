@@ -57,6 +57,8 @@ from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
 
 import numpy as np
 
+from repro.obs.metrics import Reservoir
+from repro.obs.trace import Tracer, get_tracer
 from repro.serving import paged_cache
 
 
@@ -155,11 +157,20 @@ class SchedulerMetrics:
     peak_degradation_level: int = 0
     degraded_steps: int = 0          # steps spent at level > 0
     degradation_sheds: int = 0       # submits shed by the ladder's top rung
+    degradation_transitions: int = 0  # ladder rung changes (either direction)
     # wall-clock latency samples of *finished* requests (scheduler clock;
     # cancelled/deadline/quarantined requests are excluded — their tail is
-    # not a served latency)
-    ttft_s: List[float] = dataclasses.field(default_factory=list)
-    tpot_s: List[float] = dataclasses.field(default_factory=list)
+    # not a served latency). Bounded reservoirs, not lists: a long-running
+    # server keeps at most Reservoir.capacity floats per series, and
+    # ``loadgen.replay`` reseeds them from the trace fingerprint so replay
+    # percentiles are deterministic (obs/metrics.py).
+    ttft_s: Reservoir = dataclasses.field(default_factory=Reservoir)
+    tpot_s: Reservoir = dataclasses.field(default_factory=Reservoir)
+
+    def seed_latency(self, key: str) -> None:
+        """Reset + reseed the latency reservoirs (trace fingerprint)."""
+        self.ttft_s.reseed("ttft:" + key)
+        self.tpot_s.reseed("tpot:" + key)
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -306,7 +317,8 @@ class Scheduler:
                  spec_k: int = 0, drafter=None,
                  sampled: bool = False,
                  clock: Optional[Callable[[], float]] = None,
-                 degradation: Optional[DegradationPolicy] = None):
+                 degradation: Optional[DegradationPolicy] = None,
+                 tracer: Optional[Tracer] = None):
         self.n_slots = n_slots
         self.max_len = max_len
         self.stop_ids = frozenset(int(t) for t in stop_ids)
@@ -318,6 +330,11 @@ class Scheduler:
         self.drafter = drafter
         self.sampled = sampled
         self.clock = clock if clock is not None else time.monotonic
+        # Structured tracing (DESIGN §15): defaults to the process-wide
+        # tracer, which is OFF by default — every emission site below is
+        # guarded by ``tr.enabled`` so a quiet server pays one flag check.
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self._slot_admit_t = [0.0] * n_slots   # slot-residency span starts
         # -- fault tolerance (DESIGN.md §14) --------------------------------
         self.degradation_policy = degradation or DegradationPolicy()
         self.degradation = DegradationState()
@@ -434,6 +451,10 @@ class Scheduler:
                       submit_t=self.clock())
         self._enqueue(req)
         self.requests[uid] = req
+        tr = self.tracer
+        if tr.enabled:
+            tr.event("sched", "submit", "scheduler", uid=uid,
+                     prompt_len=int(prompt.size), max_new=max_new_tokens)
         return req
 
     def _enqueue(self, req: Request) -> None:
@@ -451,6 +472,7 @@ class Scheduler:
         req = self.requests.get(uid)
         if req is None or req.done:
             return None
+        slot = None
         if req.pending:
             # queued (fresh or preempted): mark stale; the FIFO heads and
             # _take_group skip done entries.
@@ -458,12 +480,20 @@ class Scheduler:
         else:
             for s in range(self.n_slots):
                 if self.slots[s] is req:
+                    slot = s
                     self._release_slot(s)
                     break
         req.done = True
         req.finish_reason = "cancelled"
         req.finish_t = self.clock()
         self.metrics.cancelled += 1
+        tr = self.tracer
+        if tr.enabled:
+            tr.event("sched", "cancel", "scheduler", uid=uid)
+            if slot is not None:
+                tr.span("sched", f"req{uid}", f"slot{slot}",
+                        self._slot_admit_t[slot], req.finish_t,
+                        uid=uid, reason="cancelled")
         self._retire(req)
         return req
 
@@ -536,6 +566,13 @@ class Scheduler:
             m.ttft_s.append(req.ttft_s)
         if req.tpot_s is not None:
             m.tpot_s.append(req.tpot_s)
+        tr = self.tracer
+        if tr.enabled:
+            tr.event("sched", "finish", "scheduler", uid=req.uid,
+                     reason=reason, tokens=len(req.generated))
+            tr.span("sched", f"req{req.uid}", f"slot{slot}",
+                    self._slot_admit_t[slot], req.finish_t,
+                    uid=req.uid, reason=reason, tokens=len(req.generated))
         self._retire(req)
 
     def _fail(self, req: Request, slot: Optional[int], reason: str,
@@ -556,6 +593,16 @@ class Scheduler:
             self.metrics.deadline_expired += 1
         else:
             self.metrics.quarantined += 1
+        tr = self.tracer
+        if tr.enabled:
+            # "deadline" / "quarantine" — the obs pass (tools/check.py)
+            # cross-checks these event counts against the metrics counters
+            name = "deadline" if reason == "deadline" else "quarantine"
+            tr.event("sched", name, "scheduler", uid=req.uid)
+            if slot is not None:
+                tr.span("sched", f"req{req.uid}", f"slot{slot}",
+                        self._slot_admit_t[slot], req.finish_t,
+                        uid=req.uid, reason=reason)
         self._retire(req)
 
     # -- deadlines / quarantine (DESIGN.md §14) -----------------------------
@@ -613,6 +660,7 @@ class Scheduler:
         while (self._fault_steps
                and self._fault_steps[0] <= m.steps - pol.fault_window):
             self._fault_steps.popleft()
+        prev_level = st.level
         pressured = len(self._fault_steps) >= pol.fault_hi
         if not pressured and pol.pressure:
             if self.paged and self.pool.n_blocks:
@@ -635,6 +683,14 @@ class Scheduler:
                 st.level -= 1
                 st.since_step = m.steps
                 st.calm_streak = 0
+        if st.level != prev_level:
+            # every rung transition is observable: counted here AND traced —
+            # tools/check.py's obs pass asserts the two never diverge
+            m.degradation_transitions += 1
+            tr = self.tracer
+            if tr.enabled:
+                tr.event("sched", "degradation", "scheduler",
+                         frm=prev_level, to=st.level, step=m.steps)
         m.degradation_level = st.level
         m.peak_degradation_level = max(m.peak_degradation_level, st.level)
         if st.level:
@@ -761,6 +817,11 @@ class Scheduler:
                 f"raise n_blocks (budget) or lower max_len")
         s = max(cand, key=lambda i: (self.slots[i].admit_step, i))
         req = self.slots[s]
+        tr = self.tracer
+        if tr.enabled:
+            tr.event("sched", "preempt", "scheduler", uid=req.uid, slot=s)
+            tr.span("sched", f"req{req.uid}", f"slot{s}",
+                    self._slot_admit_t[s], uid=req.uid, reason="preempt")
         self._release_slot(s)
         req.pending = True
         req.admit_step = -1
@@ -967,9 +1028,15 @@ class Scheduler:
         m.bucket_admits[plan.bucket] = \
             m.bucket_admits.get(plan.bucket, 0) + 1
         now = self.clock()
+        tr = self.tracer
         for i, req in enumerate(plan.group):
             s = plan.slots[i]
             self.slots[s] = req
+            self._slot_admit_t[s] = now
+            if tr.enabled:
+                tr.event("sched", "admit", "scheduler", uid=req.uid,
+                         slot=s, bucket=plan.bucket,
+                         queued_steps=m.steps - req.submit_step)
             if ok is not None and not ok[i]:
                 # a poisoned row's sampled token is garbage: no stream
                 # state is created (slot routed through _release_slot)

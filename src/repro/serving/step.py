@@ -29,6 +29,7 @@ would take. Injection off ⇒ both hooks are dead code.
 
 from __future__ import annotations
 
+import time
 from typing import Iterable, Optional, Tuple
 
 import jax
@@ -37,6 +38,7 @@ import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
+from repro.obs.trace import Tracer, get_tracer
 from repro.serving import engine
 
 
@@ -54,10 +56,18 @@ class DeviceStepper:
                  physical_blocks: Optional[int] = None, block_size: int = 16,
                  ring_len: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 spec_k: int = 0, faults=None):
+                 spec_k: int = 0, faults=None,
+                 tracer: Optional[Tracer] = None):
         self.params = params
         self.cfg = cfg
         self.backend = backend
+        self.tracer = tracer if tracer is not None else get_tracer()
+        # Opt-in profiling mode (--profile-kernels): fences each launch with
+        # block_until_ready so the span's wall_us measures device work, not
+        # dispatch. NEVER on by default — the async hot path must stay async
+        # (DESIGN §15); the fence lives here on the host side, outside the
+        # jitted *_step bodies (OB-SYNC).
+        self.profile = False
         self.ring_len = ring_len
         self.temperature = float(temperature)
         self.top_k = int(top_k)
@@ -135,9 +145,20 @@ class DeviceStepper:
         logits [k, V] (device array — fed straight to sample_admitted)."""
         if self.faults is not None:
             self.faults.check_launch("prefill")
+        tr = self.tracer
+        t0 = tr.clock() if tr.enabled else 0.0
+        w0 = time.perf_counter() if self.profile else 0.0
         logits, self.cache = self._prefill(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(targets), jnp.asarray(lens))
+        if tr.enabled:
+            args = {"rows": int(tokens.shape[0]),
+                    "bucket": int(tokens.shape[1]),
+                    "real_tokens": int(np.sum(lens))}
+            if self.profile:
+                jax.block_until_ready(logits)  # repro: profiling-fence
+                args["wall_us"] = (time.perf_counter() - w0) * 1e6
+            tr.span("step", "prefill", "engine", t0, **args)
         if self.faults is not None:
             mask = self.faults.poison_mask("prefill", logits.shape[0])
             if mask is not None:
@@ -186,9 +207,22 @@ class DeviceStepper:
         tables = jnp.asarray(table_arr) if table_arr is not None else None
         if uids is not None:
             uids, counts = jnp.asarray(uids), jnp.asarray(counts)
+        tr = self.tracer
+        t0 = tr.clock() if tr.enabled else 0.0
+        w0 = time.perf_counter() if self.profile else 0.0
         tok, ok, self.cache = self._decode(
             self.params, self.cache, jnp.asarray(last_token[:, None]),
             jnp.asarray(pos), tables, uids, counts, jnp.asarray(poison))
+        if tr.enabled:
+            args = {"batch": int(len(self._no_poison))}
+            if table_arr is not None:
+                from repro.serving import paged_cache
+                args["blocks_touched"] = int(
+                    np.sum(table_arr != paged_cache.TRASH_BLOCK))
+            if self.profile:
+                jax.block_until_ready(tok)  # repro: profiling-fence
+                args["wall_us"] = (time.perf_counter() - w0) * 1e6
+            tr.span("step", "decode", "engine", t0, **args)
         return np.asarray(tok), np.asarray(ok)
 
     def verify(self, tokens: np.ndarray, pos: np.ndarray,
@@ -202,9 +236,20 @@ class DeviceStepper:
         decode path is the one that keeps running.)"""
         if self.faults is not None:
             self.faults.check_launch("verify")
+        tr = self.tracer
+        t0 = tr.clock() if tr.enabled else 0.0
+        w0 = time.perf_counter() if self.profile else 0.0
         tgt, n_acc, self.cache = self._verify(
             self.params, self.cache, jnp.asarray(tokens),
             jnp.asarray(pos), jnp.asarray(table_arr),
             jnp.asarray(draft_lens), jnp.asarray(uids),
             jnp.asarray(counts))
+        if tr.enabled:
+            args = {"batch": int(tokens.shape[0]),
+                    "window": int(tokens.shape[1]),
+                    "drafted": int(np.sum(draft_lens))}
+            if self.profile:
+                jax.block_until_ready(tgt)  # repro: profiling-fence
+                args["wall_us"] = (time.perf_counter() - w0) * 1e6
+            tr.span("step", "verify", "engine", t0, **args)
         return np.asarray(tgt), np.asarray(n_acc)

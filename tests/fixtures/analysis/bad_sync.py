@@ -1,0 +1,46 @@
+"""Golden-bad step hot-path file: host syncs in the engine step module.
+
+NOT imported — its *source* is parsed by ``lint.lint_file`` in
+``tests/test_analysis.py`` under the pseudo-path ``serving/step.py``
+(OB-SYNC scopes to the step module; a ``bad_sync.py`` path would not
+trigger it).
+"""
+import jax
+import numpy as np
+
+
+def decode(stepper, token):
+    logits = stepper.launch(token)
+    jax.block_until_ready(logits)                        # OB-SYNC (fence-less)
+    return logits
+
+
+def decode_probe(stepper, token):
+    logits = stepper.launch(token)
+    flag = logits[0, 0].item()                           # OB-SYNC (.item)
+    return logits, flag
+
+
+def _decode_step(params, cache, token):
+    hidden = params.apply(cache, token)
+    host = np.asarray(hidden)                            # OB-SYNC (in *_step)
+    return host
+
+
+def prefill(stepper, tokens):
+    # host wrapper materializing a *finished* result is the normal pattern
+    out = stepper.launch(tokens)
+    return np.asarray(out)                               # ok: not a *_step
+
+
+def decode_profiled(stepper, token):
+    logits = stepper.launch(token)
+    if stepper.profile:
+        jax.block_until_ready(logits)  # repro: profiling-fence
+    return logits
+
+
+def decode_ignored(stepper, token):
+    logits = stepper.launch(token)
+    jax.block_until_ready(logits)      # repro: ignore[OB-SYNC]
+    return logits

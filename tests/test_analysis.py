@@ -328,6 +328,35 @@ def test_isinstance_branch_not_flagged():
     assert lint.lint_file("x.py", serving=False, source=src) == []
 
 
+def test_bad_sync_fixture_caught():
+    with open(os.path.join(FIXTURES, "bad_sync.py")) as f:
+        src = f.read()
+    # OB-SYNC scopes to the step module, so lint under its pseudo-path
+    got = lint.lint_file("serving/step.py", serving=True, source=src)
+    assert _rules(got) == ["OB-SYNC"] * 3
+    msgs = [f.message for f in got if not f.suppressed]
+    assert any("block_until_ready" in m for m in msgs)
+    assert any(".item()" in m for m in msgs)
+    assert any("_decode_step" in m for m in msgs)
+    # the profiling-fence annotation and the generic inline ignore both
+    # suppress, with distinct justifications
+    sup = {f.justification for f in got if f.suppressed}
+    assert sup == {"profiling-fence annotation", "inline ignore"}
+
+
+def test_sync_rule_scoped_to_step_module():
+    src = ("import jax\n"
+           "def drain(x):\n"
+           "    jax.block_until_ready(x)\n"
+           "    return x\n")
+    # a deliberate drain in batching.py (or anywhere else) is not the
+    # step hot path — only step.py carries the async-launch contract
+    assert lint.lint_file("serving/batching.py", serving=True,
+                          source=src) == []
+    assert _rules(lint.lint_file("serving/step.py", serving=True,
+                                 source=src)) == ["OB-SYNC"]
+
+
 def test_live_tree_lint_clean():
     assert [f for f in lint.lint_tree(REPO_ROOT) if not f.suppressed] == []
 

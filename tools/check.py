@@ -37,7 +37,12 @@ def main(argv=None) -> int:
     ap.add_argument("--trace", action="store_true",
                     help="trace auditor (TA-*; jit-traces smoke entries)")
     ap.add_argument("--lint", action="store_true",
-                    help="AST lint over serving/ and models/ (PK-*/PY-*)")
+                    help="AST lint over serving/ and models/ "
+                         "(PK-*/PY-*/OB-SYNC)")
+    ap.add_argument("--obs", action="store_true",
+                    help="observability cross-check (OB-EVENT; replays a "
+                         "tiny fault-laden trace and diffs metrics "
+                         "counters against trace events)")
     ap.add_argument("--allowlist", default=DEFAULT_ALLOWLIST,
                     help="burn-down allowlist JSON (default: %(default)s)")
     ap.add_argument("--show-suppressed", action="store_true")
@@ -49,7 +54,8 @@ def main(argv=None) -> int:
             print(f"{rule:18s} {desc}")
         return 0
 
-    run_all = args.all or not (args.kernels or args.trace or args.lint)
+    run_all = args.all or not (args.kernels or args.trace or args.lint
+                               or args.obs)
     found = []
 
     if run_all or args.kernels:
@@ -72,6 +78,14 @@ def main(argv=None) -> int:
         found.extend(tf)
         print(f"[trace] {len(trace_audit.default_entries())} entry points "
               f"traced; {len(tf)} finding(s)")
+
+    if run_all or args.obs:
+        from repro.analysis import obs_pass
+        of, stats = obs_pass.run_obs_pass()
+        found.extend(of)
+        print(f"[obs] {stats['records']} trace records vs "
+              f"{stats['checks']} paired series "
+              f"({stats['nonzero_series']} nonzero); {len(of)} finding(s)")
 
     allow = findings_mod.Allowlist.load(args.allowlist)
     found = allow.suppress(found)
