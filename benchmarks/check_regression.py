@@ -96,6 +96,15 @@ METRICS: Dict[str, List[Metric]] = {
         ("scenarios.steady.virtual.ttft.p99", "lower", 0.10, 3.0),
         ("scenarios.steady.virtual.tpot.p99", "lower", 0.10, 1.0),
         ("scenarios.overload.virtual.ttft.p99", "lower", 0.15, 8.0),
+        # chunked prefill (DESIGN.md §16): same trace, bucketed vs chunked
+        # servers under the launch-cost clock. Streams must stay bitwise
+        # identical (parity floor), chunked p99 TTFT must stay ahead of
+        # bucketed (ratio floor > 1), and the mixed-step TPOT win must not
+        # silently erode back toward bucketed stall behavior.
+        ("scenarios.longprompt.parity", "higher", 0.0, 1.0),
+        ("scenarios.longprompt.ttft_p99_improvement", "higher", 0.10, 1.0),
+        ("scenarios.longprompt.chunked.virtual.tpot.p99",
+         "lower", 0.15, None),
     ],
     # Chaos gate (DESIGN.md §14): under the seeded FaultPlan every session
     # must end with an explicit finish_reason (zero hung — a hard ceiling),

@@ -43,16 +43,25 @@ from repro import configs
 from repro.obs import export as obs_export
 from repro.obs import trace as obs_trace
 from repro.serving import api, loadgen
+from repro.serving.config import SLOSpec
 
 MAX_LEN, N_SLOTS, BLOCK = 64, 4, 8
 N_BLOCKS = 32                     # same KV budget as e2e's paged scenarios
 
+# longprompt scenario (§16): chunk geometry + the CostClock's launch-cost
+# model. per_position=1/64 makes one full admission bucket (64 positions)
+# cost one virtual second on top of the per-step base — so a bucketed
+# whole-prompt prefill stalls every concurrent stream measurably while
+# chunked admission amortizes the same positions across mixed steps.
+CHUNK, CHUNK_BUDGET = 8, 16
+COST_BASE, COST_PER_POS = 0.25, 1.0 / 64.0
+
 
 def _server(params, cfg, clock, max_queue):
-    return api.StreamingServer(
-        params, cfg, n_slots=N_SLOTS, max_len=MAX_LEN, cache_kind="paged",
-        block_size=BLOCK, n_blocks=N_BLOCKS, max_queue=max_queue,
-        clock=clock)
+    return api.StreamingServer(params, cfg, config=api.ServeConfig(
+        scheduler=api.SchedulerConfig(n_slots=N_SLOTS, max_len=MAX_LEN),
+        cache_kind="paged", block_size=BLOCK, n_blocks=N_BLOCKS,
+        max_queue=max_queue), clock=clock)
 
 
 def _replay_scenario(params, cfg, *, seed: int, n_requests: int,
@@ -77,9 +86,9 @@ def _replay_scenario(params, cfg, *, seed: int, n_requests: int,
         # criterion: the streaming layer adds no scheduling behavior).
         from repro.models import transformer  # noqa: F401  (same deps)
         from repro.serving import batching
-        b = batching.ContinuousBatcher(
-            params, cfg, n_slots=N_SLOTS, max_len=MAX_LEN,
-            cache_kind="paged", block_size=BLOCK, n_blocks=N_BLOCKS)
+        b = batching.ContinuousBatcher(params, cfg, config=api.ServeConfig(
+            scheduler=api.SchedulerConfig(n_slots=N_SLOTS, max_len=MAX_LEN),
+            cache_kind="paged", block_size=BLOCK, n_blocks=N_BLOCKS))
         for tr in trace:
             b.submit(tr.rid, tr.prompt, tr.max_new_tokens)
         base = b.run_to_completion()
@@ -89,6 +98,67 @@ def _replay_scenario(params, cfg, *, seed: int, n_requests: int,
             "session-API outputs diverge from run_to_completion"
         out["parity"] = 1.0
     return out
+
+
+def _longprompt_scenario(params, cfg, *, seed: int, n_requests: int,
+                         rate: float) -> Dict[str, Any]:
+    """Long-prompt + chat decode mix, replayed twice — bucketed vs chunked
+    prefill — under a launch-cost virtual clock (`loadgen.CostClock`).
+
+    The flat StepClock the other scenarios gate on charges a whole-prompt
+    prefill one step like any decode step, which is exactly the
+    head-of-line blocking chunked prefill removes; the cost clock makes
+    that blocking visible while staying deterministic. The same trace
+    replays through both servers and the token streams must be bitwise
+    identical (a prefill chunk is just a fully-accepted verify window) —
+    only the latency profile may differ. ``ttft_p99_improvement`` is the
+    bucketed/chunked p99 TTFT ratio the regression gate holds above 1."""
+    tenants = [
+        loadgen.TenantSpec(
+            "doc", weight=0.4, suffix_len=(40, 49), max_new=(4, 7),
+            slo=SLOSpec(ttft_target_ms=16_000.0, tenant="doc")),
+        loadgen.TenantSpec(
+            "chat", weight=0.6, suffix_len=(4, 9), max_new=(8, 13),
+            slo=SLOSpec(ttft_target_ms=8_000.0, tpot_target_ms=2_000.0,
+                        tenant="chat")),
+    ]
+    trace = loadgen.make_trace(seed=seed, n_requests=n_requests, rate=rate,
+                               tenants=tenants, vocab=cfg.vocab)
+
+    def run_mode(chunked: bool):
+        clock = loadgen.CostClock(base=COST_BASE, per_position=COST_PER_POS)
+        server = api.StreamingServer(params, cfg, config=api.ServeConfig(
+            scheduler=api.SchedulerConfig(
+                n_slots=N_SLOTS, max_len=MAX_LEN, chunked_prefill=chunked,
+                chunk_size=CHUNK, chunk_budget=CHUNK_BUDGET),
+            cache_kind="paged", block_size=BLOCK, n_blocks=N_BLOCKS),
+            clock=clock)
+        result = loadgen.replay(server, trace, clock)
+        server.batcher.pool.check_invariants()
+        assert server.batcher.pool.blocks_in_use == 0, "leaked blocks"
+        out = result.summary()
+        m = server.metrics
+        out["compute_positions"] = m.compute_positions
+        out["mixed_steps"] = m.mixed_steps
+        out["preemptions"] = m.preemptions
+        streams = {r.session_id: list(r.tokens) for r in result.responses}
+        return out, streams
+
+    bucketed, s_b = run_mode(False)
+    chunked, s_c = run_mode(True)
+    assert set(s_b) == set(s_c) and all(s_b[k] == s_c[k] for k in s_b), \
+        "chunked token streams diverge from bucketed (same trace, greedy)"
+    b_p99 = bucketed["virtual"]["ttft"]["p99"]
+    c_p99 = chunked["virtual"]["ttft"]["p99"]
+    return {
+        "trace_fingerprint": loadgen.trace_fingerprint(trace),
+        "rate": rate,
+        "n_requests": n_requests,
+        "parity": 1.0,
+        "bucketed": bucketed,
+        "chunked": chunked,
+        "ttft_p99_improvement": b_p99 / max(c_p99, 1e-9),
+    }
 
 
 def report(full: bool = False, seed: int = 0) -> Dict[str, Any]:
@@ -110,6 +180,14 @@ def report(full: bool = False, seed: int = 0) -> Dict[str, Any]:
         "overload": _replay_scenario(
             params, cfg, seed=seed + 1, n_requests=n_req, rate=2.0,
             max_queue=4, parity=False),
+        # long-prompt + chat mix, bucketed vs chunked prefill under the
+        # launch-cost clock (its own dt model; steady/overload keep the
+        # flat StepClock so their committed baselines stay valid)
+        # rate well above service capacity: queueing delay dominates TTFT,
+        # which is where chunked admission's lower total launch cost (no
+        # bucket padding) and EDF ordering pay off
+        "longprompt": _longprompt_scenario(
+            params, cfg, seed=seed + 2, n_requests=n_req, rate=2.0),
     }
     assert scenarios["steady"]["shed"] == 0
     assert scenarios["steady"]["rejected"] == 0
@@ -121,7 +199,10 @@ def report(full: bool = False, seed: int = 0) -> Dict[str, Any]:
         "seed": seed,
         "config": {"arch": cfg.name, "max_len": MAX_LEN,
                    "n_slots": N_SLOTS, "block": BLOCK,
-                   "n_blocks": N_BLOCKS, "dt_step": 1.0},
+                   "n_blocks": N_BLOCKS, "dt_step": 1.0,
+                   "chunk": CHUNK, "chunk_budget": CHUNK_BUDGET,
+                   "cost_base": COST_BASE,
+                   "cost_per_position": COST_PER_POS},
         "parity": scenarios["steady"].pop("parity"),
         "scenarios": scenarios,
     }
@@ -132,6 +213,16 @@ def run(full: bool = False, seed: int = 0):
     rep = report(full, seed)
     rows = []
     for name, s in rep["scenarios"].items():
+        if name == "longprompt":
+            b, c = s["bucketed"]["virtual"], s["chunked"]["virtual"]
+            rows.append(
+                f"serve_longprompt,0,"
+                f"ttft_p99_bucketed={b['ttft']['p99']:.2f};"
+                f"ttft_p99_chunked={c['ttft']['p99']:.2f};"
+                f"improvement={s['ttft_p99_improvement']:.2f}x;"
+                f"tpot_p99_chunked={c['tpot']['p99']:.2f};"
+                f"mixed_steps={s['chunked']['mixed_steps']}")
+            continue
         v = s["virtual"]
         rows.append(
             f"serve_{name},0,"
@@ -169,11 +260,16 @@ def main() -> None:
             json.dump(rep, f, indent=1, sort_keys=True)
         st = rep["scenarios"]["steady"]["virtual"]
         ov = rep["scenarios"]["overload"]["virtual"]
+        lp = rep["scenarios"]["longprompt"]
         print(f"wrote {args.json}: steady ttft p50/p99 = "
               f"{st['ttft']['p50']:.1f}/{st['ttft']['p99']:.2f} steps, "
               f"tpot p99 = {st['tpot']['p99']:.2f}; overload ttft p99 = "
               f"{ov['ttft']['p99']:.2f} "
-              f"({rep['scenarios']['overload']['shed']} shed)")
+              f"({rep['scenarios']['overload']['shed']} shed); "
+              f"longprompt chunked ttft p99 "
+              f"{lp['bucketed']['virtual']['ttft']['p99']:.2f} -> "
+              f"{lp['chunked']['virtual']['ttft']['p99']:.2f} "
+              f"({lp['ttft_p99_improvement']:.2f}x)")
     else:
         for row in run(full, args.seed):
             print(row)

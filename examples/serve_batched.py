@@ -45,6 +45,9 @@ ap.add_argument("--block-size", type=int, default=8)
 ap.add_argument("--n-blocks", type=int, default=None)
 ap.add_argument("--spec-k", type=int, default=0,
                 help="speculative decoding drafts per step (needs --paged)")
+ap.add_argument("--chunked", action="store_true",
+                help="chunked prefill mixed steps (needs --paged)")
+ap.add_argument("--chunk-size", type=int, default=8)
 ap.add_argument("--cancel-after", type=int, default=None, metavar="N",
                 help="cancel the last session after N engine steps "
                      "(demo of mid-stream cancellation)")
@@ -55,10 +58,14 @@ if cfg.n_codebooks:
     raise SystemExit("audio archs need codebook prompts; use the engine API")
 params = transformer.init_model(jax.random.PRNGKey(0), cfg)
 
-server = api.StreamingServer(
-    params, cfg, n_slots=args.slots, max_len=args.max_len, eos_id=args.eos,
+server = api.StreamingServer(params, cfg, config=api.ServeConfig(
+    scheduler=api.SchedulerConfig(
+        n_slots=args.slots, max_len=args.max_len, eos_id=args.eos,
+        chunked_prefill=args.chunked, chunk_size=args.chunk_size,
+        chunk_budget=2 * args.chunk_size),
     cache_kind="paged" if args.paged else "dense",
-    block_size=args.block_size, n_blocks=args.n_blocks, spec_k=args.spec_k)
+    block_size=args.block_size, n_blocks=args.n_blocks,
+    spec_k=args.spec_k))
 
 t0 = time.time()
 
@@ -126,6 +133,10 @@ if args.paged:
           f"peak_active={m.peak_active_slots}  preemptions={m.preemptions}")
     b.pool.check_invariants()
     assert b.pool.blocks_in_use == 0, "leaked KV blocks"
+if args.chunked:
+    print(f"chunked prefill (chunk={args.chunk_size}): "
+          f"mixed_steps={m.mixed_steps}  chunk_tokens={m.chunk_tokens}  "
+          f"compute_positions={m.compute_positions}")
 if args.spec_k:
     print(f"speculative (k={args.spec_k}): drafted={m.drafted} "
           f"accepted={m.accepted} accept_rate={m.accept_rate:.2f}  "

@@ -63,10 +63,11 @@ for ev in plan.events:
 
 def serve(fault_plan):
     clock = loadgen.StepClock(dt=1.0)
-    server = api.StreamingServer(
-        params, cfg, n_slots=args.slots, max_len=args.max_len,
-        cache_kind="paged", block_size=8, clock=clock,
-        fault_plan=fault_plan)
+    server = api.StreamingServer(params, cfg, config=api.ServeConfig(
+        scheduler=api.SchedulerConfig(n_slots=args.slots,
+                                      max_len=args.max_len),
+        cache_kind="paged", block_size=8),
+        clock=clock, fault_plan=fault_plan)
     for i, prompt in enumerate(prompts):
         server.submit(api.GenerationRequest(
             prompt=prompt, max_new_tokens=args.max_new,

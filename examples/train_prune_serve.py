@@ -21,6 +21,7 @@ from repro.core import pruning, tiled_csl
 from repro.models import nn
 from repro.models.config import ModelConfig
 from repro.serving import batching
+from repro.serving.config import SchedulerConfig, ServeConfig
 from repro.training import data as data_mod
 from repro.training import optimizer as opt_mod
 from repro.training import train_loop
@@ -105,7 +106,8 @@ csl = [l for l in jax.tree.leaves(
 print(f"Tiled-CSL: {sum(t.nbytes_dense for t in csl) / 2 ** 20:.1f} MiB "
       f"-> {sum(t.nbytes_sparse for t in csl) / 2 ** 20:.1f} MiB weights")
 
-b = batching.ContinuousBatcher(sparse_params, cfg, n_slots=4, max_len=64)
+b = batching.ContinuousBatcher(sparse_params, cfg, config=ServeConfig(
+    scheduler=SchedulerConfig(n_slots=4, max_len=64)))
 rng = np.random.default_rng(1)
 for uid in range(8):
     b.submit(uid, rng.integers(0, cfg.vocab, 8).astype(np.int64), 12)

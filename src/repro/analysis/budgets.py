@@ -69,6 +69,10 @@ COMPILE_BUDGETS = {
     "engine_decode_step": 1,
     "batcher_verify": 1,
     "engine_verify_step": 1,
+    # chunked-prefill mixed step (§16): one static [n_slots, chunk_size]
+    # launch shape regardless of the per-step chunk/decode mix
+    "batcher_mixed": 1,
+    "engine_mixed_step": 1,
     "spmm_dispatch": 1,
 }
 

@@ -34,6 +34,9 @@ PAIRED_SERIES: Tuple[Tuple[str, Tuple[str, str]], ...] = (
     ("cancelled", ("sched", "cancel")),
     ("degradation_transitions", ("sched", "degradation")),
     ("step_retries", ("fault", "retry")),
+    # chunked-prefill mixed steps (§16): one "sched"/"chunk" event per
+    # mixed launch (0 == 0 in non-chunked scenarios)
+    ("mixed_steps", ("sched", "chunk")),
 )
 
 

@@ -253,6 +253,39 @@ def _build_verify() -> Tuple[Callable, List[tuple]]:
     return fn, calls
 
 
+def _build_mixed() -> Tuple[Callable, List[tuple]]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer
+    from repro.serving import engine
+
+    cfg, params = _smoke_model()
+    block = 8
+    cache = transformer.init_paged_cache(cfg, 10, block)
+    B, W = 2, 4
+    base_key = jax.random.PRNGKey(0)
+
+    def fn(tokens, pos_vec, tables, n_tokens, uids, counts):
+        # the chunked-prefill mixed step (§16): a prefill-chunk slot and a
+        # decode slot share one launch; sampled path so the folded-key
+        # machinery is in the audited trace
+        last, cache2 = engine.prefill_chunk_into_pages(
+            params, cache, tokens, pos_vec, tables, n_tokens, cfg)
+        keys = engine.fold_slot_keys(base_key, uids, counts)
+        tok = engine.sample_per_slot(last, keys, temperature=0.7, top_k=0)
+        return tok, cache2
+
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, W), 0, cfg.vocab)
+    calls = [(toks,
+              jnp.asarray([0, 9], jnp.int32),
+              jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.int32),
+              jnp.asarray([4, 1], jnp.int32),
+              jnp.asarray([7, 9], jnp.uint32),
+              jnp.asarray([0, 8], jnp.uint32))]
+    return fn, calls
+
+
 def _build_spmm() -> Tuple[Callable, List[tuple]]:
     import jax.numpy as jnp
     import numpy as np
@@ -278,6 +311,7 @@ def default_entries() -> List[EntryPoint]:
                    {"max_len": _MAX_LEN}),
         EntryPoint("engine_decode_step", _build_decode),
         EntryPoint("engine_verify_step", _build_verify),
+        EntryPoint("engine_mixed_step", _build_mixed),
         EntryPoint("spmm_dispatch", _build_spmm),
     ]
 

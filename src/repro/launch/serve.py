@@ -34,6 +34,7 @@ the XLA reference path has no schedulable launches to record).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -48,6 +49,7 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import profile as obs_profile
 from repro.obs import trace as obs_trace
 from repro.serving import api, budget, faults, loadgen, speculative
+from repro.serving.config import SLOSpec, ServeConfig
 from repro.serving.scheduler import latency_summary
 
 _EXAMPLES = """\
@@ -114,6 +116,25 @@ def main() -> None:
                          "the session with finish_reason='deadline'")
     ap.add_argument("--ttft-deadline-ms", type=float, default=None,
                     help="first-token latency budget per request")
+    ap.add_argument("--chunked", action="store_true",
+                    help="chunked prefill: stream prompts into their slots "
+                         "chunk-size positions per mixed step instead of "
+                         "bucketed whole-prompt admission (DESIGN.md §16; "
+                         "requires --paged)")
+    ap.add_argument("--chunk-size", type=int, default=16,
+                    help="prompt positions per prefill chunk (--chunked)")
+    ap.add_argument("--chunk-budget", type=int, default=32,
+                    help="max prefill positions granted per mixed step "
+                         "across all slots (--chunked)")
+    ap.add_argument("--ttft-target-ms", type=float, default=None,
+                    help="soft first-token SLO target per request: drives "
+                         "EDF chunk ordering and attainment accounting "
+                         "(never kills a request — see --ttft-deadline-ms)")
+    ap.add_argument("--tpot-target-ms", type=float, default=None,
+                    help="soft per-token SLO target: engages the decode "
+                         "TPOT throttle on prefill grants (--chunked)")
+    ap.add_argument("--priority", type=int, default=0,
+                    help="SLO priority class (higher = scheduled first)")
     ap.add_argument("--fault-plan", default=None, metavar="PATH",
                     help="JSON FaultPlan (serving.faults) injected into the "
                          "run — chaos replay from a file")
@@ -211,29 +232,36 @@ def main() -> None:
     if plan is not None:
         print(f"fault plan: {len(plan)} events, "
               f"fingerprint {plan.fingerprint()[:12]}")
-    server_kwargs = dict(
-        n_slots=args.slots, max_len=args.max_len,
-        cache_kind="paged" if args.paged else "dense",
-        block_size=args.block_size, n_blocks=n_blocks,
-        backend=args.backend,
-        temperature=args.temperature, top_k=args.top_k, seed=args.seed,
-        spec_k=args.spec_k, drafter=drafter, fault_plan=plan)
+    config = ServeConfig.from_flags(args)
+    if n_blocks != args.n_blocks:        # pool sized from --hbm-budget-gb
+        config = dataclasses.replace(config, n_blocks=n_blocks).validate()
+    live_kwargs = dict(drafter=drafter, fault_plan=plan)
     resume = None
     if args.snapshot_dir:
         resume = ft.SnapshotStore(args.snapshot_dir).latest_path()
     if resume is not None:
         server = api.StreamingServer.restore(
-            args.snapshot_dir, params, cfg, max_queue=args.max_queue,
-            **server_kwargs)
+            args.snapshot_dir, params, cfg, config=config, **live_kwargs)
         print(f"restored {len(server.live_sessions())} in-flight "
               f"session(s) from {resume}")
     else:
-        server = api.StreamingServer(params, cfg, max_queue=args.max_queue,
-                                     **server_kwargs)
+        server = api.StreamingServer(params, cfg, config=config,
+                                     **live_kwargs)
+    # Per-request latency contract: soft targets (or a priority class)
+    # promote the flat deadline flags into one typed SLOSpec; without
+    # them the flags keep their legacy flat-field path.
+    slo = None
+    if (args.ttft_target_ms is not None or args.tpot_target_ms is not None
+            or args.priority):
+        slo = SLOSpec(ttft_target_ms=args.ttft_target_ms,
+                      tpot_target_ms=args.tpot_target_ms,
+                      priority=args.priority,
+                      ttft_deadline_ms=args.ttft_deadline_ms,
+                      deadline_ms=args.deadline_ms).validate()
     ttft_dl = (args.ttft_deadline_ms / 1e3
-               if args.ttft_deadline_ms is not None else None)
+               if slo is None and args.ttft_deadline_ms is not None else None)
     total_dl = (args.deadline_ms / 1e3
-                if args.deadline_ms is not None else None)
+                if slo is None and args.deadline_ms is not None else None)
     b = server.batcher
     if args.profile_kernels and args.trace_out:
         b.stepper.profile = True  # wall_us on step spans (fenced, host-side)
@@ -269,7 +297,7 @@ def main() -> None:
             tenants=[loadgen.TenantSpec(
                 "cli", suffix_len=(lo, hi),
                 max_new=(args.max_new, args.max_new + 1),
-                ttft_deadline=ttft_dl, deadline=total_dl)])
+                ttft_deadline=ttft_dl, deadline=total_dl, slo=slo)])
         result = loadgen.replay(server, trace,
                                 loadgen.StepClock(dt=1.0))
         responses, n_shed = result.responses, len(result.shed)
@@ -280,7 +308,7 @@ def main() -> None:
             server.submit(api.GenerationRequest(
                 prompt=rng.integers(0, cfg.vocab, plen).astype(np.int64),
                 max_new_tokens=args.max_new,
-                ttft_deadline_s=ttft_dl, deadline_s=total_dl))
+                ttft_deadline_s=ttft_dl, deadline_s=total_dl, slo=slo))
         responses = server.run_until_drained()
     dt = time.time() - t0
     done = {r.session_id: r.tokens for r in responses}
@@ -308,6 +336,15 @@ def main() -> None:
               f"peak_active={m.peak_active_slots} "
               f"preemptions={m.preemptions} "
               f"pool={b.pool.blocks_in_use}/{b.pool.n_blocks} in use")
+    if args.chunked:
+        print(f"chunked: mixed_steps={m.mixed_steps} "
+              f"chunk_tokens={m.chunk_tokens} "
+              f"compute_positions={m.compute_positions}")
+    if m.slo_attainment:
+        for tenant, c in sorted(m.slo_attainment.items()):
+            print(f"slo[{tenant}]: ttft {c['ttft_ok']}/"
+                  f"{c['ttft_ok'] + c['ttft_miss']} met, "
+                  f"tpot {c['tpot_ok']}/{c['tpot_ok'] + c['tpot_miss']} met")
     if args.spec_k:
         print(f"speculative (k={args.spec_k}, {args.drafter}): "
               f"drafted={m.drafted} accepted={m.accepted} "

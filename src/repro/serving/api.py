@@ -45,6 +45,8 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 from repro.serving.batching import ContinuousBatcher
+from repro.serving.config import (SchedulerConfig, ServeConfig,
+                                  SLOAttainment, SLOSpec)
 
 
 class Backpressure(RuntimeError):
@@ -95,7 +97,12 @@ class GenerationRequest:
     streams tokens as they are generated. The deadlines are latency
     budgets on the server's clock: miss the TTFT budget before the first
     token, or the total budget at any point, and the session ends with
-    ``finish_reason="deadline"`` (tokens generated so far are kept)."""
+    ``finish_reason="deadline"`` (tokens generated so far are kept).
+
+    ``slo`` is the typed superset (DESIGN.md §16): soft TTFT/TPOT targets
+    that steer chunked-prefill scheduling and are scored per class, plus
+    the same hard deadlines. Give either ``slo`` or the legacy flat
+    deadline fields, not both — mixing is rejected before any state."""
 
     prompt: np.ndarray
     max_new_tokens: int
@@ -103,17 +110,22 @@ class GenerationRequest:
     on_token: Optional[Callable[["TokenEvent"], None]] = None
     ttft_deadline_s: Optional[float] = None
     deadline_s: Optional[float] = None
+    slo: Optional[SLOSpec] = None
 
 
 @dataclasses.dataclass
 class TokenEvent:
     """One streamed token. ``index`` counts from 0 within the session;
-    ``finish_reason`` is non-empty exactly on the session's last event."""
+    ``finish_reason`` is non-empty exactly on the session's last event,
+    and ``attainment`` rides along with it when the request carried SLO
+    targets (so streaming clients see met/missed without waiting for the
+    response object)."""
 
     session_id: str
     token: int
     index: int
     finish_reason: str = ""
+    attainment: Optional[SLOAttainment] = None
 
 
 @dataclasses.dataclass
@@ -122,7 +134,8 @@ class GenerationResponse:
     token included, matching `engine.generate`), why it stopped, and its
     wall-clock latencies on the server's clock. ``ttft_s`` is None for a
     request cancelled before its first token; ``tpot_s`` needs at least
-    two tokens."""
+    two tokens. ``attainment`` scores those latencies against the
+    request's SLO targets (None when the request carried none)."""
 
     session_id: str
     tokens: List[int]
@@ -131,6 +144,8 @@ class GenerationResponse:
     finish_t: float
     ttft_s: Optional[float]
     tpot_s: Optional[float]
+    slo: Optional[SLOSpec] = None
+    attainment: Optional[SLOAttainment] = None
 
 
 @dataclasses.dataclass
@@ -146,22 +161,33 @@ class _Session:
 class StreamingServer:
     """Session façade over one :class:`ContinuousBatcher`.
 
-    ``max_queue`` bounds the sessions waiting for admission (backpressure
-    trips beyond it; None = unbounded). All batcher keyword arguments pass
-    through, so cache kind, sampling, speculation, and the latency clock
-    are configured in one place::
+    Configuration arrives as one typed :class:`ServeConfig` (DESIGN.md
+    §16); live collaborators (drafter, clock, fault plan, degradation
+    policy, tracer) stay keyword arguments and pass through to the
+    batcher. ``max_queue`` bounds the sessions waiting for admission
+    (backpressure trips beyond it; None = unbounded) — it lives on
+    :class:`ServeConfig` but an explicit keyword still overrides::
 
-        server = StreamingServer(params, cfg, n_slots=4, max_len=128,
-                                 cache_kind="paged", max_queue=16)
+        server = StreamingServer(params, cfg, config=ServeConfig(
+            scheduler=SchedulerConfig(n_slots=4, max_len=128),
+            cache_kind="paged", max_queue=16))
         sid = server.submit(GenerationRequest(prompt, 32, on_token=print))
         while server.busy:
             for resp in server.step():
                 ...
+
+    The legacy flat keyword form (``n_slots=4, cache_kind="paged"``)
+    still works through the batcher's deprecation shim.
     """
 
-    def __init__(self, params, cfg, *, max_queue: Optional[int] = None,
+    def __init__(self, params, cfg, *,
+                 config: Optional[ServeConfig] = None,
+                 max_queue: Optional[int] = None,
                  **batcher_kwargs):
-        self.batcher = ContinuousBatcher(params, cfg, **batcher_kwargs)
+        self.batcher = ContinuousBatcher(params, cfg, config=config,
+                                         **batcher_kwargs)
+        if max_queue is None and config is not None:
+            max_queue = config.max_queue
         self.max_queue = max_queue
         self._sessions: Dict[str, _Session] = {}   # live only
         self._by_uid: Dict[int, _Session] = {}
@@ -200,6 +226,16 @@ class StreamingServer:
                 f"session id {sid!r} is still live; cancel it or pick "
                 f"another id")
         sched = self.batcher.sched
+        if request.slo is not None:
+            if (request.ttft_deadline_s is not None
+                    or request.deadline_s is not None):
+                raise RequestRejected(
+                    "give either slo=SLOSpec(...) or the legacy flat "
+                    "deadline fields, not both")
+            try:
+                request.slo.validate()
+            except ValueError as e:
+                raise RequestRejected(str(e)) from e
         try:
             sched.validate_request(request.prompt, request.max_new_tokens)
         except ValueError as e:
@@ -220,7 +256,7 @@ class StreamingServer:
             req = self.batcher.submit(
                 uid, request.prompt, request.max_new_tokens,
                 ttft_deadline_s=request.ttft_deadline_s,
-                deadline_s=request.deadline_s)
+                deadline_s=request.deadline_s, slo=request.slo)
         except ValueError as e:
             raise RequestRejected(str(e)) from e
         self._next_uid += 1
@@ -300,6 +336,7 @@ class StreamingServer:
     @classmethod
     def restore(cls, directory: str, params, cfg, *,
                 on_token: Optional[Callable[[TokenEvent], None]] = None,
+                config: Optional[ServeConfig] = None,
                 max_queue: Optional[int] = None,
                 **batcher_kwargs) -> "StreamingServer":
         """Rebuild a server from the newest snapshot in ``directory`` —
@@ -315,7 +352,8 @@ class StreamingServer:
         payload = SnapshotStore(directory).latest()
         if payload is None:
             raise FileNotFoundError(f"no snapshot in {directory!r}")
-        server = cls(params, cfg, max_queue=max_queue, **batcher_kwargs)
+        server = cls(params, cfg, config=config, max_queue=max_queue,
+                     **batcher_kwargs)
         clock = server.batcher.sched.clock
         if "clock_t" in payload and hasattr(clock, "t"):
             clock.t = float(payload["clock_t"])
@@ -340,10 +378,19 @@ class StreamingServer:
         n = len(req.generated)
         for i in range(sess.delivered, n):
             last = req.done and i == n - 1
+            att = self._attainment(req) if last else None
             sess.on_token(TokenEvent(
                 session_id=sess.session_id, token=req.generated[i],
-                index=i, finish_reason=req.finish_reason if last else ""))
+                index=i, finish_reason=req.finish_reason if last else "",
+                attainment=att))
         sess.delivered = n
+
+    @staticmethod
+    def _attainment(req) -> Optional[SLOAttainment]:
+        slo = getattr(req, "slo", None)
+        if slo is None:
+            return None
+        return slo.attainment(req.ttft_s, req.tpot_s)
 
     def _close(self, sess: _Session) -> GenerationResponse:
         req = sess.req
@@ -352,4 +399,5 @@ class StreamingServer:
         return GenerationResponse(
             session_id=sess.session_id, tokens=list(req.generated),
             finish_reason=req.finish_reason, submit_t=req.submit_t,
-            finish_t=req.finish_t, ttft_s=req.ttft_s, tpot_s=req.tpot_s)
+            finish_t=req.finish_t, ttft_s=req.ttft_s, tpot_s=req.tpot_s,
+            slo=req.slo, attainment=self._attainment(req))

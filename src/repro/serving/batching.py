@@ -71,7 +71,8 @@ index), so streams are independent of admission order and preemption.
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+import warnings
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -79,6 +80,7 @@ from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.obs.trace import Tracer, get_tracer
 from repro.serving import engine, faults, speculative
+from repro.serving.config import ServeConfig, SLOSpec
 from repro.serving.scheduler import (DegradationPolicy,  # noqa: F401
                                      Request, Scheduler, SchedulerMetrics)
 from repro.serving.step import DeviceStepper
@@ -115,53 +117,68 @@ class ContinuousBatcher:
     ``clock`` injects the wall-clock source for the per-request latency
     stamps (default ``time.monotonic``; `serving.loadgen.StepClock` makes
     replayed traces deterministic).
+
+    Configuration (DESIGN.md §16): pass ``config=ServeConfig(...)``. The
+    legacy flat keyword set still works — the facade maps it onto a
+    ServeConfig via ``ServeConfig.from_kwargs`` and emits a
+    ``DeprecationWarning``. Live collaborators (``drafter``, ``clock``,
+    ``fault_plan``, ``degradation``, ``tracer``) stay explicit arguments.
     """
 
-    def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
-                 max_len: int, backend: str = "auto",
-                 eos_id: Optional[int] = None,
-                 stop_ids: Sequence[int] = (),
-                 admit_k: Optional[int] = None, min_bucket: int = 8,
-                 request_history: int = 1024,
-                 cache_kind: str = "dense", block_size: int = 16,
-                 n_blocks: Optional[int] = None, reserve_blocks: int = 1,
-                 prefix_sharing: bool = True,
-                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 spec_k: int = 0, drafter=None,
+    def __init__(self, params, cfg: ModelConfig, *,
+                 config: Optional[ServeConfig] = None,
+                 drafter=None,
                  clock: Optional[Callable[[], float]] = None,
                  fault_plan=None, degradation=None,
-                 max_step_retries: int = 4, retry_backoff_s: float = 0.25,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None, **legacy):
+        if config is None:
+            if legacy:
+                warnings.warn(
+                    "flat ContinuousBatcher/StreamingServer kwargs are "
+                    "deprecated; pass config=ServeConfig(...) "
+                    "(serving/config.py)", DeprecationWarning, stacklevel=3)
+            config = ServeConfig.from_kwargs(**legacy)
+        elif legacy:
+            raise TypeError(f"pass config=ServeConfig(...) OR legacy "
+                            f"kwargs, not both: {sorted(legacy)}")
+        config.validate()
+        sc = config.scheduler
         if cfg.n_codebooks:
             raise ValueError("codebook (audio) archs need [n_cb, S] prompts; "
                              "drive engine.generate directly")
-        if cache_kind not in ("dense", "paged"):
-            raise ValueError(f"cache_kind must be dense|paged, {cache_kind!r}")
+        self.config = config
         self.params = params
         self.cfg = cfg
-        self.n_slots = n_slots
-        self.max_len = max_len
-        self.backend = backend
-        self.paged = cache_kind == "paged"
-        self.temperature = float(temperature)
-        self.top_k = int(top_k)
-        stop = frozenset(([] if eos_id is None else [int(eos_id)])
-                         + [int(t) for t in stop_ids])
-        self.admit_k = max(1, min(admit_k or min(n_slots, 4), n_slots))
+        self.n_slots = sc.n_slots
+        self.max_len = sc.max_len
+        self.backend = config.backend
+        self.paged = config.cache_kind == "paged"
+        self.temperature = float(config.temperature)
+        self.top_k = int(config.top_k)
+        stop = frozenset(([] if sc.eos_id is None else [int(sc.eos_id)])
+                         + [int(t) for t in sc.stop_ids])
+        self.admit_k = max(1, min(sc.admit_k or min(sc.n_slots, 4),
+                                  sc.n_slots))
         # Recurrent state (ssm/rglru) cannot absorb pad tokens — bucket
         # padding is exact only for pure-attention stacks. Others degrade to
         # exact-length "buckets" (one compile per distinct length, as before
         # this scheduler existed — never worse, attention archs far better).
         self._pure_attn = all(cfg.layer_kind(i) == "attn"
                               for i in range(cfg.n_layers))
-        buckets = (engine.length_buckets(max_len, min_bucket)
+        buckets = (engine.length_buckets(sc.max_len, sc.min_bucket)
                    if self._pure_attn else None)
         # Ring length for sliding-window configs (positions live at
         # ``pos % ring_len``; None for ordinary causal stacks).
-        self.ring_len = (min(max_len, cfg.local_window)
+        self.ring_len = (min(sc.max_len, cfg.local_window)
                          if cfg.local_window is not None else None)
-        self.spec_k = int(spec_k)
+        self.spec_k = int(config.spec_k)
         self.drafter = drafter
+        self.chunked = bool(sc.chunked_prefill)
+        if self.chunked and self.ring_len is not None:
+            raise ValueError(
+                "chunked_prefill does not support sliding-window (ring) "
+                "stacks: chunk windows assume monotone cache positions; "
+                "use bucketed admission for this arch")
         if self.spec_k:
             if not self.paged:
                 raise ValueError(
@@ -174,14 +191,15 @@ class ContinuousBatcher:
                     f"window ring ({self.ring_len}); lower spec_k")
             if self.drafter is None:
                 self.drafter = speculative.NgramDrafter()
+        n_blocks = config.n_blocks
         if self.paged:
-            self.block_size = block_size
+            self.block_size = config.block_size
             self.max_blocks = transformer.paged_blocks_per_seq(
-                cfg, max_len, block_size)
+                cfg, sc.max_len, config.block_size)
             if n_blocks is None:
-                n_blocks = n_slots * self.max_blocks   # dense byte-equivalent
-        self.max_step_retries = int(max_step_retries)
-        self.retry_backoff_s = float(retry_backoff_s)
+                n_blocks = sc.n_slots * self.max_blocks  # dense byte-equiv
+        self.max_step_retries = int(config.max_step_retries)
+        self.retry_backoff_s = float(config.retry_backoff_s)
         self.faults = (fault_plan if isinstance(fault_plan,
                                                 faults.FaultInjector)
                        else faults.FaultInjector(fault_plan)
@@ -190,21 +208,28 @@ class ContinuousBatcher:
         if self.faults is not None:
             self.faults.tracer = self.tracer    # one timeline per server
         self.sched = Scheduler(
-            n_slots=n_slots, max_len=max_len, stop_ids=stop,
+            n_slots=sc.n_slots, max_len=sc.max_len, stop_ids=stop,
             admit_k=self.admit_k, buckets=buckets, ring_len=self.ring_len,
-            paged=self.paged, block_size=block_size, n_blocks=n_blocks,
+            paged=self.paged, block_size=config.block_size,
+            n_blocks=n_blocks,
             max_blocks=self.max_blocks if self.paged else 0,
-            reserve_blocks=reserve_blocks, prefix_sharing=prefix_sharing,
-            request_history=request_history, spec_k=self.spec_k,
+            reserve_blocks=sc.reserve_blocks,
+            prefix_sharing=config.prefix_sharing,
+            request_history=sc.request_history, spec_k=self.spec_k,
             drafter=self.drafter, sampled=self.temperature != 0.0,
+            chunked=self.chunked, chunk_size=sc.chunk_size,
+            chunk_budget=sc.chunk_budget,
             clock=clock, degradation=degradation, tracer=self.tracer)
         self.stepper = DeviceStepper(
-            params, cfg, n_slots=n_slots, max_len=max_len, backend=backend,
+            params, cfg, n_slots=sc.n_slots, max_len=sc.max_len,
+            backend=config.backend,
             physical_blocks=(self.sched.pool.physical_blocks
                              if self.paged else None),
-            block_size=block_size, ring_len=self.ring_len,
-            temperature=temperature, top_k=top_k, seed=seed,
-            spec_k=self.spec_k, faults=self.faults, tracer=self.tracer)
+            block_size=config.block_size, ring_len=self.ring_len,
+            temperature=config.temperature, top_k=config.top_k,
+            seed=config.seed, spec_k=self.spec_k,
+            chunk_size=sc.chunk_size if self.chunked else 0,
+            faults=self.faults, tracer=self.tracer)
 
     # -- delegation: the monolith's introspection surface -------------------
     @property
@@ -276,10 +301,11 @@ class ContinuousBatcher:
     # -- public API ---------------------------------------------------------
     def submit(self, uid: int, prompt: np.ndarray, max_new_tokens: int, *,
                ttft_deadline_s: Optional[float] = None,
-               deadline_s: Optional[float] = None) -> Request:
+               deadline_s: Optional[float] = None,
+               slo: Optional[SLOSpec] = None) -> Request:
         return self.sched.submit(uid, prompt, max_new_tokens,
                                  ttft_deadline_s=ttft_deadline_s,
-                                 deadline_s=deadline_s)
+                                 deadline_s=deadline_s, slo=slo)
 
     def cancel(self, uid: int) -> Optional[Request]:
         """Cancel a live request in any state (queued, active, preempted);
@@ -335,21 +361,32 @@ class ContinuousBatcher:
         sched.expire_deadlines(finished)
         sched.update_degradation()
         t0 = time.monotonic()
-        while not sched.shedding:
-            plan = sched.plan_admission()
-            if plan is None:
-                break
-            logits = self._launch("prefill", lambda: self.stepper.prefill(
-                plan.tokens, plan.targets, plan.lens))
-            nxt, ok = self.stepper.sample_admitted(logits, plan.uids,
-                                                   plan.counts)
-            sched.commit_admission(plan, nxt, finished, ok=ok)
+        if self.chunked:
+            # §16 admission: slot assignment + block mapping only — the
+            # prompt K/V streams in through the mixed step's chunks below
+            if not sched.shedding:
+                sched.admit_chunked()
+        else:
+            while not sched.shedding:
+                plan = sched.plan_admission()
+                if plan is None:
+                    break
+                logits = self._launch(
+                    "prefill", lambda: self.stepper.prefill(
+                        plan.tokens, plan.targets, plan.lens))
+                m.compute_positions += plan.tokens.size
+                nxt, ok = self.stepper.sample_admitted(logits, plan.uids,
+                                                       plan.counts)
+                sched.commit_admission(plan, nxt, finished, ok=ok)
         m.admit_time_s += time.monotonic() - t0
         staged: Dict[int, np.ndarray] = {}
+        mixed_plan = None
         if self.paged:
             # Growth / copy-on-write / preemption happen before the step,
             # so the jitted decode sees fully-valid tables.
-            if self.spec_k and sched.effective_spec_k:
+            if self.chunked:
+                mixed_plan, copies = sched.stage_mixed()
+            elif self.spec_k and sched.effective_spec_k:
                 staged, copies = sched.stage_spec()
             else:
                 copies = sched.prepare_decode()
@@ -365,11 +402,33 @@ class ContinuousBatcher:
             self._trace_step_end(m, 0, len(finished))
             return finished
         t0 = time.monotonic()
-        if self.spec_k and any(len(staged.get(s, ())) for s in active):
+        if mixed_plan is not None and mixed_plan.chunks:
+            tok, ok = self._launch("mixed", lambda: self.stepper.mixed(
+                mixed_plan.tokens, sched.pos, sched.table_arr,
+                mixed_plan.n_tokens, mixed_plan.uids, mixed_plan.counts))
+            m.compute_positions += mixed_plan.tokens.size
+            m.mixed_steps += 1
+            tr = self.tracer
+            if tr.enabled:
+                # paired with the mixed_steps counter (obs pass OB-EVENT)
+                tr.event("sched", "chunk", "scheduler",
+                         slots=len(mixed_plan.chunks),
+                         tokens=int(sum(mixed_plan.chunks.values())))
+            for s in mixed_plan.decode_slots + list(mixed_plan.chunks):
+                if not ok[s]:                    # non-finite logits: contain
+                    sched.quarantine_slot(s, finished)
+            good = [s for s in mixed_plan.decode_slots if ok[s]]
+            if good:
+                sched.commit_decode(good, tok, finished)
+            sched.commit_chunks(
+                {s: n for s, n in mixed_plan.chunks.items() if ok[s]},
+                tok, finished)
+        elif self.spec_k and any(len(staged.get(s, ())) for s in active):
             vb = sched.build_verify(active, staged)
             tgt, n_acc = self._launch("verify", lambda: self.stepper.verify(
                 vb.tokens, sched.pos, sched.table_arr, vb.draft_lens,
                 vb.uids, vb.counts))
+            m.compute_positions += vb.tokens.size
             sched.commit_verify(active, tgt, n_acc, finished)
         else:
             # No drafts anywhere (or spec off): ordinary one-token decode —
@@ -379,6 +438,7 @@ class ContinuousBatcher:
             nxt, ok = self._launch("decode", lambda: self.stepper.decode(
                 sched.last_token, sched.pos,
                 sched.table_arr if self.paged else None, uids, counts))
+            m.compute_positions += self.n_slots
             good = [s for s in active if ok[s]]
             for s in active:
                 if not ok[s]:                    # non-finite logits: contain

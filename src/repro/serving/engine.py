@@ -205,6 +205,49 @@ def verify_step(params, cache, tokens: jax.Array, pos_vec: jax.Array,
     return tgt, n_accept, cache
 
 
+def prefill_chunk_into_pages(params, cache, tokens: jax.Array,
+                             pos_vec: jax.Array, tables: jax.Array,
+                             n_tokens: jax.Array, cfg: ModelConfig, *,
+                             ring_len: Optional[int] = None,
+                             backend: str = "auto"
+                             ) -> Tuple[jax.Array, Any]:
+    """Mixed prefill-chunk/decode step over the paged cache (DESIGN.md §16).
+
+    One fixed-shape launch carries every slot through the verify-window
+    machinery of §11 — a prefill chunk is simply a *fully accepted* window:
+
+    tokens:   [B, W] — a prefill-chunk slot's next ``n_tokens[b]`` resume
+              tokens (positions ``pos_vec[b] .. pos_vec[b]+n-1``); a decode
+              slot's committed last token in column 0 (``n_tokens[b]=1``);
+              an idle slot is all padding (``n_tokens[b]=0``).
+    pos_vec:  [B] absolute position of window column 0 (= the slot's
+              chunk cursor, or its decode position)
+    tables:   [B, blocks_per_seq] paged block tables
+    n_tokens: [B] real window columns per slot; every real column's K/V is
+              committed, padding columns land in the trash block.
+
+    Returns (last [B, V], cache): ``last[b]`` is the logit row after window
+    prefix ``0..n_tokens[b]-1`` — the next-token distribution for a decode
+    slot or a slot whose final chunk just completed (garbage for idle or
+    mid-prefill slots; the scheduler ignores it there).  This is the
+    paper's roofline move: decode-step GEMMs grow from N = B tokens to
+    N = B·W positions per launch, amortizing the same LSCD weight traffic.
+    """
+    B, W = tokens.shape
+    logits, fresh, _ = transformer.forward(
+        params, {"tokens": tokens}, cfg, mode="verify", cache=cache,
+        pos=pos_vec, block_tables=tables, ring_len=ring_len,
+        backend=backend)                                 # logits [B, W, V]
+    commit = jnp.arange(W)[None, :] < n_tokens[:, None]
+    cache = transformer.commit_verify_window(cfg, cache, fresh, tables,
+                                             pos_vec, commit,
+                                             ring_len=ring_len)
+    idx = jnp.clip(n_tokens.astype(jnp.int32) - 1, 0).reshape(
+        (B,) + (1,) * (logits.ndim - 1))
+    last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+    return last, cache
+
+
 def sample(logits: jax.Array, key, *, temperature: float = 0.0,
            top_k: int = 0) -> jax.Array:
     """Greedy (T=0) / temperature / top-k sampling."""

@@ -46,6 +46,7 @@ import numpy as np
 
 from repro.obs import trace as obs_trace
 from repro.serving import api
+from repro.serving.config import SLOSpec
 from repro.serving.scheduler import latency_summary
 
 
@@ -64,6 +65,10 @@ class TenantSpec:
     # carries; None = no deadline (the default keeps old traces identical).
     ttft_deadline: Optional[float] = None
     deadline: Optional[float] = None
+    # Typed SLO (soft targets + hard deadlines, DESIGN.md §16) every
+    # request carries. When both forms are given, the plain deadlines fold
+    # into the SLO at trace build time so the API layer never sees both.
+    slo: Optional[SLOSpec] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +83,7 @@ class TraceRequest:
     max_new_tokens: int
     ttft_deadline: Optional[float] = None
     deadline: Optional[float] = None
+    slo: Optional[SLOSpec] = None
 
 
 def make_trace(*, seed: int, n_requests: int, rate: float,
@@ -103,10 +109,22 @@ def make_trace(*, seed: int, n_requests: int, rate: float,
                               int(rng.integers(*spec.suffix_len)))
         prompt = np.concatenate([prefixes[spec.name],
                                  suffix.astype(np.int64)])
+        slo, ttft_dl, dl = spec.slo, spec.ttft_deadline, spec.deadline
+        if slo is not None and (ttft_dl is not None or dl is not None):
+            # Fold plain deadlines into the SLO (explicit SLO deadlines
+            # win) and null the flat fields — the API rejects mixing.
+            slo = dataclasses.replace(
+                slo,
+                ttft_deadline_ms=slo.ttft_deadline_ms if
+                slo.ttft_deadline_ms is not None else
+                (None if ttft_dl is None else ttft_dl * 1e3),
+                deadline_ms=slo.deadline_ms if slo.deadline_ms is not None
+                else (None if dl is None else dl * 1e3))
+            ttft_dl = dl = None
         trace.append(TraceRequest(
             t=t, rid=rid, tenant=spec.name, prompt=prompt,
             max_new_tokens=int(rng.integers(*spec.max_new)),
-            ttft_deadline=spec.ttft_deadline, deadline=spec.deadline))
+            ttft_deadline=ttft_dl, deadline=dl, slo=slo))
     return trace
 
 
@@ -117,6 +135,10 @@ def trace_fingerprint(trace: Sequence[TraceRequest]) -> str:
     for r in trace:
         h.update(f"{r.t!r}|{r.rid}|{r.tenant}|{r.max_new_tokens}|"
                  f"{r.ttft_deadline!r}|{r.deadline!r}|".encode())
+        if r.slo is not None:
+            # Appended only when present: SLO-free traces keep the exact
+            # hashes the committed baselines were stamped with.
+            h.update(f"slo:{sorted(r.slo.as_dict().items())!r}|".encode())
         h.update(np.ascontiguousarray(r.prompt, np.int64).tobytes())
     return h.hexdigest()
 
@@ -145,6 +167,45 @@ class StepClock:
         self.t += dt
 
 
+class CostClock(StepClock):
+    """Virtual clock whose per-step ``dt`` tracks *launch cost*: a fixed
+    ``base`` (launch overhead) plus ``per_position`` virtual seconds per
+    query position the engine computed that step (read from
+    ``SchedulerMetrics.compute_positions`` via :meth:`bind`).
+
+    The flat :class:`StepClock` charges a whole-prompt bucketed prefill
+    the same dt as a 1-token decode step, which hides exactly the
+    head-of-line blocking chunked prefill exists to fix. Under a cost
+    clock a k×bucket prefill launch stalls every concurrent stream for
+    ~k×bucket×per_position virtual seconds, while chunked admission
+    amortizes the same positions across many cheap mixed steps — making
+    the TTFT win measurable and still fully deterministic (positions are
+    a function of scheduling decisions, not runner speed)."""
+
+    def __init__(self, base: float = 0.25, per_position: float = 1 / 64,
+                 t0: float = 0.0):
+        super().__init__(dt=base, t0=t0)
+        self.base = base
+        self.per_position = per_position
+        self._metrics = None
+        self._last_positions = 0
+
+    def bind(self, metrics) -> "CostClock":
+        """Attach the live SchedulerMetrics to read compute_positions
+        from (call once, after the server is built)."""
+        self._metrics = metrics
+        self._last_positions = int(metrics.compute_positions)
+        return self
+
+    def tick(self) -> None:
+        d = 0
+        if self._metrics is not None:
+            now = int(self._metrics.compute_positions)
+            d = now - self._last_positions
+            self._last_positions = now
+        self.t += self.base + self.per_position * d
+
+
 @dataclasses.dataclass
 class _WallStamps:
     submit: float
@@ -170,6 +231,8 @@ class ReplayResult:
     wall_tpot_s: List[float]
     shed: List[int] = dataclasses.field(default_factory=list)
     # rids shed by Backpressure (transient — a client would retry)
+    slo: Dict[str, Dict[str, int]] = dataclasses.field(default_factory=dict)
+    # per-tenant SLO attainment counters (scheduler.metrics.slo_attainment)
 
     def summary(self) -> Dict[str, Any]:
         done = [r for r in self.responses
@@ -203,6 +266,7 @@ class ReplayResult:
                 "ttft": latency_summary(self.wall_ttft_s),
                 "tpot": latency_summary(self.wall_tpot_s),
             },
+            **({"slo": self.slo} if self.slo else {}),
         }
 
 
@@ -224,6 +288,8 @@ def replay(server: api.StreamingServer, trace: Sequence[TraceRequest],
     # of whatever ran on this server before — the determinism the CI
     # latency gates and the timeline-export tests rely on.
     server.metrics.seed_latency(trace_fingerprint(trace))
+    if hasattr(clock, "bind"):          # CostClock: charge launch cost
+        clock.bind(server.metrics)
     # An enabled tracer stamps from the replay's virtual clock (DESIGN §15:
     # a replayed timeline is a function of the trace, not of the runner).
     tr = obs_trace.get_tracer()
@@ -258,7 +324,7 @@ def replay(server: api.StreamingServer, trace: Sequence[TraceRequest],
                     prompt=tr.prompt, max_new_tokens=tr.max_new_tokens,
                     session_id=sid, on_token=on_token,
                     ttft_deadline_s=tr.ttft_deadline,
-                    deadline_s=tr.deadline))
+                    deadline_s=tr.deadline, slo=tr.slo))
             except api.Backpressure:
                 del stamps[sid]
                 shed.append(tr.rid)
@@ -279,7 +345,9 @@ def replay(server: api.StreamingServer, trace: Sequence[TraceRequest],
     return ReplayResult(responses=responses, rejected=rejected,
                         steps=steps, wall_s=wall_s,
                         wall_ttft_s=wall_ttft, wall_tpot_s=wall_tpot,
-                        shed=shed)
+                        shed=shed,
+                        slo={k: dict(v) for k, v in
+                             server.metrics.slo_attainment.items()})
 
 
 def sample_prompts(*, seed: int, n: int, tenants: Sequence[TenantSpec],

@@ -60,6 +60,7 @@ import numpy as np
 from repro.obs.metrics import Reservoir
 from repro.obs.trace import Tracer, get_tracer
 from repro.serving import paged_cache
+from repro.serving.config import SLOSpec
 
 
 @dataclasses.dataclass
@@ -77,6 +78,10 @@ class Request:
     # fails the request with finish_reason="deadline" at the step boundary
     ttft_deadline_s: Optional[float] = None
     deadline_s: Optional[float] = None
+    # service-level objective (DESIGN.md §16): soft TTFT/TPOT targets drive
+    # EDF chunk ordering + attainment accounting; its hard-deadline fields
+    # are the canonical source of the two budget fields above
+    slo: Optional[SLOSpec] = None
     submit_step: int = 0            # engine step at submit (queue-wait metric)
     admit_step: int = -1
     # wall-clock lifecycle stamps (scheduler clock; -1.0 = not yet reached)
@@ -146,6 +151,17 @@ class SchedulerMetrics:
     # speculative-decoding counters (zero when spec_k == 0)
     drafted: int = 0                 # draft tokens submitted to verify
     accepted: int = 0                # draft tokens accepted by the target
+    # chunked-prefill counters (DESIGN.md §16; zero under bucketed admission)
+    chunk_tokens: int = 0            # prompt tokens prefilled via chunks
+    mixed_steps: int = 0             # mixed prefill+decode launches
+    # per-launch device cost proxy: query positions computed per launch
+    # (prefill k*bucket, decode n_slots, verify/mixed n_slots*W) — feeds
+    # loadgen.CostClock so virtual latency charges bucket padding honestly
+    compute_positions: int = 0
+    # per-class (SLOSpec.tenant) soft-target attainment, recorded at finish:
+    # {"ttft_ok": n, "ttft_miss": n, "tpot_ok": n, "tpot_miss": n}
+    slo_attainment: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
     # fault-tolerance counters (DESIGN.md §14)
     quarantined: int = 0             # sessions failed on non-finite logits
     deadline_expired: int = 0        # sessions failed on a latency budget
@@ -293,6 +309,21 @@ class VerifyBatch:
     counts: np.ndarray              # [n_slots] uint32
 
 
+@dataclasses.dataclass
+class MixedStepPlan:
+    """One mixed prefill-chunk + decode launch (DESIGN.md §16): every slot
+    rides a single [n_slots, chunk_size] window — a prefill-chunk slot
+    contributes its next ``chunks[s]`` resume tokens, a decode slot its
+    committed last token in column 0, an idle slot all padding."""
+
+    tokens: np.ndarray              # [n_slots, chunk_size] window columns
+    n_tokens: np.ndarray            # [n_slots] real columns (0 = idle)
+    uids: np.ndarray                # [n_slots] uint32 sampling-key folds
+    counts: np.ndarray              # [n_slots] uint32 token indices
+    decode_slots: List[int]         # slots taking a plain decode position
+    chunks: Dict[int, int]          # prefilling slot -> chunk tokens granted
+
+
 class Scheduler:
     """Pure admission/preemption/termination state machine (DESIGN.md §13).
 
@@ -316,6 +347,8 @@ class Scheduler:
                  request_history: int = 1024,
                  spec_k: int = 0, drafter=None,
                  sampled: bool = False,
+                 chunked: bool = False, chunk_size: int = 16,
+                 chunk_budget: int = 32,
                  clock: Optional[Callable[[], float]] = None,
                  degradation: Optional[DegradationPolicy] = None,
                  tracer: Optional[Tracer] = None):
@@ -328,6 +361,22 @@ class Scheduler:
         self.paged = paged
         self.spec_k = spec_k
         self.drafter = drafter
+        # chunked prefill (DESIGN.md §16): prompts stream into their slot
+        # chunk_size positions at a time through the mixed step, at most
+        # chunk_budget prefill positions granted per step across all slots
+        self.chunked = chunked
+        self.chunk_size = chunk_size
+        self.chunk_budget = chunk_budget
+        if chunked:
+            assert paged and spec_k == 0 and ring_len is None, \
+                "chunked prefill requires paged KV, no speculation, no ring"
+        # per-slot chunked-prefill cursor goal: 0 = not prefilling, else the
+        # resume length this slot must reach before its first token samples
+        # (the cursor itself is ``pos[s]``)
+        self.chunk_goal = np.zeros(n_slots, np.int64)
+        # per-tenant granted chunk tokens — the EDF tie-breaking fairness
+        # deficit counter (lighter tenants win ties)
+        self._tenant_tokens: Dict[str, int] = {}
         self.sampled = sampled
         self.clock = clock if clock is not None else time.monotonic
         # Structured tracing (DESIGN §15): defaults to the process-wide
@@ -436,7 +485,8 @@ class Scheduler:
 
     def submit(self, uid: int, prompt: np.ndarray, max_new_tokens: int,
                *, ttft_deadline_s: Optional[float] = None,
-               deadline_s: Optional[float] = None) -> Request:
+               deadline_s: Optional[float] = None,
+               slo: Optional[SLOSpec] = None) -> Request:
         prompt = self.validate_request(prompt, max_new_tokens)
         if not 0 <= uid < 2 ** 32:
             # per-slot sampling keys fold the uid as uint32 data
@@ -444,9 +494,28 @@ class Scheduler:
         cur = self.requests.get(uid)
         if cur is not None and not cur.done:
             raise ValueError(f"request uid {uid} is still queued or active")
+        # The PR-8 deadline kwargs are a thin mapping onto SLOSpec: either
+        # the caller hands a full SLO, or bare deadlines are wrapped into
+        # one — the Request's budget fields always mirror req.slo.
+        if slo is not None:
+            if ttft_deadline_s is not None or deadline_s is not None:
+                raise ValueError("pass deadlines either inside slo=SLOSpec("
+                                 "...) or as bare kwargs, not both")
+            slo.validate()
+            ttft_deadline_s = slo.ttft_deadline_s
+            deadline_s = slo.deadline_s
+        elif ttft_deadline_s is not None or deadline_s is not None:
+            # keep the caller's seconds verbatim on the Request (no ms
+            # round-trip drift); the wrapper SLO is the introspection view
+            slo = SLOSpec(
+                ttft_deadline_ms=None if ttft_deadline_s is None
+                else ttft_deadline_s * 1e3,
+                deadline_ms=None if deadline_s is None
+                else deadline_s * 1e3).validate()
         req = Request(uid, prompt, max_new_tokens,
                       ttft_deadline_s=ttft_deadline_s,
                       deadline_s=deadline_s,
+                      slo=slo,
                       submit_step=self.metrics.steps,
                       submit_t=self.clock())
         self._enqueue(req)
@@ -566,6 +635,7 @@ class Scheduler:
             m.ttft_s.append(req.ttft_s)
         if req.tpot_s is not None:
             m.tpot_s.append(req.tpot_s)
+        self._record_attainment(req)
         tr = self.tracer
         if tr.enabled:
             tr.event("sched", "finish", "scheduler", uid=req.uid,
@@ -574,6 +644,24 @@ class Scheduler:
                     self._slot_admit_t[slot], req.finish_t,
                     uid=req.uid, reason=reason, tokens=len(req.generated))
         self._retire(req)
+
+    def _record_attainment(self, req: Request) -> None:
+        """Fold a served completion's latencies into the per-class SLO
+        attainment counters (classes are SLOSpec.tenant; requests without
+        soft targets contribute nothing)."""
+        if req.slo is None:
+            return
+        att = req.slo.attainment(req.ttft_s, req.tpot_s)
+        if att is None:
+            return
+        cls = req.slo.tenant or "default"
+        d = self.metrics.slo_attainment.setdefault(
+            cls, {"ttft_ok": 0, "ttft_miss": 0, "tpot_ok": 0,
+                  "tpot_miss": 0})
+        if att.ttft_met is not None:
+            d["ttft_ok" if att.ttft_met else "ttft_miss"] += 1
+        if att.tpot_met is not None:
+            d["tpot_ok" if att.tpot_met else "tpot_miss"] += 1
 
     def _fail(self, req: Request, slot: Optional[int], reason: str,
               finished: Dict[int, List[int]]) -> None:
@@ -790,6 +878,9 @@ class Scheduler:
         self.slots[slot] = None
         self.pos[slot] = 0
         self.last_token[slot] = 0
+        # a mid-prefill chunk cursor does not survive its slot: the request
+        # resumes by re-chunking prompt+generated from position 0
+        self.chunk_goal[slot] = 0
         if self._pending_copies:
             # queued CoW copies of a released slot must never execute: the
             # freed blocks may be reallocated before the copy would land
@@ -1080,6 +1171,199 @@ class Scheduler:
             self.last_token[s] = int(next_tokens[s])
             self.check_done(req, s, int(next_tokens[s]), finished)
 
+    # -- chunked prefill + mixed-step staging (DESIGN.md §16) ----------------
+    def prefilling_slots(self) -> List[int]:
+        """Slots mid-chunked-prefill (cursor short of its goal)."""
+        return [s for s in range(self.n_slots)
+                if self.slots[s] is not None and self.chunk_goal[s] > 0]
+
+    def _edf_key(self, req: Request) -> Tuple[Any, ...]:
+        """Earliest-deadline-first ordering with per-tenant fairness, used
+        for both chunked admission and per-step chunk grants: priority
+        first (higher = more urgent), then the TTFT-target deadline on the
+        scheduler clock (no target, or first token already out => +inf —
+        post-first-token urgency is the TPOT throttle's job), then the
+        tenant fairness deficit (fewer granted chunk tokens wins ties),
+        then arrival order."""
+        slo = req.slo
+        pr = slo.priority if slo is not None else 0
+        if (slo is not None and slo.ttft_target_ms is not None
+                and req.first_token_t < 0):
+            dl = req.submit_t + slo.ttft_target_s
+        else:
+            dl = float("inf")
+        tenant = (slo.tenant if slo is not None else "") or "default"
+        return (-pr, dl, self._tenant_tokens.get(tenant, 0),
+                req.submit_step, req.uid)
+
+    def admit_chunked(self) -> List[int]:
+        """Chunked-mode admission: assign free slots to queued requests in
+        EDF order and allocate their full block tables up front — no device
+        launch, no bucket constraint; the prompt K/V streams in later via
+        :meth:`stage_mixed` chunks. Returns the newly filled slots.
+
+        The block gate is the same worst-case (unshared) bound bucketed
+        admission uses, so an admitted request's chunk writes can never
+        exhaust the pool; like `_take_group`, a blocked EDF head stalls
+        admission rather than being bypassed (no starvation)."""
+        self._purge_stale()
+        if not self.queue:
+            return []
+        free = [s for s in range(self.n_slots) if self.slots[s] is None]
+        if not free:
+            return []
+        cands = sorted((r for r in self.queue if r.pending and not r.done),
+                       key=self._edf_key)
+        limit = min(len(free), self.effective_admit_k)
+        budget = self.pool.available - self.reserve_blocks
+        if all(r is None for r in self.slots):
+            # reserve is decode-growth headroom for *other* active requests
+            budget = self.pool.available
+        m = self.metrics
+        now = self.clock()
+        tr = self.tracer
+        admitted: List[int] = []
+        for req in cands:
+            if len(admitted) >= limit:
+                break
+            need = self._blocks_needed(req)
+            if need > budget:
+                if (not admitted and all(r is None for r in self.slots)
+                        and self.pool.blocks_in_use == 0):
+                    raise RuntimeError(
+                        f"request uid {req.uid} needs {need} KV blocks but "
+                        f"the pool has only {self.pool.n_blocks}; raise "
+                        f"n_blocks (budget) or block_size")
+                break
+            budget -= need
+            req.pending = False
+            s = free[len(admitted)]
+            ft = self._full_tokens(req)
+            # worst-case gate above guarantees map_prompt cannot raise
+            table, hits = self.pool.map_prompt(ft,
+                                               self._admit_positions(req))
+            m.prefix_hit_tokens += hits
+            self.tables[s] = table
+            self.table_arr[s] = table.padded(self.max_blocks)
+            self.slots[s] = req
+            self.pos[s] = 0
+            self.last_token[s] = 0
+            self.chunk_goal[s] = len(ft)
+            self._slot_admit_t[s] = now
+            req.admit_step = m.steps
+            m.admitted += 1
+            m.queue_wait_steps += m.steps - req.submit_step
+            if tr.enabled:
+                tr.event("sched", "admit", "scheduler", uid=req.uid,
+                         slot=s, chunked=True, resume=len(ft),
+                         queued_steps=m.steps - req.submit_step)
+            admitted.append(s)
+        self._purge_stale()
+        return admitted
+
+    def stage_mixed(self) -> Tuple[MixedStepPlan, List[Tuple[int, int]]]:
+        """Assemble this step's mixed launch: every decoding slot gets its
+        private write target (growth may preempt the youngest slot —
+        usually a just-admitted prefilling one, which simply drops out of
+        the plan), then up to ``chunk_budget`` prefill positions are
+        granted across prefilling slots in EDF order. Chunk slots need no
+        new blocks here: their tables were fully allocated at admission,
+        and chunk writes only rewrite causally-identical content into any
+        shared prompt blocks (the same doctrine as bucketed prefill).
+
+        TPOT throttle: if any decoding request with a TPOT target is
+        projected above it, the step's chunk budget collapses to one chunk
+        — prefill keeps trickling (TTFT progress) without starving the
+        streams that are already behind."""
+        decode_slots = [s for s in range(self.n_slots)
+                        if self.slots[s] is not None
+                        and self.chunk_goal[s] == 0]
+        for s in decode_slots:
+            if self.slots[s] is not None:
+                self._ensure_write_targets(s, 1)
+        decode_slots = [s for s in decode_slots
+                        if self.slots[s] is not None]
+        budget = self.chunk_budget
+        now = self.clock()
+        for s in decode_slots:
+            req = self.slots[s]
+            slo = req.slo
+            if (slo is not None and slo.tpot_target_ms is not None
+                    and req.first_token_t >= 0
+                    and len(req.generated) >= 2):
+                proj = ((now - req.first_token_t)
+                        / (len(req.generated) - 1))
+                if proj > slo.tpot_target_s:
+                    budget = min(budget, self.chunk_size)
+                    break
+        chunk_cands = self.prefilling_slots()
+        chunk_cands.sort(key=lambda s: self._edf_key(self.slots[s]))
+        chunks: Dict[int, int] = {}
+        for s in chunk_cands:
+            if budget <= 0:
+                break
+            n = min(self.chunk_size,
+                    int(self.chunk_goal[s]) - int(self.pos[s]), budget)
+            if n <= 0:
+                continue
+            chunks[s] = n
+            budget -= n
+            req = self.slots[s]
+            tenant = (req.slo.tenant if req.slo is not None else "") \
+                or "default"
+            self._tenant_tokens[tenant] = \
+                self._tenant_tokens.get(tenant, 0) + n
+        W = self.chunk_size
+        tokens = np.zeros((self.n_slots, W), np.int64)
+        n_tokens = np.zeros(self.n_slots, np.int32)
+        uids = np.zeros(self.n_slots, np.uint32)
+        counts = np.zeros(self.n_slots, np.uint32)
+        for s in decode_slots:
+            req = self.slots[s]
+            tokens[s, 0] = self.last_token[s]
+            n_tokens[s] = 1
+            uids[s] = req.uid
+            counts[s] = len(req.generated)
+        for s, n in chunks.items():
+            req = self.slots[s]
+            ft = self._full_tokens(req)
+            c = int(self.pos[s])
+            tokens[s, :n] = ft[c:c + n]
+            n_tokens[s] = n
+            uids[s] = req.uid
+            counts[s] = len(req.generated)
+        plan = MixedStepPlan(tokens=tokens, n_tokens=n_tokens, uids=uids,
+                             counts=counts, decode_slots=decode_slots,
+                             chunks=chunks)
+        return plan, self._drain_copies()
+
+    def commit_chunks(self, chunks: Dict[int, int],
+                      next_tokens: np.ndarray,
+                      finished: Dict[int, List[int]]) -> None:
+        """Advance each granted slot's chunk cursor past its committed
+        window. A slot whose cursor reaches its goal finished prefilling:
+        the window's last real column sampled its next token — with the
+        same folded (uid, token-index) key bucketed admission would use,
+        so the stream is bitwise the unchunked one."""
+        m = self.metrics
+        now = self.clock()
+        for s, n in chunks.items():
+            req = self.slots[s]
+            if req is None:
+                continue
+            self.pos[s] += n
+            m.prefill_tokens += n
+            m.chunk_tokens += n
+            m.padded_prefill_tokens += self.chunk_size
+            if int(self.pos[s]) >= int(self.chunk_goal[s]):
+                self.chunk_goal[s] = 0
+                t = int(next_tokens[s])
+                req.generated.append(t)
+                self.last_token[s] = t
+                if req.first_token_t < 0:
+                    req.first_token_t = now
+                self.check_done(req, s, t, finished)
+
     # -- speculative staging + commit (DESIGN.md §11) ------------------------
     def _draft_cap(self, req: Request, slot: int) -> int:
         """Largest useful draft length for this slot: the window must fit
@@ -1241,7 +1525,9 @@ class Scheduler:
                     "submit_t": req.submit_t,
                     "first_token_t": req.first_token_t,
                     "ttft_deadline_s": req.ttft_deadline_s,
-                    "deadline_s": req.deadline_s}
+                    "deadline_s": req.deadline_s,
+                    "slo": req.slo.as_dict() if req.slo is not None
+                    else None}
 
         active = [r for r in self.slots if r is not None]
         active.sort(key=lambda r: (r.admit_step, r.uid))
@@ -1263,6 +1549,8 @@ class Scheduler:
                           int(d["max_new_tokens"]),
                           ttft_deadline_s=d.get("ttft_deadline_s"),
                           deadline_s=d.get("deadline_s"),
+                          slo=SLOSpec.from_dict(d["slo"])
+                          if d.get("slo") else None,
                           submit_step=min(int(d["submit_step"]),
                                           self.metrics.steps),
                           submit_t=float(d["submit_t"]))

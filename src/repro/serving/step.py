@@ -56,7 +56,7 @@ class DeviceStepper:
                  physical_blocks: Optional[int] = None, block_size: int = 16,
                  ring_len: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 spec_k: int = 0, faults=None,
+                 spec_k: int = 0, chunk_size: int = 0, faults=None,
                  tracer: Optional[Tracer] = None):
         self.params = params
         self.cfg = cfg
@@ -96,6 +96,14 @@ class DeviceStepper:
                     ring_len=self.ring_len, temperature=self.temperature,
                     top_k=self.top_k, base_key=self._base_key,
                     backend=self.backend))
+        if chunk_size:
+            # mixed prefill-chunk + decode step (DESIGN.md §16): one static
+            # [n_slots, chunk_size] shape regardless of the per-step chunk
+            # grant — exactly ONE compile for the server's lifetime
+            # (budgets.COMPILE_BUDGETS["batcher_mixed"])
+            self._mixed = jax.jit(
+                lambda p, c, t, pos, tab, nt, u, n, poison:
+                self._mixed_step(p, c, t, pos, tab, nt, u, n, poison))
 
     # -- jitted per-slot-position decode: positions differ per slot --------
     def _decode_step(self, params, cache, token, pos_vec, tables, uids,
@@ -117,6 +125,29 @@ class DeviceStepper:
             ring_len=self.ring_len if tables is not None else None,
             backend=self.backend)
         logits = logits[:, -1]
+        logits = jnp.where(poison[:, None], jnp.nan, logits)
+        ok = jnp.all(jnp.isfinite(logits), axis=-1)
+        if self.temperature == 0.0:
+            tok = jnp.argmax(logits, axis=-1)
+        else:
+            keys = engine.fold_slot_keys(self._base_key, uids, counts)
+            tok = engine.sample_per_slot(logits, keys,
+                                         temperature=self.temperature,
+                                         top_k=self.top_k)
+        return tok, ok, cache
+
+    def _mixed_step(self, params, cache, tokens, pos_vec, tables, n_tokens,
+                    uids, counts, poison):
+        """Mixed prefill-chunk/decode launch (DESIGN.md §16): tokens
+        [B, chunk_size], per-slot real-column counts ``n_tokens`` (1 for a
+        decode slot, 0 idle). The sampled token is each slot's *last real
+        column's* distribution — meaningful for decode slots and slots
+        whose final chunk just completed, drawn with the identical folded
+        (uid, token-index) key plain decode / sample_admitted would use,
+        so chunked streams are bitwise the bucketed ones."""
+        logits, cache = engine.prefill_chunk_into_pages(
+            params, cache, tokens, pos_vec, tables, n_tokens, self.cfg,
+            ring_len=self.ring_len, backend=self.backend)
         logits = jnp.where(poison[:, None], jnp.nan, logits)
         ok = jnp.all(jnp.isfinite(logits), axis=-1)
         if self.temperature == 0.0:
@@ -223,6 +254,39 @@ class DeviceStepper:
                 jax.block_until_ready(tok)  # repro: profiling-fence
                 args["wall_us"] = (time.perf_counter() - w0) * 1e6
             tr.span("step", "decode", "engine", t0, **args)
+        return np.asarray(tok), np.asarray(ok)
+
+    def mixed(self, tokens: np.ndarray, pos: np.ndarray,
+              table_arr: np.ndarray, n_tokens: np.ndarray,
+              uids: np.ndarray, counts: np.ndarray
+              ) -> Tuple[np.ndarray, np.ndarray]:
+        """One mixed prefill-chunk + decode launch over every slot; returns
+        (next tokens [n_slots], non-finite-scan ``ok`` [n_slots]). Fault
+        hooks mirror decode: ``check_launch``/``poison_mask`` fire on op
+        "mixed" (and "any"), feeding the same quarantine path."""
+        if self.faults is not None:
+            self.faults.check_launch("mixed")
+            poison = self.faults.poison_mask("mixed", len(self._no_poison))
+        else:
+            poison = None
+        if poison is None:
+            poison = self._no_poison
+        tr = self.tracer
+        t0 = tr.clock() if tr.enabled else 0.0
+        w0 = time.perf_counter() if self.profile else 0.0
+        tok, ok, self.cache = self._mixed(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(pos), jnp.asarray(table_arr),
+            jnp.asarray(n_tokens), jnp.asarray(uids),
+            jnp.asarray(counts), jnp.asarray(poison))
+        if tr.enabled:
+            args = {"batch": int(tokens.shape[0]),
+                    "window": int(tokens.shape[1]),
+                    "real_positions": int(np.sum(n_tokens))}
+            if self.profile:
+                jax.block_until_ready(tok)  # repro: profiling-fence
+                args["wall_us"] = (time.perf_counter() - w0) * 1e6
+            tr.span("step", "mixed", "engine", t0, **args)
         return np.asarray(tok), np.asarray(ok)
 
     def verify(self, tokens: np.ndarray, pos: np.ndarray,

@@ -1,0 +1,290 @@
+"""Chunked prefill + SLO scheduling + typed serving config (DESIGN.md §16)."""
+
+import argparse
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.serving import api, batching, loadgen
+from repro.serving.config import (SchedulerConfig, ServeConfig, SLOSpec)
+
+
+@pytest.fixture(scope="module")
+def model():
+    from repro.models import transformer
+    cfg = configs.smoke("tinyllama_1_1b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    return params, cfg
+
+
+def _config(*, chunked, chunk_size=4, chunk_budget=None, n_slots=3,
+            temperature=0.0, seed=0, stop_ids=(), max_queue=None):
+    return ServeConfig(
+        scheduler=SchedulerConfig(
+            n_slots=n_slots, max_len=64, stop_ids=tuple(stop_ids),
+            chunked_prefill=chunked, chunk_size=chunk_size,
+            chunk_budget=chunk_budget if chunk_budget is not None
+            else 2 * chunk_size),
+        cache_kind="paged", block_size=8, n_blocks=64,
+        temperature=temperature, seed=seed, max_queue=max_queue)
+
+
+def _drain(params, cfg, prompts, max_new=5, **cfg_kw):
+    b = batching.ContinuousBatcher(params, cfg,
+                                   config=_config(**cfg_kw))
+    for uid, p in enumerate(prompts):
+        b.submit(uid, p, max_new)
+    out = b.run_to_completion()
+    b.pool.check_invariants()
+    assert b.pool.blocks_in_use == 0, "leaked KV blocks"
+    return b, out
+
+
+# -- chunk-boundary parity ---------------------------------------------------
+
+def _boundary_prompts(cfg, chunk_size):
+    """Prompt lengths that hit every chunk-boundary case: an exact multiple
+    of the chunk size, a single-token final chunk, shorter than one chunk,
+    and a couple of ragged fillers."""
+    rng = np.random.default_rng(7)
+    lens = [2 * chunk_size,            # exact multiple: final chunk is full
+            2 * chunk_size + 1,        # single-token final chunk
+            max(1, chunk_size - 1),    # shorter than one chunk
+            3 * chunk_size - 1, 5]
+    return [rng.integers(0, cfg.vocab, n).astype(np.int64) for n in lens]
+
+
+@pytest.mark.parametrize("chunk_size", [1, 4])
+def test_chunked_matches_unchunked_greedy(model, chunk_size):
+    params, cfg = model
+    prompts = _boundary_prompts(cfg, chunk_size)
+    _, want = _drain(params, cfg, prompts, chunked=False)
+    b, got = _drain(params, cfg, prompts, chunked=True,
+                    chunk_size=chunk_size)
+    assert got == want
+    assert b.metrics.mixed_steps > 0
+    assert b.metrics.chunk_tokens == sum(len(p) for p in prompts)
+    assert b.prefill_compiles == 0, \
+        "chunked mode must never hit the bucketed prefill path"
+
+
+def test_chunked_matches_unchunked_sampled(model):
+    params, cfg = model
+    prompts = _boundary_prompts(cfg, 4)
+    _, want = _drain(params, cfg, prompts, chunked=False,
+                     temperature=0.8, seed=3)
+    _, got = _drain(params, cfg, prompts, chunked=True, chunk_size=4,
+                    temperature=0.8, seed=3)
+    assert got == want, \
+        "sampled chunked streams must be bitwise the unchunked ones " \
+        "(same folded (uid, token-index) keys)"
+
+
+def test_stop_token_on_chunk_completion_step(model):
+    """A stop token sampled on the very step a slot's final chunk commits
+    must finish the request identically in both modes."""
+    params, cfg = model
+    prompts = _boundary_prompts(cfg, 4)[:2]
+    _, free = _drain(params, cfg, prompts, chunked=False)
+    stop = free[0][0]                  # uid 0's first generated token
+    b0, want = _drain(params, cfg, prompts, chunked=False,
+                      stop_ids=(stop,))
+    b1, got = _drain(params, cfg, prompts, chunked=True, chunk_size=4,
+                     stop_ids=(stop,))
+    assert got == want
+    assert b0.requests[0].finish_reason == "stop"
+    assert b1.requests[0].finish_reason == "stop"
+    assert len(got[0]) == 1            # stopped on its first token
+
+
+def test_preempt_mid_prefill_requeues_and_matches(model):
+    """Preempting a slot whose prompt is only partially chunked in must
+    requeue it; the recompute-resume replays a bitwise-identical stream."""
+    params, cfg = model
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, 20).astype(np.int64),
+               rng.integers(0, cfg.vocab, 19).astype(np.int64)]
+    _, want = _drain(params, cfg, prompts, chunked=False, n_slots=2)
+
+    b = batching.ContinuousBatcher(
+        params, cfg, config=_config(chunked=True, chunk_size=4,
+                                    n_slots=2))
+    for uid, p in enumerate(prompts):
+        b.submit(uid, p, 5)
+    got = dict(b.step())               # both admitted; first chunks in
+    sched = b.sched
+    slot1 = next(s for s, r in enumerate(sched.slots)
+                 if r is not None and r.uid == 1)
+    slot0 = next(s for s, r in enumerate(sched.slots)
+                 if r is not None and r.uid == 0)
+    assert sched.chunk_goal[slot1] == 19, "uid 1 should be mid-prefill"
+    sched._preempt_youngest(exclude=slot0)
+    assert sched.chunk_goal[slot1] == 0, \
+        "preemption must clear the chunk cursor goal"
+    assert sched.requests[1].pending
+    for _ in range(200):
+        got.update(b.step())
+        if not b.busy:
+            break
+    assert got == want
+    assert b.metrics.preemptions >= 1
+    b.pool.check_invariants()
+    assert b.pool.blocks_in_use == 0
+
+
+def test_mixed_step_compiles_once(model):
+    """Every chunk/decode mix reuses the one [n_slots, chunk_size] shape."""
+    params, cfg = model
+    prompts = _boundary_prompts(cfg, 4)
+    b, _ = _drain(params, cfg, prompts, chunked=True, chunk_size=4)
+    assert b.stepper._mixed._cache_size() == 1
+    assert b.metrics.compute_positions > 0
+
+
+# -- typed config surface ----------------------------------------------------
+
+def test_config_validation_errors():
+    with pytest.raises(ValueError, match="chunk_budget"):
+        SchedulerConfig(chunked_prefill=True, chunk_size=8,
+                        chunk_budget=4).validate()
+    with pytest.raises(ValueError, match="paged"):
+        ServeConfig(scheduler=SchedulerConfig(chunked_prefill=True),
+                    cache_kind="dense").validate()
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ServeConfig(scheduler=SchedulerConfig(chunked_prefill=True),
+                    cache_kind="paged", spec_k=2).validate()
+    with pytest.raises(ValueError, match="n_slots"):
+        SchedulerConfig(n_slots=0).validate()
+    with pytest.raises(TypeError, match="unknown serving kwargs"):
+        ServeConfig.from_kwargs(n_slots=2, bogus_knob=1)
+
+
+def test_from_kwargs_matches_explicit():
+    got = ServeConfig.from_kwargs(n_slots=2, max_len=32,
+                                  cache_kind="paged", block_size=4,
+                                  temperature=0.5, spec_k=1)
+    want = ServeConfig(scheduler=SchedulerConfig(n_slots=2, max_len=32),
+                       cache_kind="paged", block_size=4,
+                       temperature=0.5, spec_k=1)
+    assert got == want
+
+
+def test_from_flags():
+    args = argparse.Namespace(slots=2, max_len=32, paged=True,
+                              block_size=4, chunked=True, chunk_size=8,
+                              chunk_budget=16, temperature=0.0,
+                              max_queue=3)
+    c = ServeConfig.from_flags(args)
+    assert c.scheduler.n_slots == 2 and c.scheduler.chunked_prefill
+    assert c.scheduler.chunk_budget == 16
+    assert c.cache_kind == "paged" and c.max_queue == 3
+
+
+def test_legacy_kwargs_warn_and_still_work(model):
+    params, cfg = model
+    with pytest.warns(DeprecationWarning, match="config=ServeConfig"):
+        b = batching.ContinuousBatcher(params, cfg, n_slots=2, max_len=32,
+                                       cache_kind="paged", block_size=8,
+                                       n_blocks=32)
+    assert b.n_slots == 2 and b.config.scheduler.max_len == 32
+    with pytest.raises(TypeError, match="not both"):
+        batching.ContinuousBatcher(params, cfg,
+                                   config=ServeConfig(), n_slots=2)
+
+
+# -- SLO surface -------------------------------------------------------------
+
+def test_slo_submit_rejection(model):
+    params, cfg = model
+    server = api.StreamingServer(params, cfg, config=_config(chunked=True))
+    prompt = np.arange(4, dtype=np.int64)
+    with pytest.raises(api.RequestRejected, match="must be > 0"):
+        server.submit(api.GenerationRequest(
+            prompt, 4, slo=SLOSpec(ttft_target_ms=-1.0)))
+    with pytest.raises(api.RequestRejected, match="not both"):
+        server.submit(api.GenerationRequest(
+            prompt, 4, slo=SLOSpec(ttft_target_ms=5.0),
+            deadline_s=1.0))
+    assert not server.busy and server.queue_depth == 0, \
+        "rejected submits must leave zero state"
+
+
+def test_response_attainment_and_per_class_counters(model):
+    params, cfg = model
+    clock = loadgen.StepClock(dt=1.0)
+    server = api.StreamingServer(params, cfg,
+                                 config=_config(chunked=True, n_slots=2),
+                                 clock=clock)
+    prompt = np.arange(6, dtype=np.int64)
+    final = {}
+    server.submit(api.GenerationRequest(
+        prompt, 4, session_id="hit",
+        on_token=lambda ev: final.update({ev.session_id: ev})
+        if ev.finish_reason else None,
+        slo=SLOSpec(ttft_target_ms=50_000.0, tpot_target_ms=50_000.0,
+                    tenant="gold")))
+    server.submit(api.GenerationRequest(
+        prompt, 4, session_id="miss",
+        slo=SLOSpec(ttft_target_ms=0.5, tenant="best_effort")))
+    done = {}
+    while server.busy:                 # tick so TTFT/TPOT are non-zero
+        clock.tick()
+        done.update({r.session_id: r for r in server.step()})
+    hit, miss = done["hit"], done["miss"]
+    assert hit.attainment is not None and hit.attainment.met
+    assert hit.attainment.ttft_met and hit.attainment.tpot_met
+    assert miss.attainment is not None and not miss.attainment.met
+    assert miss.attainment.ttft_met is False
+    assert final["hit"].attainment == hit.attainment, \
+        "the final token event carries the response's attainment"
+    att = server.metrics.slo_attainment
+    assert att["gold"]["ttft_ok"] == 1 and att["gold"]["tpot_ok"] == 1
+    assert att["best_effort"]["ttft_miss"] == 1
+    # no-target requests contribute nothing
+    server.submit(api.GenerationRequest(prompt, 2, session_id="plain"))
+    server.run_until_drained()
+    assert done.keys() == {"hit", "miss"}  # unchanged mapping object
+
+
+def test_edf_admission_orders_by_slo(model):
+    """With one free slot, a later-submitted request with a tight TTFT
+    target is admitted ahead of an earlier no-target request; priority
+    outranks deadlines."""
+    params, cfg = model
+    clock = loadgen.StepClock(dt=1.0)
+    b = batching.ContinuousBatcher(
+        params, cfg, config=_config(chunked=True, n_slots=1), clock=clock)
+    prompt = np.arange(4, dtype=np.int64)
+    b.submit(0, prompt, 3)                                   # no target
+    b.submit(1, prompt, 3, slo=SLOSpec(ttft_target_ms=2_000.0))
+    b.step()
+    assert b.sched.slots[0] is not None and b.sched.slots[0].uid == 1, \
+        "EDF must admit the tight-target request first"
+    done = {}
+    for _ in range(100):
+        done.update(b.step())
+        if not b.busy:
+            break
+    b.submit(2, prompt, 3, slo=SLOSpec(ttft_target_ms=1_000.0))
+    b.submit(3, prompt, 3, slo=SLOSpec(priority=5))
+    b.step()
+    assert b.sched.slots[0].uid == 3, "priority outranks EDF deadlines"
+
+
+def test_legacy_deadline_flags_map_onto_slo(model):
+    """Bare ttft_deadline_s/deadline_s submissions keep PR-8 semantics:
+    the Request carries the caller's seconds verbatim (no ms round-trip)
+    and still expires."""
+    params, cfg = model
+    clock = loadgen.StepClock(dt=1.0)
+    b = batching.ContinuousBatcher(
+        params, cfg, config=_config(chunked=True, n_slots=1), clock=clock)
+    vals = iter(np.arange(4, dtype=np.int64) for _ in range(2))
+    b.submit(0, next(vals), 3, ttft_deadline_s=0.125)
+    assert b.requests[0].ttft_deadline_s == 0.125
+    with pytest.raises(ValueError, match="either"):
+        b.submit(1, next(vals), 3, ttft_deadline_s=1.0,
+                 slo=SLOSpec(deadline_ms=5.0))
